@@ -1,0 +1,99 @@
+"""Paper Figures 3-4: effect of threads / workers on runtime.
+
+Giraph's threads-per-worker and worker count both map to device-mesh size
+here.  We sweep the edge-shard count of the distributed DHLP-2 engine on
+fabricated host devices in SUBPROCESSES (device count is locked at jax
+init, and only the dry-run may fabricate devices in-process).
+
+On this 1-core container the sweep measures BSP coordination overhead
+(more shards = more rendezvous on the same core) rather than speedup —
+the shape of fig. 3's right half (too many threads slow down).  The
+harness is the deliverable; on a real pod the same sweep spans chips.
+Additionally, a stale-sync sweep shows the straggler-mitigation trade
+(collective count vs iterations) from DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Dict, List
+
+_CHILD = r"""
+import os, sys, json, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(dev)d"
+sys.path.insert(0, %(src)r)
+import numpy as np, jax
+from repro.core import HeteroNetwork, LPConfig
+from repro.data.drugnet import DrugNetSpec, make_drugnet
+from repro.parallel.lp_sharded import ShardedHeteroLP
+
+dn = make_drugnet(DrugNetSpec(n_drug=48, n_disease=32, n_target=24,
+                              n_clusters=6, seed=0))
+norm = dn.network.normalize()
+mesh = jax.make_mesh((1, %(dev)d), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = LPConfig(alg="dhlp2", seed_mode="fixed", sigma=1e-5)
+solver = ShardedHeteroLP(cfg, stale_sync=%(stale)d)
+r = solver.run(norm, mesh)   # compile+run
+t0 = time.time()
+r = solver.run(norm, mesh)
+dt = time.time() - t0
+print(json.dumps({"devices": %(dev)d, "stale": %(stale)d,
+                  "seconds": dt, "iters": int(r.outer_iters),
+                  "converged": bool(r.converged)}))
+"""
+
+
+def _run_child(devices: int, stale: int, src: str) -> Dict:
+    code = _CHILD % {"dev": devices, "stale": stale, "src": src}
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=600,
+    )
+    for line in reversed(out.stdout.splitlines()):
+        try:
+            return json.loads(line)
+        except json.JSONDecodeError:
+            continue
+    raise RuntimeError(out.stderr[-2000:])
+
+
+def run(device_counts=(1, 2, 4), stale_syncs=(1, 4)) -> List[Dict]:
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    src = os.path.abspath(src)
+    rows = []
+    for dev in device_counts:
+        for stale in stale_syncs:
+            try:
+                rows.append(_run_child(dev, stale, src))
+            except Exception as e:  # noqa: BLE001
+                rows.append({"devices": dev, "stale": stale,
+                             "error": str(e)[:200]})
+    return rows
+
+
+def main(fast: bool = True) -> List[str]:
+    rows = run(device_counts=(1, 2) if fast else (1, 2, 4, 8),
+               stale_syncs=(1,) if fast else (1, 4))
+    out = []
+    for r in rows:
+        if "error" in r:
+            out.append(
+                f"fig34_parallelism/d{r['devices']}s{r['stale']},0,"
+                f"error={r['error'][:40]}"
+            )
+        else:
+            out.append(
+                f"fig34_parallelism/d{r['devices']}s{r['stale']},"
+                f"{r['seconds']*1e6:.0f},"
+                f"iters={r['iters']};converged={r['converged']}"
+            )
+    return out
+
+
+if __name__ == "__main__":
+    for line in main(fast=False):
+        print(line)

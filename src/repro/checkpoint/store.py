@@ -1,0 +1,195 @@
+"""Sharded, atomic, resumable checkpointing.
+
+Layout per step:
+    <root>/step_<n>.tmp/          — written first
+        leaf_00000.npy ...        — one file per pytree leaf
+        manifest.json             — treedef, leaf paths, shapes, dtypes,
+                                    step, wall-time, user metadata
+    <root>/step_<n>/              — atomic rename after fsync
+
+Guarantees:
+  * a checkpoint directory either exists completely or not at all
+    (rename is atomic; partial writes stay in ``.tmp``),
+  * ``restore_latest`` skips corrupt/partial checkpoints,
+  * ``keep_last`` garbage-collects old steps after a successful write,
+  * async mode hands the (host-copied) arrays to a writer thread so the
+    train loop is not blocked by the filesystem.
+
+Elasticity: arrays are saved UNSHARDED (gathered to host).  On restore the
+caller passes target shardings — the restore places each leaf with
+``jax.device_put`` on the new mesh, so a job can come back on a different
+device count (elastic re-mesh) without a resharding tool.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_MANIFEST = "manifest.json"
+
+
+def _leaf_paths(tree: PyTree) -> List[str]:
+    paths, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(kp) for kp, _ in paths]
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    root: str
+    keep_last: int = 3
+    async_write: bool = False
+
+    def __post_init__(self) -> None:
+        os.makedirs(self.root, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue()
+        self._writer: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        if self.async_write:
+            self._writer = threading.Thread(
+                target=self._writer_loop, daemon=True
+            )
+            self._writer.start()
+
+    # ----------------------------------------------------------------- save
+    def save(self, step: int, tree: PyTree,
+             metadata: Optional[Dict[str, Any]] = None) -> None:
+        """Snapshot → (async) write.  Host copies happen on the caller's
+        thread so the device buffers can be donated right after."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        host = [np.asarray(x) for x in leaves]
+        job = (step, host, str(treedef), metadata or {})
+        if self.async_write:
+            self._raise_pending()
+            self._q.put(job)
+        else:
+            self._write(job)
+
+    def wait(self) -> None:
+        """Block until pending async writes are durable."""
+        if self.async_write:
+            self._q.join()
+            self._raise_pending()
+
+    def _raise_pending(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _writer_loop(self) -> None:
+        while True:
+            job = self._q.get()
+            try:
+                self._write(job)
+            except BaseException as e:  # noqa: BLE001 — surfaced on wait()
+                self._error = e
+            finally:
+                self._q.task_done()
+
+    def _write(self, job) -> None:
+        step, host, treedef_str, metadata = job
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {
+            "step": step,
+            "treedef": treedef_str,
+            "time": time.time(),
+            "metadata": metadata,
+            "leaves": [],
+        }
+        for i, arr in enumerate(host):
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"].append(
+                {"file": fname, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype)}
+            )
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    # -------------------------------------------------------------- restore
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.root, name, _MANIFEST)):
+                    try:
+                        out.append(int(name.split("_", 1)[1]))
+                    except ValueError:
+                        continue
+        return sorted(out)
+
+    def restore(
+        self,
+        step: int,
+        like: PyTree,
+        shardings: Optional[PyTree] = None,
+    ) -> PyTree:
+        """Restore into the structure of ``like`` (shape/dtype validated).
+
+        ``shardings`` (same structure) places each leaf on a target mesh —
+        this is the elastic-reshard path: save on 512 chips, restore on 256.
+        """
+        d = self._step_dir(step)
+        with open(os.path.join(d, _MANIFEST)) as f:
+            manifest = json.load(f)
+        leaves_like, treedef = jax.tree_util.tree_flatten(like)
+        if len(manifest["leaves"]) != len(leaves_like):
+            raise ValueError(
+                f"checkpoint has {len(manifest['leaves'])} leaves, "
+                f"target structure has {len(leaves_like)}"
+            )
+        sh_leaves = (
+            jax.tree_util.tree_flatten(shardings)[0]
+            if shardings is not None else [None] * len(leaves_like)
+        )
+        out = []
+        for rec, ref, sh in zip(manifest["leaves"], leaves_like, sh_leaves):
+            arr = np.load(os.path.join(d, rec["file"]))
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"{rec['file']}: shape {arr.shape} != {ref.shape}"
+                )
+            arr = arr.astype(ref.dtype)
+            out.append(
+                jax.device_put(arr, sh) if sh is not None else arr
+            )
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def restore_latest(
+        self, like: PyTree, shardings: Optional[PyTree] = None
+    ) -> Tuple[Optional[int], Optional[PyTree]]:
+        for step in reversed(self.steps()):
+            try:
+                return step, self.restore(step, like, shardings)
+            except Exception:  # noqa: BLE001 — corrupt ckpt: try older
+                continue
+        return None, None
+
+    # ------------------------------------------------------------------- gc
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.keep_last]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")

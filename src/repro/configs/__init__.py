@@ -1,0 +1,4 @@
+from repro.configs.cells import Cell
+from repro.configs.registry import ARCH_IDS, all_cells, get_arch, list_archs
+
+__all__ = ["ARCH_IDS", "Cell", "all_cells", "get_arch", "list_archs"]

@@ -1,0 +1,410 @@
+"""Cell builders: (architecture × input shape) → step fn + input specs.
+
+A *cell* is one dry-run unit: a step function to lower and the
+ShapeDtypeStruct stand-ins for every input (params, optimizer state and
+batch) — no device allocation, the shannon/kernels pattern.
+
+Step kinds:
+  ``train``   — loss + grad + AdamW update   (lowers ``train_step``)
+  ``prefill`` — full-sequence forward + cache build
+  ``decode``  — one-token step with a KV cache (``serve_step``)
+  ``serve``   — forward-only scoring (recsys)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as recsys_mod
+from repro.models import transformer as tfm
+from repro.models.common import softmax_cross_entropy
+from repro.optim import adamw
+
+PyTree = Any
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+I32 = jnp.int32
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def pad512(x: int) -> int:
+    """Round up to a shard-friendly multiple (pjit input dims must divide
+    the mesh axes; a real input pipeline pads its arrays the same way)."""
+    return ((int(x) + 511) // 512) * 512
+
+
+@dataclasses.dataclass
+class Cell:
+    """One (arch × shape) dry-run unit."""
+
+    arch: str
+    shape: str
+    kind: str                                  # train|prefill|decode|serve
+    step_fn: Callable                          # positional-arg step function
+    input_specs: Tuple[Any, ...]               # ShapeDtypeStructs, positional
+    donate: Tuple[int, ...] = ()
+    skip_reason: Optional[str] = None          # set => cell is a noted skip
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def _param_specs(init_fn) -> PyTree:
+    """Parameter ShapeDtypeStructs without allocating (eval_shape)."""
+    return jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+
+
+def _opt_specs(param_specs: PyTree) -> PyTree:
+    opt = adamw(1e-4)
+    return jax.eval_shape(lambda p: opt.init(p), param_specs)
+
+
+# ===================================================================== LM
+def lm_cell(arch: str, cfg: tfm.TransformerConfig, shape_name: str) -> Cell:
+    opt = adamw(3e-4)
+    if shape_name == "train_4k":
+        seq, batch = 4096, 256
+        step = tfm.make_train_step(cfg, opt)
+        p = _param_specs(lambda k: tfm.init_params(cfg, k))
+        o = _opt_specs(p)
+        batch_specs = {
+            "tokens": sds((batch, seq), I32),
+            "labels": sds((batch, seq), I32),
+        }
+        return Cell(
+            arch=arch, shape=shape_name, kind="train",
+            step_fn=step, input_specs=(p, o, batch_specs), donate=(0, 1),
+            meta={"tokens": batch * seq,
+                  "model_flops": 6 * cfg.active_param_count() * batch * seq,
+                  "scan_trip": cfg.n_layers},
+        )
+    if shape_name == "prefill_32k":
+        seq, batch = 32768, 32
+        step = tfm.make_prefill(cfg)
+        p = _param_specs(lambda k: tfm.init_params(cfg, k))
+        cache = tfm.cache_spec(cfg, batch, seq)
+        return Cell(
+            arch=arch, shape=shape_name, kind="prefill",
+            step_fn=step,
+            input_specs=(p, sds((batch, seq), I32), cache), donate=(2,),
+            meta={"tokens": batch * seq,
+                  "model_flops": 2 * cfg.active_param_count() * batch * seq,
+                  "scan_trip": cfg.n_layers},
+        )
+    if shape_name in ("decode_32k", "long_500k"):
+        if shape_name == "decode_32k":
+            ctx, batch = 32768, 128
+        else:
+            ctx, batch = 524288, 1
+            if not cfg.sub_quadratic:
+                return Cell(
+                    arch=arch, shape=shape_name, kind="decode",
+                    step_fn=lambda *a: None, input_specs=(),
+                    skip_reason=(
+                        "full quadratic attention (no SWA/linear variant); "
+                        "524k-token serve is out of contract for this arch "
+                        "— see DESIGN.md §Arch-applicability"
+                    ),
+                )
+        # SWA archs keep a ring cache of `window`; full-attn keep `ctx`.
+        cache_len = min(ctx, cfg.window) if cfg.window else ctx
+        step = tfm.make_decode_step(cfg)
+        p = _param_specs(lambda k: tfm.init_params(cfg, k))
+        cache = tfm.cache_spec(cfg, batch, cache_len)
+        return Cell(
+            arch=arch, shape=shape_name, kind="decode",
+            step_fn=step,
+            input_specs=(
+                p, cache, sds((batch, 1), I32), sds((), I32)
+            ),
+            donate=(1,),
+            meta={"tokens": batch,
+                  "model_flops": 2 * cfg.active_param_count() * batch,
+                  "cache_len": cache_len, "scan_trip": cfg.n_layers},
+        )
+    raise KeyError(f"unknown LM shape {shape_name}")
+
+
+# ==================================================================== GNN
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433,
+                          n_classes=7),
+    "minibatch_lg": dict(n_nodes=232_965, n_edges=114_615_892,
+                         batch_nodes=1024, fanouts=(15, 10), d_feat=602,
+                         n_classes=41),
+    "ogb_products": dict(n_nodes=2_449_029, n_edges=61_859_140, d_feat=100,
+                         n_classes=47),
+    "molecule": dict(n_nodes=30, n_edges=64, batch=128, d_feat=16,
+                     n_classes=1),
+}
+
+
+def _gnn_train_step(loss_fn, opt):
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return step
+
+
+def _masked_ce(logits, labels, mask):
+    logits32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, labels[:, None], axis=-1)[:, 0]
+    ce = (logz - gold) * mask
+    return ce.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def _union_sizes(sh) -> Tuple[int, int]:
+    """Padded union-subgraph sizes for sampled minibatch cells."""
+    b = sh["batch_nodes"]
+    f1, f2 = sh["fanouts"]
+    nodes = b * (1 + f1 + f1 * f2)
+    edges = b * f1 + b * f1 * f2
+    return nodes, edges
+
+
+def gnn_cell(arch: str, model_cfg, shape_name: str) -> Cell:
+    sh = GNN_SHAPES[shape_name]
+    opt = adamw(1e-3)
+    kind_cfg = type(model_cfg).__name__
+
+    if kind_cfg in ("GCNConfig", "GATConfig"):
+        return _spmm_family_cell(arch, model_cfg, shape_name, sh, opt)
+    if kind_cfg == "DimeNetConfig":
+        return _dimenet_cell(arch, model_cfg, shape_name, sh, opt)
+    if kind_cfg == "MGNConfig":
+        return _mgn_cell(arch, model_cfg, shape_name, sh, opt)
+    raise TypeError(kind_cfg)
+
+
+def _spmm_family_cell(arch, cfg0, shape_name, sh, opt) -> Cell:
+    is_gat = type(cfg0).__name__ == "GATConfig"
+
+    if shape_name == "minibatch_lg":
+        # sampled-fanout execution (GraphSAGE-mode of the SpMM family)
+        scfg = gnn_mod.SageConfig(
+            name=cfg0.name, d_feat=sh["d_feat"],
+            d_hidden=max(cfg0.d_hidden * (cfg0.n_heads if is_gat else 1), 64),
+            n_classes=sh["n_classes"], fanouts=tuple(sh["fanouts"]),
+        )
+        nodes, _ = _union_sizes(sh)
+        b = sh["batch_nodes"]
+        f1, f2 = sh["fanouts"]
+
+        def loss_fn(params, batch):
+            logits = gnn_mod.sage_block_forward(
+                scfg, params, batch["feats"], [
+                    (batch["h0_f"], batch["h0_n"], batch["h0_m"]),
+                    (batch["h1_f"], batch["h1_n"], batch["h1_m"]),
+                ],
+            )
+            return _masked_ce(logits, batch["labels"],
+                              jnp.ones(logits.shape[0], F32))
+
+        p = _param_specs(lambda k: gnn_mod.sage_init(scfg, k))
+        o = _opt_specs(p)
+        batch_specs = {
+            "feats": sds((nodes, sh["d_feat"]), F32),
+            "h0_f": sds((b,), I32), "h0_n": sds((b, f1), I32),
+            "h0_m": sds((b, f1), jnp.bool_),
+            "h1_f": sds((b * f1,), I32), "h1_n": sds((b * f1, f2), I32),
+            "h1_m": sds((b * f1, f2), jnp.bool_),
+            "labels": sds((b,), I32),
+        }
+        return Cell(
+            arch=arch, shape=shape_name, kind="train",
+            step_fn=_gnn_train_step(loss_fn, opt),
+            input_specs=(p, o, batch_specs), donate=(0, 1),
+            meta={"mode": "sampled", "nodes": nodes},
+        )
+
+    # full-graph (or batched molecule union graph) edge-list execution
+    if shape_name == "molecule":
+        n = pad512(sh["n_nodes"] * sh["batch"])
+        e = pad512(sh["n_edges"] * sh["batch"] * 2)   # symmetrized
+        n_out, d_feat = sh["n_classes"], sh["d_feat"]
+        num_graphs = sh["batch"]
+    else:
+        n, e = pad512(sh["n_nodes"]), pad512(sh["n_edges"])
+        n_out, d_feat = sh["n_classes"], sh["d_feat"]
+        num_graphs = 0
+
+    cfg = dataclasses.replace(cfg0, d_feat=d_feat, n_classes=n_out)
+
+    def loss_fn(params, batch):
+        if is_gat:
+            logits = gnn_mod.gat_forward(
+                cfg, params, batch["feats"], batch["src"], batch["dst"], n
+            )
+        else:
+            logits = gnn_mod.gcn_forward(
+                cfg, params, batch["feats"], batch["src"], batch["dst"],
+                batch["w"], n
+            )
+        if num_graphs:
+            from repro.graph.segment import segment_mean
+            pooled = segment_mean(logits, batch["graph_ids"], num_graphs)
+            return jnp.mean((pooled[:, 0] - batch["targets"]) ** 2)
+        return _masked_ce(logits, batch["labels"], batch["label_mask"])
+
+    init = (gnn_mod.gat_init if is_gat else gnn_mod.gcn_init)
+    p = _param_specs(lambda k: init(cfg, k))
+    o = _opt_specs(p)
+    batch_specs = {
+        "feats": sds((n, d_feat), F32),
+        "src": sds((e,), I32),
+        "dst": sds((e,), I32),
+    }
+    if not is_gat:
+        batch_specs["w"] = sds((e,), F32)
+    if num_graphs:
+        batch_specs["graph_ids"] = sds((n,), I32)
+        batch_specs["targets"] = sds((num_graphs,), F32)
+    else:
+        batch_specs["labels"] = sds((n,), I32)
+        batch_specs["label_mask"] = sds((n,), F32)
+    return Cell(
+        arch=arch, shape=shape_name, kind="train",
+        step_fn=_gnn_train_step(loss_fn, opt),
+        input_specs=(p, o, batch_specs), donate=(0, 1),
+        meta={"nodes": n, "edges": e},
+    )
+
+
+def _dimenet_cell(arch, cfg, shape_name, sh, opt) -> Cell:
+    # geometry sizes per shape; triplets are capped (noted in DESIGN.md §8)
+    if shape_name == "molecule":
+        g = sh["batch"]
+        n = pad512(sh["n_nodes"] * g)
+        e = pad512(sh["n_edges"] * g * 2)
+        t = 4 * e
+    elif shape_name == "minibatch_lg":
+        n, e = _union_sizes(sh)
+        n, e = pad512(n), pad512(e)
+        g = sh["batch_nodes"]
+        t = 2 * e
+    else:
+        n, e = pad512(sh["n_nodes"]), pad512(sh["n_edges"])
+        g = 1
+        t = 2 * e
+
+    def loss_fn(params, batch):
+        energy = gnn_mod.dimenet_forward(
+            cfg, params, batch["z"], batch["pos"], batch["src"],
+            batch["dst"], batch["tri_kj"], batch["tri_ji"],
+            batch["tri_mask"], batch["graph_ids"], g,
+        )
+        return jnp.mean((energy[:, 0] - batch["targets"]) ** 2)
+
+    p = _param_specs(lambda k: gnn_mod.dimenet_init(cfg, k))
+    o = _opt_specs(p)
+    batch_specs = {
+        "z": sds((n,), I32),
+        "pos": sds((n, 3), F32),
+        "src": sds((e,), I32),
+        "dst": sds((e,), I32),
+        "tri_kj": sds((t,), I32),
+        "tri_ji": sds((t,), I32),
+        "tri_mask": sds((t,), F32),
+        "graph_ids": sds((n,), I32),
+        "targets": sds((g,), F32),
+    }
+    return Cell(
+        arch=arch, shape=shape_name, kind="train",
+        step_fn=_gnn_train_step(loss_fn, opt),
+        input_specs=(p, o, batch_specs), donate=(0, 1),
+        meta={"nodes": n, "edges": e, "triplets": t},
+    )
+
+
+def _mgn_cell(arch, cfg, shape_name, sh, opt) -> Cell:
+    if shape_name == "molecule":
+        n = pad512(sh["n_nodes"] * sh["batch"])
+        e = pad512(sh["n_edges"] * sh["batch"] * 2)
+    elif shape_name == "minibatch_lg":
+        n, e = _union_sizes(sh)
+        n, e = pad512(n), pad512(e)
+    else:
+        n, e = pad512(sh["n_nodes"]), pad512(sh["n_edges"])
+
+    def loss_fn(params, batch):
+        pred = gnn_mod.mgn_forward(
+            cfg, params, batch["node_feat"], batch["edge_feat"],
+            batch["src"], batch["dst"], n,
+        )
+        return jnp.mean((pred - batch["targets"]) ** 2)
+
+    p = _param_specs(lambda k: gnn_mod.mgn_init(cfg, k))
+    o = _opt_specs(p)
+    batch_specs = {
+        "node_feat": sds((n, cfg.d_node_in), F32),
+        "edge_feat": sds((e, cfg.d_edge_in), F32),
+        "src": sds((e,), I32),
+        "dst": sds((e,), I32),
+        "targets": sds((n, cfg.d_out), F32),
+    }
+    return Cell(
+        arch=arch, shape=shape_name, kind="train",
+        step_fn=_gnn_train_step(loss_fn, opt),
+        input_specs=(p, o, batch_specs), donate=(0, 1),
+        meta={"nodes": n, "edges": e},
+    )
+
+
+# ================================================================= recsys
+RECSYS_SHAPES = {
+    "train_batch": dict(batch=65_536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve"),
+    "serve_bulk": dict(batch=262_144, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=1_000_000, kind="serve"),
+}
+
+
+def recsys_cell(arch: str, cfg: recsys_mod.WideDeepConfig,
+                shape_name: str) -> Cell:
+    sh = RECSYS_SHAPES[shape_name]
+    b = sh["batch"]
+    p = _param_specs(lambda k: recsys_mod.widedeep_init(cfg, k))
+    if shape_name == "train_batch":
+        opt = adamw(1e-3)
+        o = _opt_specs(p)
+        step = recsys_mod.make_train_step(cfg, opt)
+        batch_specs = {
+            "sparse": sds((b, cfg.n_sparse), I32),
+            "dense": sds((b, cfg.n_dense), F32),
+            "labels": sds((b,), F32),
+        }
+        return Cell(
+            arch=arch, shape=shape_name, kind="train",
+            step_fn=step, input_specs=(p, o, batch_specs), donate=(0, 1),
+            meta={"examples": b},
+        )
+    if shape_name == "retrieval_cand":
+        step = recsys_mod.make_retrieval_scorer(cfg)
+        cand = sds((pad512(sh["n_candidates"]), cfg.mlp_dims[-1]), F32)
+        return Cell(
+            arch=arch, shape=shape_name, kind="serve",
+            step_fn=step,
+            input_specs=(
+                p, sds((b, cfg.n_sparse), I32), sds((b, cfg.n_dense), F32),
+                cand,
+            ),
+            meta={"candidates": sh["n_candidates"]},
+        )
+    step = recsys_mod.make_serve(cfg)
+    return Cell(
+        arch=arch, shape=shape_name, kind="serve",
+        step_fn=step,
+        input_specs=(
+            p, sds((b, cfg.n_sparse), I32), sds((b, cfg.n_dense), F32)
+        ),
+        meta={"examples": b},
+    )

@@ -1,0 +1,88 @@
+"""dhlp-bio — the paper's own technique as a selectable arch.
+
+Cells lower a fixed-round fused DHLP-2 propagation program (10 rounds per
+step; the driver loops steps until σ-convergence) over edge/seed shardings.
+Shapes follow the paper's scaling experiments (Tables 5-6: 1M → 20M edges)
+plus a beyond-paper 500M-edge point sized for the production mesh.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.cells import Cell, sds
+from repro.configs.registry import ArchSpec
+from repro.graph.segment import scatter_spmm
+
+
+@dataclasses.dataclass(frozen=True)
+class DHLPBioConfig:
+    name: str = "dhlp-bio"
+    alpha: float = 0.5
+    rounds_per_step: int = 10
+    seed_chunk: int = 4096
+
+
+FULL = DHLPBioConfig()
+REDUCED = DHLPBioConfig(name="dhlp-bio-smoke", rounds_per_step=2,
+                        seed_chunk=8)
+
+# |E| → (N nodes, S seed-chunk); N from the paper's edge-density model
+LP_SHAPES = {
+    "scale_1m": dict(num_edges=1_000_000, num_nodes=53_000, seeds=4096),
+    "scale_20m": dict(num_edges=20_000_000, num_nodes=240_000, seeds=4096),
+    "scale_500m": dict(num_edges=500_000_000, num_nodes=1_200_000,
+                       seeds=4096),
+}
+SHAPES = list(LP_SHAPES)
+
+
+def make_lp_step(cfg: DHLPBioConfig):
+    beta2 = (1.0 - cfg.alpha) ** 2
+
+    def step(src, dst, w, Y, F):
+        def body(_, F):
+            out = beta2 * Y.astype(jnp.float32) + scatter_spmm(
+                src, dst, w, F, Y.shape[0]
+            ).astype(jnp.float32)
+            return out.astype(F.dtype)
+
+        return jax.lax.fori_loop(0, cfg.rounds_per_step, body, F)
+
+    return step
+
+
+def lp_cell(shape_name: str, rounds: int = None) -> Cell:
+    sh = LP_SHAPES[shape_name]
+    e, n, s = sh["num_edges"], sh["num_nodes"], sh["seeds"]
+    cfg = FULL if rounds is None else dataclasses.replace(
+        FULL, rounds_per_step=rounds
+    )
+    # §Perf A/B switch (hillclimb 1): REPRO_LP_DTYPE=bf16 stores labels
+    # and edge weights in bf16 (fp32 accumulation inside scatter_spmm).
+    dt = (jnp.bfloat16 if os.environ.get("REPRO_LP_DTYPE") == "bf16"
+          else jnp.float32)
+    return Cell(
+        arch="dhlp-bio", shape=shape_name, kind="serve",
+        step_fn=make_lp_step(cfg),
+        input_specs=(
+            sds((e,), jnp.int32), sds((e,), jnp.int32),
+            sds((e,), dt),
+            sds((n, s), dt), sds((n, s), dt),
+        ),
+        donate=(4,),
+        meta={"edges": e, "nodes": n, "seeds": s,
+              "rounds": FULL.rounds_per_step,
+              "scan_trip": FULL.rounds_per_step},
+    )
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(
+        arch_id="dhlp-bio", family="lp",
+        full_config=FULL, reduced_config=REDUCED, shapes=SHAPES,
+        make_cell=lp_cell,
+        make_probe_cell=lambda s, t: lp_cell(s, rounds=t),
+        source="this paper (DHLP-1/2)",
+    )

@@ -1,0 +1,46 @@
+"""Core library: the paper's contribution (DHLP-1/2) as composable modules."""
+from repro.core.closed_form import dhlp1_inner_solution, fixed_seed_solution
+from repro.core.network import (
+    HeteroCOO,
+    HeteroNetwork,
+    NormalizedNetwork,
+    seeds_for_nodes,
+    seeds_identity,
+)
+from repro.core.normalize import (
+    bipartite_normalize,
+    spectral_radius_upper_bound,
+    symmetric_normalize,
+)
+from repro.core.ranking import LPOutputs, extract_outputs, rank_of, symmetrize
+from repro.core.reference import (
+    RefResult,
+    heterlp_single_seed,
+    minprop_single_seed,
+    run_all_seeds,
+)
+from repro.core.solver import HeteroLP, LPConfig, SolveResult
+
+__all__ = [
+    "HeteroCOO",
+    "HeteroLP",
+    "HeteroNetwork",
+    "LPConfig",
+    "LPOutputs",
+    "NormalizedNetwork",
+    "RefResult",
+    "SolveResult",
+    "bipartite_normalize",
+    "dhlp1_inner_solution",
+    "extract_outputs",
+    "fixed_seed_solution",
+    "heterlp_single_seed",
+    "minprop_single_seed",
+    "rank_of",
+    "run_all_seeds",
+    "seeds_for_nodes",
+    "seeds_identity",
+    "spectral_radius_upper_bound",
+    "symmetric_normalize",
+    "symmetrize",
+]

@@ -1,0 +1,297 @@
+"""Heterogeneous network container.
+
+The paper's network (Fig. 1) has T node types (drug / disease / target in the
+case study, T=3 but the container is generic), with
+
+* ``P[i]``   — an ``(n_i, n_i)`` similarity (proximity) matrix per type, and
+* ``R[(i,j)]`` — an ``(n_i, n_j)`` binary association matrix per type pair.
+
+Node ids are globally flattened by concatenating types: type ``i`` occupies
+rows ``[offset[i], offset[i] + n_i)``.  (The paper instead interleaves ids as
+``3x + i`` so a Giraph vertex can recover its type with ``id % 3``; with
+tensorized storage the block layout carries the same information and keeps
+every block contiguous, which is what the MXU wants.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.normalize import bipartite_normalize, symmetric_normalize
+
+TypePair = Tuple[int, int]
+
+
+def _as_f64(x) -> np.ndarray:
+    return np.asarray(x, dtype=np.float64)
+
+
+@dataclasses.dataclass
+class HeteroNetwork:
+    """A heterogeneous network: T homogeneous nets + inter-type associations.
+
+    Attributes:
+      P: list of per-type similarity matrices, ``P[i]: (n_i, n_i)``,
+         nonnegative, assumed symmetric (symmetrized on construction).
+      R: dict mapping ``(i, j)`` with ``i < j`` to the ``(n_i, n_j)``
+         association matrix.
+      type_names: optional human names per type (e.g. drug/disease/target).
+    """
+
+    P: List[np.ndarray]
+    R: Dict[TypePair, np.ndarray]
+    type_names: Optional[Sequence[str]] = None
+
+    def __post_init__(self) -> None:
+        self.P = [_as_f64(p) for p in self.P]
+        canon: Dict[TypePair, np.ndarray] = {}
+        for (i, j), r in self.R.items():
+            r = _as_f64(r)
+            if i == j:
+                raise ValueError(f"R[{(i, j)}] must connect two distinct types")
+            if i > j:  # canonicalize to i < j
+                i, j, r = j, i, r.T
+            if (i, j) in canon:
+                raise ValueError(f"duplicate association block {(i, j)}")
+            canon[(i, j)] = r
+        self.R = canon
+        for i, p in enumerate(self.P):
+            if p.ndim != 2 or p.shape[0] != p.shape[1]:
+                raise ValueError(f"P[{i}] must be square, got {p.shape}")
+            # Similarity must be symmetric for the convergence proof; enforce.
+            self.P[i] = (p + p.T) / 2.0
+        for (i, j), r in self.R.items():
+            want = (self.P[i].shape[0], self.P[j].shape[0])
+            if r.shape != want:
+                raise ValueError(f"R[{(i, j)}] shape {r.shape} != {want}")
+        if self.type_names is not None and len(self.type_names) != self.num_types:
+            raise ValueError("type_names length mismatch")
+
+    # ---------------------------------------------------------------- sizes
+    @property
+    def num_types(self) -> int:
+        return len(self.P)
+
+    @property
+    def sizes(self) -> List[int]:
+        return [p.shape[0] for p in self.P]
+
+    @property
+    def num_nodes(self) -> int:
+        return int(sum(self.sizes))
+
+    @property
+    def offsets(self) -> List[int]:
+        out, acc = [], 0
+        for n in self.sizes:
+            out.append(acc)
+            acc += n
+        return out
+
+    @property
+    def num_edges(self) -> int:
+        """Count of nonzero (undirected) entries, paper's |E| convention."""
+        total = 0
+        for p in self.P:
+            total += int(np.count_nonzero(p))
+        for r in self.R.values():
+            total += 2 * int(np.count_nonzero(r))
+        return total
+
+    def type_of_node(self) -> np.ndarray:
+        """Global-node-id -> type-id vector (the ``id % 3`` analogue)."""
+        out = np.empty(self.num_nodes, dtype=np.int32)
+        for i, (off, n) in enumerate(zip(self.offsets, self.sizes)):
+            out[off : off + n] = i
+        return out
+
+    def block_slices(self) -> List[slice]:
+        return [
+            slice(off, off + n) for off, n in zip(self.offsets, self.sizes)
+        ]
+
+    # ----------------------------------------------------------- transforms
+    def normalize(self) -> "NormalizedNetwork":
+        """Paper §3.1: normalize all P_i and R_ij so LP converges."""
+        S_homo = [symmetric_normalize(p) for p in self.P]
+        S_het = {k: bipartite_normalize(r) for k, r in self.R.items()}
+        return NormalizedNetwork(
+            S_homo=S_homo,
+            S_het=S_het,
+            sizes=self.sizes,
+            type_names=self.type_names,
+        )
+
+    def with_masked_fold(
+        self, pair: TypePair, mask: np.ndarray
+    ) -> "HeteroNetwork":
+        """Return a copy with the given association entries zeroed.
+
+        Used by 10-fold CV (paper §6.2.1) and the deleted-interaction
+        experiments (§6.2.2/§6.2.3): ``mask`` is a boolean array over
+        ``R[pair]`` marking held-out entries.
+        """
+        i, j = min(pair), max(pair)
+        R = {k: v.copy() for k, v in self.R.items()}
+        R[(i, j)] = np.where(mask, 0.0, R[(i, j)])
+        return HeteroNetwork(P=[p.copy() for p in self.P], R=R,
+                             type_names=self.type_names)
+
+
+@dataclasses.dataclass
+class NormalizedNetwork:
+    """Normalized similarity blocks, ready for propagation."""
+
+    S_homo: List[np.ndarray]
+    S_het: Dict[TypePair, np.ndarray]
+    sizes: List[int]
+    type_names: Optional[Sequence[str]] = None
+
+    @property
+    def num_types(self) -> int:
+        return len(self.S_homo)
+
+    @property
+    def num_nodes(self) -> int:
+        return int(sum(self.sizes))
+
+    @property
+    def offsets(self) -> List[int]:
+        out, acc = [], 0
+        for n in self.sizes:
+            out.append(acc)
+            acc += n
+        return out
+
+    def block_slices(self) -> List[slice]:
+        return [
+            slice(off, off + n) for off, n in zip(self.offsets, self.sizes)
+        ]
+
+    # ------------------------------------------------------- dense assembly
+    def assemble_dense(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Assemble the (N, N) homogeneous operator M and heterogeneous H.
+
+        ``M`` is block-diagonal (within-type propagation), ``H`` holds the
+        off-diagonal association blocks (cross-type propagation).  Their
+        supports are disjoint; together they are the full propagation
+        operator of one BSP superstep.
+        """
+        n = self.num_nodes
+        sl = self.block_slices()
+        M = np.zeros((n, n), dtype=np.float64)
+        H = np.zeros((n, n), dtype=np.float64)
+        for i, s in enumerate(self.S_homo):
+            M[sl[i], sl[i]] = s
+        for (i, j), s in self.S_het.items():
+            H[sl[i], sl[j]] = s
+            H[sl[j], sl[i]] = s.T
+        return H, M
+
+    def assemble_effective(self, alpha: float) -> Tuple[np.ndarray, float]:
+        """Beyond-paper fused operator for DHLP-2 (DESIGN.md §2).
+
+        One DHLP-2 round ``F ← β(βF + αHF) + αMF`` equals
+        ``F ← β²F + A_eff @ F`` with ``A_eff = αβH + αM`` (disjoint support).
+        Returns ``(A_eff, β²)``.
+        """
+        beta = 1.0 - alpha
+        H, M = self.assemble_dense()
+        return alpha * beta * H + alpha * M, beta * beta
+
+    # --------------------------------------------------------- COO assembly
+    def to_coo(self) -> "HeteroCOO":
+        H, M = self.assemble_dense()
+        return HeteroCOO.from_dense(H, M, sizes=self.sizes)
+
+
+@dataclasses.dataclass
+class HeteroCOO:
+    """COO edge-list view (the scalable/sparse engine's input).
+
+    Homo and hetero edge sets are kept separate because DHLP mixes them with
+    different coefficients.  Edges are stored destination-major so a
+    segment-sum over ``dst`` is a contiguous reduce-by-key — the tensorized
+    equivalent of Giraph delivering all messages addressed to a vertex in one
+    superstep.
+    """
+
+    het_src: np.ndarray  # (E_h,) int32 — message source (column index)
+    het_dst: np.ndarray  # (E_h,) int32 — message destination (row index)
+    het_w: np.ndarray    # (E_h,) float — normalized weight
+    hom_src: np.ndarray
+    hom_dst: np.ndarray
+    hom_w: np.ndarray
+    num_nodes: int
+    sizes: List[int]
+
+    @classmethod
+    def from_dense(
+        cls, H: np.ndarray, M: np.ndarray, sizes: Sequence[int]
+    ) -> "HeteroCOO":
+        def _coo(a: np.ndarray):
+            dst, src = np.nonzero(a)  # row=dst receives from col=src
+            order = np.argsort(dst, kind="stable")
+            dst, src = dst[order], src[order]
+            return (
+                src.astype(np.int32),
+                dst.astype(np.int32),
+                a[dst, src].astype(np.float64),
+            )
+
+        hs, hd, hw = _coo(H)
+        ms, md, mw = _coo(M)
+        return cls(
+            het_src=hs, het_dst=hd, het_w=hw,
+            hom_src=ms, hom_dst=md, hom_w=mw,
+            num_nodes=int(H.shape[0]), sizes=list(sizes),
+        )
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.het_src.shape[0] + self.hom_src.shape[0])
+
+    def pad_to(self, het_mult: int = 1024, hom_mult: int = 1024) -> "HeteroCOO":
+        """Pad edge arrays to a multiple so shapes are shard-friendly.
+
+        Padding edges point at a zero-weight self-loop on node 0, which is a
+        no-op under segment-sum (weight 0).
+        """
+
+        def _pad(src, dst, w, mult):
+            e = src.shape[0]
+            target = max(mult, ((e + mult - 1) // mult) * mult)
+            pad = target - e
+            if pad == 0:
+                return src, dst, w
+            return (
+                np.concatenate([src, np.zeros(pad, np.int32)]),
+                np.concatenate([dst, np.zeros(pad, np.int32)]),
+                np.concatenate([w, np.zeros(pad, np.float64)]),
+            )
+
+        hs, hd, hw = _pad(self.het_src, self.het_dst, self.het_w, het_mult)
+        ms, md, mw = _pad(self.hom_src, self.hom_dst, self.hom_w, hom_mult)
+        return HeteroCOO(
+            het_src=hs, het_dst=hd, het_w=hw,
+            hom_src=ms, hom_dst=md, hom_w=mw,
+            num_nodes=self.num_nodes, sizes=self.sizes,
+        )
+
+
+def seeds_identity(num_nodes: int) -> np.ndarray:
+    """All-sources seed matrix: Y = I_N.
+
+    The paper sweeps seeds one at a time (``y=1`` for a single vertex per
+    sweep); the batched engines treat each seed as a column of Y.
+    """
+    return np.eye(num_nodes, dtype=np.float64)
+
+
+def seeds_for_nodes(num_nodes: int, nodes: Sequence[int]) -> np.ndarray:
+    y = np.zeros((num_nodes, len(nodes)), dtype=np.float64)
+    for c, v in enumerate(nodes):
+        y[v, c] = 1.0
+    return y

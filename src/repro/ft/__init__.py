@@ -1,0 +1,17 @@
+from repro.ft.runtime import (
+    ElasticController,
+    FailureInjector,
+    StepGuard,
+    StragglerWatch,
+    TransientWorkerError,
+    is_retryable,
+)
+
+__all__ = [
+    "ElasticController",
+    "FailureInjector",
+    "StepGuard",
+    "StragglerWatch",
+    "TransientWorkerError",
+    "is_retryable",
+]

@@ -1,0 +1,142 @@
+"""Fault-tolerance runtime: failure handling, straggler watch, retries.
+
+On a 1000+-node cluster the failure model is: a worker dies mid-step
+(preemption, HBM ECC, network partition) or slows down (straggler).  The
+driver-side mechanisms here are platform-agnostic:
+
+* ``StepGuard`` — wraps the train step; classifies exceptions as
+  retryable (transient runtime errors) vs fatal (shape/compile bugs),
+  retries with backoff, and after ``max_retries`` restores from the last
+  checkpoint and replays.
+* ``StragglerWatch`` — EWMA of step times; flags steps slower than
+  ``threshold ×`` the running mean.  In the LP engine the mitigation is
+  bounded staleness (``ShardedHeteroLP(stale_sync=k)``); in the train loop
+  it feeds the elastic controller below.
+* ``ElasticController`` — decides on re-meshing when the healthy device
+  count changes; checkpoints are saved unsharded, so a restore onto the
+  new mesh is just ``CheckpointManager.restore(..., shardings=new)``.
+* ``FailureInjector`` — deterministic fault injection for tests: raises a
+  transient error on chosen steps so CI can exercise the recovery path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+PyTree = Any
+
+
+class TransientWorkerError(RuntimeError):
+    """A failure that a retry / restore-replay can heal."""
+
+
+_RETRYABLE = (TransientWorkerError,)
+_RETRYABLE_MESSAGES = (
+    "DATA_LOSS", "UNAVAILABLE", "DEADLINE_EXCEEDED", "RESOURCE_EXHAUSTED",
+    "socket closed", "connection reset",
+)
+
+
+def is_retryable(err: BaseException) -> bool:
+    if isinstance(err, _RETRYABLE):
+        return True
+    msg = str(err)
+    return any(tag in msg for tag in _RETRYABLE_MESSAGES)
+
+
+@dataclasses.dataclass
+class StragglerWatch:
+    """EWMA step timer; flags outliers (the paper's fig. 4 problem: one
+    slow worker gates every BSP superstep)."""
+
+    alpha: float = 0.1
+    threshold: float = 2.0
+    _mean: Optional[float] = None
+    slow_steps: int = 0
+
+    def observe(self, step_time: float) -> bool:
+        if self._mean is None:
+            self._mean = step_time
+            return False
+        is_slow = step_time > self.threshold * self._mean
+        if is_slow:
+            self.slow_steps += 1
+        # slow steps perturb the mean less (they are the anomaly)
+        a = self.alpha * (0.25 if is_slow else 1.0)
+        self._mean = (1 - a) * self._mean + a * step_time
+        return is_slow
+
+    @property
+    def mean_step_time(self) -> Optional[float]:
+        return self._mean
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raise a transient error at the given steps (tests/chaos drills)."""
+
+    fail_at: Tuple[int, ...] = ()
+    fired: List[int] = dataclasses.field(default_factory=list)
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at and step not in self.fired:
+            self.fired.append(step)
+            raise TransientWorkerError(f"injected fault at step {step}")
+
+
+@dataclasses.dataclass
+class StepGuard:
+    """Retry/restore wrapper around one training step."""
+
+    max_retries: int = 3
+    backoff_s: float = 0.05
+    restore_fn: Optional[Callable[[], Tuple[int, PyTree]]] = None
+    retries: int = 0
+    restores: int = 0
+
+    def run(self, step_fn: Callable[[], PyTree]) -> PyTree:
+        last: Optional[BaseException] = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                return step_fn()
+            except BaseException as e:  # noqa: BLE001
+                if not is_retryable(e):
+                    raise
+                last = e
+                self.retries += 1
+                time.sleep(self.backoff_s * (2 ** attempt))
+        if self.restore_fn is not None:
+            self.restores += 1
+            self.restore_fn()
+            return step_fn()
+        raise last  # type: ignore[misc]
+
+
+@dataclasses.dataclass
+class ElasticController:
+    """Re-mesh policy: checkpoint → rebuild mesh on the healthy devices →
+    restore with new shardings.  Device loss detection is platform-level;
+    here we expose the decision + bookkeeping used by launch/train.py."""
+
+    min_devices: int = 1
+    history: List[Dict] = dataclasses.field(default_factory=list)
+
+    def plan(self, healthy_devices: int, current_devices: int) -> Optional[Dict]:
+        if healthy_devices == current_devices:
+            return None
+        if healthy_devices < self.min_devices:
+            raise RuntimeError(
+                f"{healthy_devices} devices < minimum {self.min_devices}"
+            )
+        # shrink to the largest power-of-two ≤ healthy (keeps meshes tidy)
+        target = 1
+        while target * 2 <= healthy_devices:
+            target *= 2
+        plan = {
+            "from": current_devices,
+            "to": target,
+            "action": "checkpoint-restore-reshard",
+        }
+        self.history.append(plan)
+        return plan

@@ -1,0 +1,54 @@
+"""Graph substrate: structures, segment ops, sampling, partitioning."""
+from repro.graph.partition import (
+    EdgeShards,
+    NodeBands,
+    balance_report,
+    edge_partition,
+    node_partition,
+)
+from repro.graph.sampler import (
+    CSRAdjacency,
+    NeighborSampler,
+    SampledBlock,
+    SampledSubgraph,
+    relabel_to_local,
+)
+from repro.graph.segment import (
+    degree,
+    scatter_spmm,
+    segment_max,
+    segment_mean,
+    segment_min,
+    segment_softmax,
+    segment_sum,
+)
+from repro.graph.structures import (
+    EdgeList,
+    PaddedCSR,
+    erdos_renyi,
+    powerlaw_graph,
+)
+
+__all__ = [
+    "CSRAdjacency",
+    "EdgeList",
+    "EdgeShards",
+    "NeighborSampler",
+    "NodeBands",
+    "PaddedCSR",
+    "SampledBlock",
+    "SampledSubgraph",
+    "balance_report",
+    "degree",
+    "edge_partition",
+    "erdos_renyi",
+    "node_partition",
+    "powerlaw_graph",
+    "relabel_to_local",
+    "scatter_spmm",
+    "segment_max",
+    "segment_mean",
+    "segment_min",
+    "segment_softmax",
+    "segment_sum",
+]

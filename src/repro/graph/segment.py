@@ -1,0 +1,117 @@
+"""Segment-reduce message passing primitives.
+
+JAX has no native EmbeddingBag or CSR/CSC sparse — message passing is
+implemented via ``jax.ops.segment_sum``-style reductions over an edge-index
+scatter.  These wrappers are the single place the rest of the system (LP
+sparse engine, GNN models, recsys embedding bag) gets them from, so the
+Pallas kernel in ``repro/kernels/segment_reduce`` can be swapped in behind
+the same API.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(
+    data: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    *,
+    indices_are_sorted: bool = False,
+) -> jax.Array:
+    return jax.ops.segment_sum(
+        data,
+        segment_ids,
+        num_segments=num_segments,
+        indices_are_sorted=indices_are_sorted,
+    )
+
+
+def segment_mean(
+    data: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    *,
+    indices_are_sorted: bool = False,
+) -> jax.Array:
+    total = segment_sum(
+        data, segment_ids, num_segments, indices_are_sorted=indices_are_sorted
+    )
+    count = segment_sum(
+        jnp.ones(data.shape[:1], dtype=data.dtype),
+        segment_ids,
+        num_segments,
+        indices_are_sorted=indices_are_sorted,
+    )
+    return total / jnp.maximum(count, 1.0)[(...,) + (None,) * (data.ndim - 1)]
+
+
+def segment_max(
+    data: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    *,
+    indices_are_sorted: bool = False,
+) -> jax.Array:
+    return jax.ops.segment_max(
+        data,
+        segment_ids,
+        num_segments=num_segments,
+        indices_are_sorted=indices_are_sorted,
+    )
+
+
+def segment_min(
+    data: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+) -> jax.Array:
+    return jax.ops.segment_min(data, segment_ids, num_segments=num_segments)
+
+
+def segment_softmax(
+    scores: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+) -> jax.Array:
+    """Numerically-stable softmax within each segment (GAT edge softmax)."""
+    seg_max = jax.ops.segment_max(
+        scores, segment_ids, num_segments=num_segments
+    )
+    # empty segments produce -inf max; gather is safe because those segments
+    # have no edges to read it back.
+    shifted = scores - seg_max[segment_ids]
+    expd = jnp.exp(shifted)
+    denom = segment_sum(expd, segment_ids, num_segments)
+    return expd / jnp.maximum(denom[segment_ids], 1e-38)
+
+
+def scatter_spmm(
+    src: jax.Array,        # (E,) int — message source node per edge
+    dst: jax.Array,        # (E,) int — message destination node per edge
+    w: jax.Array,          # (E,) float — edge weight
+    F: jax.Array,          # (N, D) node features / labels
+    num_nodes: int,
+    *,
+    indices_are_sorted: bool = False,
+    accum_dtype: Optional[jnp.dtype] = jnp.float32,
+) -> jax.Array:
+    """(W @ F) for a COO operator W: out[v] = Σ_{e: dst=v} w_e · F[src_e].
+
+    This IS one Giraph superstep: gather = messages leaving src, segment_sum
+    = the destination vertex folding its mailbox (combiner semantics).
+    """
+    msgs = w[:, None].astype(accum_dtype) * F[src].astype(accum_dtype)
+    out = segment_sum(
+        msgs, dst, num_nodes, indices_are_sorted=indices_are_sorted
+    )
+    return out.astype(F.dtype)
+
+
+def degree(
+    dst: jax.Array, num_nodes: int, dtype=jnp.float32
+) -> jax.Array:
+    return segment_sum(jnp.ones_like(dst, dtype=dtype), dst, num_nodes)

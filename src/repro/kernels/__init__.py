@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel subpackage ships: ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd public wrapper with fallback), ``ref.py`` (pure-jnp
+oracle used by the allclose test sweeps).
+"""
+from repro.kernels.embedding_bag import embedding_bag, embedding_bag_op, embedding_bag_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention, gqa_attention_op
+from repro.kernels.lp_blockspmm import lp_round, lp_round_op, lp_round_ref
+from repro.kernels.segment_reduce import csr_aggregate, csr_aggregate_op, csr_aggregate_ref
+
+__all__ = [
+    "attention_ref",
+    "csr_aggregate",
+    "csr_aggregate_op",
+    "csr_aggregate_ref",
+    "embedding_bag",
+    "embedding_bag_op",
+    "embedding_bag_ref",
+    "flash_attention",
+    "gqa_attention_op",
+    "lp_round",
+    "lp_round_op",
+    "lp_round_ref",
+]

@@ -1,0 +1,36 @@
+"""Shared kernel plumbing.
+
+TPU is the compile target; this container is CPU-only, so every kernel runs
+under ``interpret=True`` here (the Pallas interpreter executes the kernel
+body in Python with the same blocking semantics).  On a real TPU backend
+``interpret`` resolves to False and the same code lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.lru_cache(maxsize=1)
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pick_block(dim: int, preferred: int, align: int = 8) -> int:
+    """Largest hardware-friendly block ≤ preferred that keeps the grid
+    covering ``dim`` without a ragged tail when possible."""
+    if dim <= preferred:
+        return round_up(dim, align) if dim % align else dim
+    b = preferred
+    while b > align and dim % b:
+        b -= align
+    return b if dim % b == 0 else preferred

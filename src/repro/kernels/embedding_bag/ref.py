@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the embedding-bag lookup.
+
+``out[b] = Σ_k w[b, k] · table[idx[b, k]]`` — the multi-hot gather+reduce
+at the heart of the recsys arch (JAX has no native EmbeddingBag; this IS
+the implementation, kernel-accelerated on TPU).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jnp.ndarray,   # (V, D)
+    idx: jnp.ndarray,     # (B, K) int32
+    w: jnp.ndarray,       # (B, K) per-sample weights (0 = pad)
+) -> jnp.ndarray:
+    gathered = table[idx]                    # (B, K, D)
+    out = jnp.einsum(
+        "bk,bkd->bd", w.astype(jnp.float32), gathered.astype(jnp.float32)
+    )
+    return out.astype(table.dtype)

@@ -1,0 +1,45 @@
+"""Public wrapper: flash attention with GQA head-group handling."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def gqa_attention_op(
+    q: jax.Array,    # (B, Hq, Lq, D)
+    k: jax.Array,    # (B, Hkv, Lk, D)
+    v: jax.Array,    # (B, Hkv, Lk, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    use_kernel: bool | None = None,
+    bq: int = 256,
+    bk: int = 512,
+) -> jax.Array:
+    """Grouped-query attention: repeats KV heads to match Q heads, then
+    dispatches to the Pallas kernel (serving) or the jnp reference
+    (training / tiny shapes)."""
+    hq, hkv = q.shape[1], k.shape[1]
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not a multiple of Hkv={hkv}")
+    group = hq // hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    if use_kernel is None:
+        use_kernel = q.shape[2] * k.shape[2] >= 128 * 128
+    if not use_kernel:
+        return attention_ref(
+            q, k, v, causal=causal, window=window, q_offset=q_offset
+        )
+    return flash_attention(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        bq=bq, bk=bk, interpret=default_interpret(),
+    )

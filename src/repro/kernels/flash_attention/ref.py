@@ -1,0 +1,37 @@
+"""Pure-jnp oracle: masked softmax attention (causal / sliding window)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,        # (B, H, Lq, D)
+    k: jnp.ndarray,        # (B, H, Lk, D)
+    v: jnp.ndarray,        # (B, H, Lk, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,   # sliding window size (None = full)
+    q_offset: int = 0,              # absolute position of q[0] (decode)
+) -> jnp.ndarray:
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    lq, lk = q.shape[2], k.shape[2]
+    q_pos = jnp.arange(lq) + q_offset
+    k_pos = jnp.arange(lk)
+    mask = jnp.ones((lq, lk), dtype=bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-38)
+    out = jnp.einsum(
+        "bhqk,bhkd->bhqd", p.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    return out.astype(q.dtype)

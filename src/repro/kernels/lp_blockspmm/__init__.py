@@ -1,0 +1,5 @@
+from repro.kernels.lp_blockspmm.kernel import lp_round
+from repro.kernels.lp_blockspmm.ops import lp_round_op
+from repro.kernels.lp_blockspmm.ref import lp_round_ref
+
+__all__ = ["lp_round", "lp_round_op", "lp_round_ref"]

@@ -1,0 +1,5 @@
+from repro.kernels.segment_reduce.kernel import csr_aggregate
+from repro.kernels.segment_reduce.ops import csr_aggregate_op
+from repro.kernels.segment_reduce.ref import csr_aggregate_ref
+
+__all__ = ["csr_aggregate", "csr_aggregate_op", "csr_aggregate_ref"]

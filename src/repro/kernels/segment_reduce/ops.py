@@ -1,0 +1,31 @@
+"""Public wrapper: padded-CSR aggregation with fallback to the oracle."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.common import default_interpret
+from repro.kernels.segment_reduce.kernel import csr_aggregate
+from repro.kernels.segment_reduce.ref import csr_aggregate_ref
+
+# The resident F panel must fit VMEM alongside tiles: N·bs·4B ≲ 8MB.
+_MAX_RESIDENT_NODES = 16384
+
+
+def csr_aggregate_op(
+    nbr: jax.Array,
+    wgt: jax.Array,
+    F: jax.Array,
+    *,
+    bn: int = 256,
+    bs: int = 128,
+    bd: int = 16,
+    use_kernel: bool | None = None,
+) -> jax.Array:
+    n = F.shape[0]
+    if use_kernel is None:
+        use_kernel = 128 <= n <= _MAX_RESIDENT_NODES
+    if not use_kernel:
+        return csr_aggregate_ref(nbr, wgt, F)
+    return csr_aggregate(
+        nbr, wgt, F, bn=bn, bs=bs, bd=bd, interpret=default_interpret()
+    )

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for padded-CSR neighbor aggregation.
+
+``out[v] = Σ_k wgt[v, k] · F[nbr[v, k]]`` — zero-weight pads are no-ops.
+This is the message-passing primitive (GNN aggregate / sparse LP superstep)
+in the regular layout.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def csr_aggregate_ref(
+    nbr: jnp.ndarray,   # (N, D) int32 neighbor ids
+    wgt: jnp.ndarray,   # (N, D) float weights (0 = pad)
+    F: jnp.ndarray,     # (N, S) features/labels
+) -> jnp.ndarray:
+    gathered = F[nbr]                       # (N, D, S)
+    acc = jnp.einsum(
+        "nd,nds->ns",
+        wgt.astype(jnp.float32),
+        gathered.astype(jnp.float32),
+    )
+    return acc.astype(F.dtype)

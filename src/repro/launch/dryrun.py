@@ -1,0 +1,268 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this script:
+  1. builds the step function and ShapeDtypeStruct input specs (no
+     allocation — the FULL configs are exercised only here),
+  2. jits with the family's NamedShardings on the production mesh
+     (16×16 single-pod, 2×16×16 multi-pod),
+  3. ``.lower().compile()`` — any sharding mismatch, OOM-at-compile or
+     unsupported collective is a bug in the system,
+  4. records memory_analysis / cost_analysis / a collective-bytes census
+     of the HLO into a JSONL file that benchmarks/roofline.py consumes.
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k \
+      --mesh single --out results/dryrun.jsonl
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type, incl. tuple types."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_BLOCK_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+
+
+def collective_census(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Count collective ops and sum their result-shape bytes.
+
+    Census is split into two buckets: ops in top-level/entry computations
+    vs ops inside while-loop body computations ("..body.." names).  The
+    roofline multiplies the loop bucket by the known trip count (scan over
+    layers / LP rounds) — XLA's static text contains each body once.
+    """
+    out: Dict[str, Dict[str, float]] = {}
+    for k in _COLLECTIVES:
+        out[k] = {"count": 0, "bytes": 0, "loop_count": 0, "loop_bytes": 0}
+    in_loop_block = False
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _BLOCK_RE.match(line)
+        if m:
+            name = m.group(2) or ""
+            in_loop_block = ("body" in name) or ("while" in name)
+            continue
+        for cname in _COLLECTIVES:
+            if f" {cname}(" in stripped or f"{cname}-start(" in stripped:
+                lhs = stripped.split("=", 1)
+                type_str = lhs[1] if len(lhs) > 1 else stripped
+                type_str = type_str.strip().split("(", 1)[0]
+                b = _shape_bytes(type_str)
+                if in_loop_block:
+                    out[cname]["loop_count"] += 1
+                    out[cname]["loop_bytes"] += b
+                else:
+                    out[cname]["count"] += 1
+                    out[cname]["bytes"] += b
+                break
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str) -> Dict[str, Any]:
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.shardings import shardings_for
+
+    spec = get_arch(arch)
+    cell = spec.make_cell(shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind,
+        "family": spec.family, "kind": cell.kind, "meta": cell.meta,
+    }
+    if cell.skip_reason:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = cell.skip_reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    in_sh = shardings_for(mesh, spec.family, cell)
+
+    from repro.parallel.hints import set_ambient_mesh
+    set_ambient_mesh(mesh)
+    t0 = time.time()
+    try:
+        with mesh:
+            jitted = jax.jit(
+                cell.step_fn,
+                in_shardings=in_sh,
+                donate_argnums=cell.donate,
+            )
+            lowered = jitted.lower(*cell.input_specs)
+            t_lower = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t1
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        return rec
+
+    rec["status"] = "ok"
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in (
+                "temp_size_in_bytes", "argument_size_in_bytes",
+                "output_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+    except Exception as e:  # noqa: BLE001
+        rec["memory"] = {"error": str(e)}
+
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        rec["cost"] = {
+            k: float(v)
+            for k, v in cost.items()
+            if k in ("flops", "bytes accessed", "transcendentals",
+                     "bytes accessed output", "optimal_seconds")
+            or k.startswith("bytes accessed")
+        }
+    except Exception as e:  # noqa: BLE001
+        rec["cost"] = {"error": str(e)}
+
+    try:
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_census(hlo)
+        rec["hlo_bytes"] = len(hlo)
+    except Exception as e:  # noqa: BLE001
+        rec["collectives"] = {"error": str(e)}
+
+    # scan-cost probes: XLA counts a while body ONCE regardless of the
+    # trip count, so trip=0 (no layers) and trip=1 separate top-level cost
+    # from one body execution: f(L) = f(0) + L·(f(1) − f(0)).
+    if cell.meta.get("scan_trip") and spec.make_probe_cell is not None:
+        rec["probe"] = {}
+        for trip in (0, 1):
+            try:
+                pc = spec.make_probe_cell(shape, trip)
+                with mesh:
+                    pcomp = jax.jit(
+                        pc.step_fn, in_shardings=in_sh,
+                        donate_argnums=pc.donate,
+                    ).lower(*pc.input_specs).compile()
+                pcost = pcomp.cost_analysis()
+                if isinstance(pcost, (list, tuple)):
+                    pcost = pcost[0]
+                rec["probe"][str(trip)] = {
+                    "flops": float(pcost.get("flops", 0.0)),
+                    "bytes": float(pcost.get("bytes accessed", 0.0)),
+                }
+            except Exception as e:  # noqa: BLE001
+                rec["probe"][str(trip)] = {"error": str(e)}
+    set_ambient_mesh(None)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every assigned (arch × shape) cell")
+    ap.add_argument("--include-extra", action="store_true",
+                    help="also run the dhlp-bio LP cells")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells already recorded as ok in --out")
+    args = ap.parse_args()
+
+    from repro.configs import all_cells, get_arch
+
+    if args.all:
+        cells = all_cells(include_extra=args.include_extra)
+    else:
+        if not args.arch:
+            ap.error("--arch required unless --all")
+        shapes = (
+            [args.shape] if args.shape else get_arch(args.arch).shapes
+        )
+        cells = [(args.arch, s) for s in shapes]
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if r.get("status") in ("ok", "skipped"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+
+    for arch, shape in cells:
+        for mesh_kind in meshes:
+            key = (arch, shape, mesh_kind)
+            if key in done:
+                print(f"[dryrun] {arch} × {shape} × {mesh_kind}: cached")
+                continue
+            print(f"[dryrun] {arch} × {shape} × {mesh_kind} ...", flush=True)
+            rec = run_cell(arch, shape, mesh_kind)
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+            status = rec["status"]
+            extra = (
+                f"compile={rec.get('compile_s')}s"
+                if status == "ok" else rec.get("error", rec.get("skip_reason", ""))
+            )
+            print(f"[dryrun] {arch} × {shape} × {mesh_kind}: {status} {extra}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

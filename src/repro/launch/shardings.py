@@ -1,0 +1,219 @@
+"""Named sharding rules per architecture family.
+
+Maps every input of a Cell (params / optimizer state / batch) to a
+``NamedSharding`` on the production mesh:
+
+  LM     — TP over ``model`` (heads / ff / experts), DP over pod×data;
+           KV caches shard sequence over ``model`` (sequence-parallel
+           serving) and batch over pod×data.
+  GNN    — node/edge arrays over pod×data, params replicated.
+  recsys — embedding tables vocab-sharded over ``model``; batch over
+           pod×data; first MLP layer column-sharded.
+  lp     — edges over ``model``, seed columns over pod×data (the
+           shard_map engine's layout, expressed for pjit).
+
+A dim is sharded only if the axis size divides it — otherwise the spec
+drops that axis (GSPMD could pad, but clean splits keep the roofline
+numbers honest).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.cells import Cell
+from repro.launch.mesh import data_axes
+
+PyTree = Any
+
+
+def _axis_size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _maybe(mesh, dim_size: int, axes):
+    """axes if they divide dim_size, else None (pjit requires INPUT dims to
+    divide the mesh axes exactly; every cell pads its sizes to make the
+    intended dims divisible — vocab to 128s, graph arrays to 512s)."""
+    return axes if dim_size % _axis_size(mesh, axes) == 0 else None
+
+
+def _ns(mesh, spec) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _replicated(mesh, tree) -> PyTree:
+    return jax.tree_util.tree_map(lambda _: _ns(mesh, P()), tree)
+
+
+# ====================================================================== LM
+def _lm_param_specs(mesh, p_specs) -> PyTree:
+    """Tensor-parallel placement keyed by parameter name."""
+    mdl = "model"
+
+    # rule name → (sharded dim index, dim count); evaluated lazily so a
+    # 1-D norm leaf never indexes shape[2].
+    _col = {"wq", "wk", "wv", "q_a", "q_b", "kv_b",
+            "shared_gate", "shared_up"}          # (L, in, out): out over TP
+    _row = {"wo", "o", "shared_down"}            # (L, in, out): in over TP
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = len(leaf.shape)
+        if name == "embed" and nd == 2:
+            return P(_maybe(mesh, leaf.shape[0], mdl), None)
+        if name == "lm_head" and nd == 2:
+            return P(None, _maybe(mesh, leaf.shape[1], mdl))
+        if name in ("w_gate", "w_up", "w_down"):
+            if nd == 4:      # MoE (L, E, a, b)
+                if leaf.shape[1] % mesh.shape[mdl] == 0:
+                    # expert-parallel: experts over model
+                    return P(None, mdl, None, None)
+                # E not divisible (e.g. granite 40e over 16): TP inside
+                # each expert on the ff dim instead
+                ff_dim = 3 if name in ("w_gate", "w_up") else 2
+                spec = [None, None, None, None]
+                spec[ff_dim] = _maybe(mesh, leaf.shape[ff_dim], mdl)
+                return P(*spec)
+            if name == "w_down":   # dense (L, ff, d)
+                return P(None, _maybe(mesh, leaf.shape[1], mdl), None)
+            return P(None, None, _maybe(mesh, leaf.shape[2], mdl))
+        if name in _col and nd == 3:
+            return P(None, None, _maybe(mesh, leaf.shape[2], mdl))
+        if name in _row and nd == 3:
+            return P(None, _maybe(mesh, leaf.shape[1], mdl), None)
+        return P()           # norms, routers, kv_a: replicated
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _ns(mesh, spec_for(path, leaf)), p_specs
+    )
+
+
+def _opt_state_specs(mesh, o_specs, p_sharding) -> PyTree:
+    """Optimizer moments mirror the parameter shardings; step replicated."""
+    # OptState(step, mu, nu) — mu/nu share the param tree structure.
+    step_s = _ns(mesh, P())
+    mu = p_sharding
+    nu = p_sharding if o_specs.nu is not None else None
+    return type(o_specs)(step=step_s, mu=mu, nu=nu)
+
+
+def _cache_spec(mesh, cache, dp) -> NamedSharding:
+    """KV cache: batch over dp, sequence over model (sequence-parallel)."""
+    shape = cache.shape
+    if len(shape) == 6:      # GQA (L, 2, B, S, hkv, hd)
+        return _ns(mesh, P(None, None, _maybe(mesh, shape[2], dp),
+                           _maybe(mesh, shape[3], "model"), None, None))
+    # MLA (L, B, S, r)
+    return _ns(mesh, P(None, _maybe(mesh, shape[1], dp),
+                       _maybe(mesh, shape[2], "model"), None))
+
+
+def lm_shardings(mesh, cell: Cell) -> Tuple:
+    dp = data_axes(mesh)
+    p_specs = cell.input_specs[0]
+    p_sh = _lm_param_specs(mesh, p_specs)
+    if cell.kind == "train":
+        o_specs, batch = cell.input_specs[1], cell.input_specs[2]
+        o_sh = _opt_state_specs(mesh, o_specs, p_sh)
+        b_sh = {
+            k: _ns(mesh, P(_maybe(mesh, v.shape[0], dp), None))
+            for k, v in batch.items()
+        }
+        return (p_sh, o_sh, b_sh)
+    if cell.kind == "prefill":
+        tokens, cache = cell.input_specs[1], cell.input_specs[2]
+        return (
+            p_sh,
+            _ns(mesh, P(_maybe(mesh, tokens.shape[0], dp), None)),
+            _cache_spec(mesh, cache, dp),
+        )
+    if cell.kind == "decode":
+        cache, token = cell.input_specs[1], cell.input_specs[2]
+        return (
+            p_sh,
+            _cache_spec(mesh, cache, dp),
+            _ns(mesh, P(_maybe(mesh, token.shape[0], dp), None)),
+            _ns(mesh, P()),
+        )
+    raise ValueError(cell.kind)
+
+
+# ===================================================================== GNN
+def gnn_shardings(mesh, cell: Cell) -> Tuple:
+    dp = data_axes(mesh)
+    p_specs, o_specs, batch = cell.input_specs
+    p_sh = _replicated(mesh, p_specs)
+    o_sh = type(o_specs)(
+        step=_ns(mesh, P()),
+        mu=_replicated(mesh, o_specs.mu),
+        nu=None if o_specs.nu is None else _replicated(mesh, o_specs.nu),
+    )
+
+    def batch_spec(v):
+        lead = _maybe(mesh, v.shape[0], dp)
+        return _ns(mesh, P(lead, *([None] * (len(v.shape) - 1))))
+
+    b_sh = {k: batch_spec(v) for k, v in batch.items()}
+    return (p_sh, o_sh, b_sh)
+
+
+# ================================================================== recsys
+def recsys_shardings(mesh, cell: Cell) -> Tuple:
+    dp = data_axes(mesh)
+    mdl = "model"
+    p_specs = cell.input_specs[0]
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("table", "wide_table"):
+            return _ns(mesh, P(_maybe(mesh, leaf.shape[0], mdl),
+                               *([None] * (len(leaf.shape) - 1))))
+        if name == "mlp_w" and len(leaf.shape) == 2 and leaf.shape[1] > 64:
+            return _ns(mesh, P(None, _maybe(mesh, leaf.shape[1], mdl)))
+        return _ns(mesh, P())
+
+    p_sh = jax.tree_util.tree_map_with_path(spec_for, p_specs)
+
+    def batch_spec(v):
+        return _ns(mesh, P(_maybe(mesh, v.shape[0], dp),
+                           *([None] * (len(v.shape) - 1))))
+
+    if cell.kind == "train":
+        o_specs, batch = cell.input_specs[1], cell.input_specs[2]
+        o_sh = type(o_specs)(
+            step=_ns(mesh, P()),
+            mu=p_sh, nu=None if o_specs.nu is None else p_sh,
+        )
+        return (p_sh, o_sh, {k: batch_spec(v) for k, v in batch.items()})
+    rest = tuple(batch_spec(v) for v in cell.input_specs[1:])
+    return (p_sh,) + rest
+
+
+# ====================================================================== LP
+def lp_shardings(mesh, cell: Cell) -> Tuple:
+    dp = data_axes(mesh)
+    src, dst, w, Y, F = cell.input_specs
+    edge = _ns(mesh, P(_maybe(mesh, src.shape[0], "model")))
+    seeds = _ns(mesh, P(None, _maybe(mesh, Y.shape[1], dp)))
+    return (edge, edge, edge, seeds, seeds)
+
+
+FAMILY_SHARDINGS = {
+    "lm": lm_shardings,
+    "gnn": gnn_shardings,
+    "recsys": recsys_shardings,
+    "lp": lp_shardings,
+}
+
+
+def shardings_for(mesh, family: str, cell: Cell) -> Tuple:
+    return FAMILY_SHARDINGS[family](mesh, cell)

@@ -1,0 +1,3 @@
+from repro.models import gnn, recsys, transformer
+
+__all__ = ["gnn", "recsys", "transformer"]

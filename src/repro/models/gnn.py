@@ -1,0 +1,392 @@
+"""GNN arch pool: GCN, GAT, DimeNet, MeshGraphNet.
+
+All four run in the SpMM / gather-scatter regime over the shared graph
+substrate (``repro.graph``): message passing is ``segment_sum`` over an
+edge-index scatter — exactly the same primitive the LP core uses, which is
+why these archs share kernels with the paper's technique (DESIGN.md §5).
+
+Two execution modes:
+  * full-graph (cora / ogb_products cells): edge lists over all nodes;
+  * sampled minibatch (minibatch_lg cell): fanout blocks from
+    ``repro.graph.NeighborSampler`` (GraphSAGE-style hop aggregation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.segment import (
+    scatter_spmm,
+    segment_mean,
+    segment_softmax,
+    segment_sum,
+)
+from repro.models.common import dense_init, layer_norm, mlp
+
+PyTree = Any
+
+
+# ===================================================================== GCN
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str
+    n_layers: int = 2
+    d_hidden: int = 16
+    d_feat: int = 1433
+    n_classes: int = 7
+    dtype: Any = jnp.float32
+
+
+def gcn_init(cfg: GCNConfig, key) -> PyTree:
+    dims = [cfg.d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        "w": [dense_init(k, a, b, cfg.dtype) for k, a, b in
+              zip(keys, dims[:-1], dims[1:])],
+        "b": [jnp.zeros((b,), cfg.dtype) for b in dims[1:]],
+    }
+
+
+def gcn_forward(cfg: GCNConfig, params, feats, src, dst, w, num_nodes):
+    """feats (N,F); (src,dst,w) = sym-normalized adjacency w/ self loops."""
+    h = feats
+    for i, (W, b) in enumerate(zip(params["w"], params["b"])):
+        h = scatter_spmm(src, dst, w, h, num_nodes)      # Ã h
+        h = jnp.einsum("nf,fg->ng", h, W) + b
+        if i < len(params["w"]) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+# ===================================================================== GAT
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    d_feat: int = 1433
+    n_classes: int = 7
+    dtype: Any = jnp.float32
+
+
+def gat_init(cfg: GATConfig, key) -> PyTree:
+    keys = jax.random.split(key, 2 * cfg.n_layers)
+    layers = []
+    d_in = cfg.d_feat
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        layers.append({
+            "w": dense_init(keys[2 * i], d_in, heads * d_out, cfg.dtype),
+            "a_src": 0.1 * dense_init(keys[2 * i + 1], heads, d_out, cfg.dtype),
+            "a_dst": 0.1 * dense_init(keys[2 * i + 1], heads, d_out, cfg.dtype),
+        })
+        d_in = heads * d_out if not last else d_out
+    return {"layers": layers}
+
+
+def gat_forward(cfg: GATConfig, params, feats, src, dst, num_nodes):
+    """SDDMM (edge scores) → segment-softmax → SpMM, per layer."""
+    h = feats
+    n_layers = len(params["layers"])
+    for i, lp in enumerate(params["layers"]):
+        last = i == n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        hw = jnp.einsum("nf,fg->ng", h, lp["w"]).reshape(-1, heads, d_out)
+        e_src = jnp.einsum("nhd,hd->nh", hw, lp["a_src"])   # (N, H)
+        e_dst = jnp.einsum("nhd,hd->nh", hw, lp["a_dst"])
+        scores = jax.nn.leaky_relu(
+            e_src[src] + e_dst[dst], negative_slope=0.2
+        )                                                    # (E, H)
+        alpha = jax.vmap(
+            lambda s: segment_softmax(s, dst, num_nodes), in_axes=1, out_axes=1
+        )(scores)                                            # (E, H)
+        msgs = alpha[:, :, None] * hw[src]                   # (E, H, D)
+        agg = segment_sum(
+            msgs.reshape(msgs.shape[0], heads * d_out), dst, num_nodes
+        ).reshape(-1, heads, d_out)
+        h = agg.reshape(-1, heads * d_out)
+        if not last:
+            h = jax.nn.elu(h)
+        else:
+            h = agg.mean(axis=1) if heads > 1 else h.reshape(-1, d_out)
+    return h
+
+
+# ================================================================= DimeNet
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    n_species: int = 16
+    cutoff: float = 5.0
+    out_dim: int = 1
+    dtype: Any = jnp.float32
+
+
+def _rbf(d: jax.Array, n_radial: int, cutoff: float) -> jax.Array:
+    """DimeNet radial basis: sin(nπ d/c)/d with smooth cutoff envelope."""
+    d = jnp.maximum(d, 1e-6)[:, None]
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)[None, :]
+    u = d / cutoff
+    env = 1.0 - 6.0 * u**5 + 15.0 * u**4 - 10.0 * u**3   # C² envelope
+    return env * jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * u) / d
+
+
+def _sbf(d: jax.Array, angle: jax.Array, n_spherical: int, n_radial: int,
+         cutoff: float) -> jax.Array:
+    """Angular×radial basis (Chebyshev angular × sine radial).
+
+    The original uses spherical Bessel × Legendre; scipy is unavailable
+    offline, so we use cos(l·θ) angular modes with the same radial sine
+    family — same tensor shape (n_spherical·n_radial), same decay structure
+    (noted in DESIGN.md §8 assumption log).
+    """
+    u = (jnp.maximum(d, 1e-6) / cutoff)[:, None]
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)[None, :]
+    radial = jnp.sin(n * jnp.pi * u) / (u * cutoff)          # (T, R)
+    ls = jnp.arange(n_spherical, dtype=jnp.float32)[None, :]
+    angular = jnp.cos(ls * angle[:, None])                   # (T, S)
+    out = angular[:, :, None] * radial[:, None, :]           # (T, S, R)
+    return out.reshape(d.shape[0], n_spherical * n_radial)
+
+
+def dimenet_init(cfg: DimeNetConfig, key) -> PyTree:
+    ks = jax.random.split(key, 12 + 6 * cfg.n_blocks)
+    h, nb = cfg.d_hidden, cfg.n_bilinear
+    sph = cfg.n_spherical * cfg.n_radial
+    params = {
+        "embed_z": 0.1 * dense_init(ks[0], cfg.n_species, h, cfg.dtype),
+        "rbf_proj": dense_init(ks[1], cfg.n_radial, h, cfg.dtype),
+        "msg_mlp_w": dense_init(ks[2], 3 * h, h, cfg.dtype),
+        "msg_mlp_b": jnp.zeros((h,), cfg.dtype),
+        "blocks": [],
+        "out_w1": dense_init(ks[3], h, h, cfg.dtype),
+        "out_w2": dense_init(ks[4], h, cfg.out_dim, cfg.dtype),
+    }
+    blocks = []
+    for i in range(cfg.n_blocks):
+        k0 = 5 + 6 * i
+        blocks.append({
+            "w_src": dense_init(ks[k0], h, h, cfg.dtype),
+            "w_kj": dense_init(ks[k0 + 1], h, nb, cfg.dtype),
+            "sbf_proj": dense_init(ks[k0 + 2], sph, nb, cfg.dtype),
+            "bilinear": 0.1 * jax.random.normal(
+                ks[k0 + 3], (nb, nb, h), jnp.float32
+            ).astype(cfg.dtype),
+            "w_out": dense_init(ks[k0 + 4], h, h, cfg.dtype),
+            "w_res": dense_init(ks[k0 + 5], h, h, cfg.dtype),
+        })
+    params["blocks"] = blocks
+    return params
+
+
+def dimenet_forward(
+    cfg: DimeNetConfig,
+    params,
+    z: jax.Array,           # (N,) species ids
+    pos: jax.Array,         # (N, 3)
+    edge_src: jax.Array,    # (E,) j  (message j→i)
+    edge_dst: jax.Array,    # (E,) i
+    tri_kj: jax.Array,      # (T,) edge index of k→j
+    tri_ji: jax.Array,      # (T,) edge index of j→i
+    tri_mask: jax.Array,    # (T,) bool (padding)
+    graph_ids: jax.Array,   # (N,) graph id per node (batched molecules)
+    num_graphs: int,
+):
+    num_nodes = z.shape[0]
+    vec = pos[edge_dst] - pos[edge_src]                   # (E, 3)
+    dist = jnp.sqrt(jnp.sum(vec**2, axis=-1) + 1e-12)
+    rbf = _rbf(dist, cfg.n_radial, cfg.cutoff)            # (E, R)
+    # angle between edge kj and ji at the shared node j
+    v1 = -vec[tri_kj]
+    v2 = vec[tri_ji]
+    cosang = jnp.sum(v1 * v2, axis=-1) / jnp.maximum(
+        jnp.linalg.norm(v1, axis=-1) * jnp.linalg.norm(v2, axis=-1), 1e-9
+    )
+    angle = jnp.arccos(jnp.clip(cosang, -1.0 + 1e-7, 1.0 - 1e-7))
+    sbf = _sbf(dist[tri_ji], angle, cfg.n_spherical, cfg.n_radial, cfg.cutoff)
+
+    hz = params["embed_z"][z]                             # (N, H)
+    m = jax.nn.silu(
+        jnp.einsum("ef,fg->eg",
+                   jnp.concatenate(
+                       [hz[edge_src], hz[edge_dst],
+                        jnp.einsum("er,rh->eh", rbf, params["rbf_proj"])],
+                       axis=-1),
+                   params["msg_mlp_w"]) + params["msg_mlp_b"]
+    )                                                     # (E, H)
+
+    e = edge_src.shape[0]
+    for blk in params["blocks"]:
+        # directional message passing: m_ji ← f(m_ji, Σ_k sbf ⊙ bilinear(m_kj))
+        m_kj = jnp.einsum("eh,hb->eb", m, blk["w_kj"])[tri_kj]   # (T, nb)
+        sb = jnp.einsum("ts,sb->tb", sbf, blk["sbf_proj"])       # (T, nb)
+        inter = jnp.einsum(
+            "tb,tc,bch->th", m_kj, sb, blk["bilinear"]
+        )                                                        # (T, H)
+        inter = inter * tri_mask[:, None]
+        agg = segment_sum(inter, tri_ji, e)                      # (E, H)
+        upd = jax.nn.silu(
+            jnp.einsum("eh,hg->eg", m, blk["w_src"]) + agg
+        )
+        m = m + jax.nn.silu(jnp.einsum("eh,hg->eg", upd, blk["w_res"]))
+
+    # per-node readout: sum incoming messages, then per-graph sum
+    node_out = segment_sum(m, edge_dst, num_nodes)
+    node_out = jax.nn.silu(jnp.einsum("nh,hg->ng", node_out, params["out_w1"]))
+    node_energy = jnp.einsum("nh,ho->no", node_out, params["out_w2"])
+    return segment_sum(node_energy, graph_ids, num_graphs)       # (G, out)
+
+
+def build_triplets(
+    src, dst, num_nodes: int, max_triplets: Optional[int] = None
+):
+    """Host-side triplet index construction: for each edge (j→i) and each
+    k∈N(j)\\{i}: (edge k→j, edge j→i).  Returns padded int32 arrays."""
+    import numpy as np
+
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    e = len(src)
+    in_edges: List[List[int]] = [[] for _ in range(num_nodes)]
+    for eid in range(e):
+        in_edges[dst[eid]].append(eid)
+    kj, ji = [], []
+    for eid in range(e):
+        j = src[eid]
+        for kj_eid in in_edges[j]:
+            if src[kj_eid] == dst[eid]:
+                continue  # exclude backtracking k == i
+            kj.append(kj_eid)
+            ji.append(eid)
+    t = len(kj)
+    cap = t if max_triplets is None else max_triplets
+    kj_a = np.zeros(cap, np.int32)
+    ji_a = np.zeros(cap, np.int32)
+    mask = np.zeros(cap, bool)
+    n = min(t, cap)
+    kj_a[:n] = kj[:n]
+    ji_a[:n] = ji[:n]
+    mask[:n] = True
+    return kj_a, ji_a, mask
+
+
+# ============================================================ MeshGraphNet
+@dataclasses.dataclass(frozen=True)
+class MGNConfig:
+    name: str
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    d_node_in: int = 8
+    d_edge_in: int = 4
+    d_out: int = 3
+    dtype: Any = jnp.float32
+
+
+def _mgn_mlp_init(key, d_in, d_hidden, d_out, n_layers, dtype):
+    dims = [d_in] + [d_hidden] * (n_layers - 1) + [d_out]
+    ks = jax.random.split(key, len(dims))
+    return {
+        "w": [dense_init(k, a, b, dtype) for k, a, b in
+              zip(ks, dims[:-1], dims[1:])],
+        "b": [jnp.zeros((b,), dtype) for b in dims[1:]],
+        "ln_g": jnp.ones((d_out,), dtype),
+        "ln_b": jnp.zeros((d_out,), dtype),
+    }
+
+
+def _mgn_mlp(p, x, norm=True):
+    h = mlp(x, p["w"], p["b"], act=jax.nn.relu)
+    if norm:
+        h = layer_norm(h, p["ln_g"], p["ln_b"])
+    return h
+
+
+def mgn_init(cfg: MGNConfig, key) -> PyTree:
+    ks = jax.random.split(key, 3 + 2 * cfg.n_layers)
+    h = cfg.d_hidden
+    return {
+        "node_enc": _mgn_mlp_init(ks[0], cfg.d_node_in, h, h, cfg.mlp_layers, cfg.dtype),
+        "edge_enc": _mgn_mlp_init(ks[1], cfg.d_edge_in, h, h, cfg.mlp_layers, cfg.dtype),
+        "blocks": [
+            {
+                "edge": _mgn_mlp_init(ks[2 + 2 * i], 3 * h, h, h, cfg.mlp_layers, cfg.dtype),
+                "node": _mgn_mlp_init(ks[3 + 2 * i], 2 * h, h, h, cfg.mlp_layers, cfg.dtype),
+            }
+            for i in range(cfg.n_layers)
+        ],
+        "decoder": _mgn_mlp_init(ks[-1], h, h, cfg.d_out, cfg.mlp_layers, cfg.dtype),
+    }
+
+
+def mgn_forward(cfg: MGNConfig, params, node_feat, edge_feat, src, dst,
+                num_nodes):
+    h = _mgn_mlp(params["node_enc"], node_feat)
+    e = _mgn_mlp(params["edge_enc"], edge_feat)
+    for blk in params["blocks"]:
+        e_in = jnp.concatenate([e, h[src], h[dst]], axis=-1)
+        e = e + _mgn_mlp(blk["edge"], e_in)                  # edge update
+        agg = segment_sum(e, dst, num_nodes)                 # sum aggregator
+        h = h + _mgn_mlp(blk["node"], jnp.concatenate([h, agg], axis=-1))
+    return _mgn_mlp(params["decoder"], h, norm=False)
+
+
+# ================================================ sampled-minibatch (SAGE)
+@dataclasses.dataclass(frozen=True)
+class SageConfig:
+    name: str
+    d_feat: int
+    d_hidden: int
+    n_classes: int
+    fanouts: Tuple[int, ...] = (15, 10)
+    dtype: Any = jnp.float32
+
+
+def sage_init(cfg: SageConfig, key) -> PyTree:
+    n_hops = len(cfg.fanouts)
+    ks = jax.random.split(key, 2 * n_hops + 2)
+    return {
+        "w_in": dense_init(ks[0], cfg.d_feat, cfg.d_hidden, cfg.dtype),
+        "w_nbr": [dense_init(ks[1 + 2 * i], cfg.d_hidden, cfg.d_hidden, cfg.dtype)
+                  for i in range(n_hops)],
+        "w_self": [dense_init(ks[2 + 2 * i], cfg.d_hidden, cfg.d_hidden, cfg.dtype)
+                   for i in range(n_hops)],
+        "w_out": dense_init(ks[-1], cfg.d_hidden, cfg.n_classes, cfg.dtype),
+    }
+
+
+def sage_block_forward(cfg: SageConfig, params, feats, hops):
+    """GraphSAGE-style hop aggregation over sampled fanout blocks — the
+    ``minibatch_lg`` execution mode of the message-passing archs (mean
+    aggregator; GCN's sym-norm becomes the sampled-mean estimator).
+
+    hops[k] = (frontier_idx (B_k,), nbr_idx (B_k, fanout), mask) with local
+    indices into ``feats``; hop 0 expands the seed batch.  Deepest hop is
+    processed first so each layer reads the previous depth's output.
+    """
+    h = jax.nn.relu(jnp.einsum("uf,fh->uh", feats, params["w_in"]))
+    for (frontier, nbr, mask), w, ws in zip(
+        reversed(list(hops)), params["w_nbr"], params["w_self"]
+    ):
+        neigh = h[nbr]                                       # (B, f, H)
+        m = mask[..., None].astype(h.dtype)
+        mean = (neigh * m).sum(axis=1) / jnp.maximum(m.sum(axis=1), 1.0)
+        out = jax.nn.relu(
+            jnp.einsum("bd,dg->bg", mean, w)
+            + jnp.einsum("bd,dg->bg", h[frontier], ws)
+        )
+        h = h.at[frontier].set(out)
+    seeds = hops[0][0]
+    return jnp.einsum("bd,dc->bc", h[seeds], params["w_out"])

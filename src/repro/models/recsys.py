@@ -1,0 +1,155 @@
+"""Wide & Deep recsys arch (Cheng et al. 2016).
+
+Embedding tables are the hot path: 40 sparse fields, one row-offset stacked
+table (lookup = ``embedding_bag`` kernel; JAX has no native EmbeddingBag —
+``jnp.take`` + segment-reduce / the Pallas kernel IS the implementation).
+
+Shapes served:
+  * train_batch / serve_*: (B, n_sparse) categorical ids + (B, n_dense)
+    floats → CTR logit (wide linear ⊕ deep MLP, concat interaction).
+  * retrieval_cand: one query embedding against 10⁶ candidate vectors —
+    a single (1, D)×(D, C) matmul, NOT a loop.
+
+Sharding: table rows over the ``model`` axis (vocab-sharded), batch over
+``data``×``pod``; the per-device lookup hits only local rows and partial
+results are summed (see launch/shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, embed_init, mlp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class WideDeepConfig:
+    name: str
+    n_sparse: int = 40
+    n_dense: int = 13
+    embed_dim: int = 32
+    vocab_per_field: int = 100_000
+    mlp_dims: Tuple[int, ...] = (1024, 512, 256)
+    dtype: Any = jnp.float32
+
+    @property
+    def total_vocab(self) -> int:
+        return self.n_sparse * self.vocab_per_field
+
+    @property
+    def deep_in(self) -> int:
+        return self.n_sparse * self.embed_dim + self.n_dense
+
+    def param_count(self) -> int:
+        total = self.total_vocab * self.embed_dim + self.total_vocab  # tables
+        dims = (self.deep_in,) + self.mlp_dims + (1,)
+        for a, b in zip(dims[:-1], dims[1:]):
+            total += a * b + b
+        total += self.n_dense + 1
+        return total
+
+
+def widedeep_init(cfg: WideDeepConfig, key) -> PyTree:
+    ks = jax.random.split(key, 4 + len(cfg.mlp_dims) + 1)
+    dims = (cfg.deep_in,) + cfg.mlp_dims + (1,)
+    return {
+        # deep embedding table, all fields stacked with row offsets
+        "table": embed_init(ks[0], cfg.total_vocab, cfg.embed_dim, cfg.dtype),
+        # wide: one scalar weight per categorical value (linear over one-hot)
+        "wide_table": jnp.zeros((cfg.total_vocab,), cfg.dtype),
+        "wide_dense": jnp.zeros((cfg.n_dense,), cfg.dtype),
+        "bias": jnp.zeros((), cfg.dtype),
+        "mlp_w": [
+            dense_init(k, a, b, cfg.dtype)
+            for k, a, b in zip(ks[1:], dims[:-1], dims[1:])
+        ],
+        "mlp_b": [jnp.zeros((b,), cfg.dtype) for b in dims[1:]],
+    }
+
+
+def _offset_ids(cfg: WideDeepConfig, sparse_ids: jax.Array) -> jax.Array:
+    """(B, n_sparse) per-field ids → global rows in the stacked table."""
+    offsets = (
+        jnp.arange(cfg.n_sparse, dtype=sparse_ids.dtype) * cfg.vocab_per_field
+    )
+    return sparse_ids + offsets[None, :]
+
+
+def widedeep_forward(
+    cfg: WideDeepConfig, params, sparse_ids: jax.Array, dense_feats: jax.Array
+) -> jax.Array:
+    """CTR logits (B,).  sparse_ids (B, n_sparse), dense (B, n_dense)."""
+    rows = _offset_ids(cfg, sparse_ids)                   # (B, F)
+    emb = params["table"][rows]                           # (B, F, D) gather
+    deep_in = jnp.concatenate(
+        [emb.reshape(emb.shape[0], -1), dense_feats], axis=-1
+    )
+    deep = mlp(deep_in, params["mlp_w"], params["mlp_b"], act=jax.nn.relu)
+    wide = (
+        params["wide_table"][rows].sum(axis=-1)
+        + jnp.einsum("bd,d->b", dense_feats, params["wide_dense"])
+    )
+    return deep[..., 0] + wide + params["bias"]
+
+
+def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits32 = logits.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits32, 0.0)
+        - logits32 * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits32)))
+    )
+
+
+def make_train_step(cfg: WideDeepConfig, optimizer):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            logits = widedeep_forward(
+                cfg, p, batch["sparse"], batch["dense"]
+            )
+            return bce_loss(logits, batch["labels"])
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_serve(cfg: WideDeepConfig):
+    def serve(params, sparse_ids, dense_feats):
+        return jax.nn.sigmoid(
+            widedeep_forward(cfg, params, sparse_ids, dense_feats)
+        )
+
+    return serve
+
+
+# ------------------------------------------------------------- retrieval
+def user_tower(cfg: WideDeepConfig, params, sparse_ids, dense_feats):
+    """Query embedding = last deep hidden layer (dim mlp_dims[-1])."""
+    rows = _offset_ids(cfg, sparse_ids)
+    emb = params["table"][rows]
+    deep_in = jnp.concatenate(
+        [emb.reshape(emb.shape[0], -1), dense_feats], axis=-1
+    )
+    h = deep_in
+    for w, b in zip(params["mlp_w"][:-1], params["mlp_b"][:-1]):
+        h = jax.nn.relu(jnp.einsum("bd,df->bf", h, w) + b)
+    return h                                               # (B, mlp_dims[-1])
+
+
+def make_retrieval_scorer(cfg: WideDeepConfig):
+    """Score ONE query against C candidate vectors with a single matmul."""
+
+    def score(params, sparse_ids, dense_feats, candidates):
+        # sparse_ids (1, F); candidates (C, mlp_dims[-1])
+        q = user_tower(cfg, params, sparse_ids, dense_feats)   # (1, D)
+        return jnp.einsum("bd,cd->bc", q, candidates)[0]       # (C,)
+
+    return score

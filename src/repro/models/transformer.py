@@ -1,0 +1,717 @@
+"""Decoder-only transformer family covering the assigned LM archs.
+
+Attention variants (selected per config):
+  * ``gqa``  — grouped-query attention with RoPE (granite, moonshot,
+               stablelm; danube sets ``window`` = sliding-window attention)
+  * ``mla``  — multi-head latent attention (minicpm3): queries/keys/values
+               projected through low-rank latents; the KV cache stores only
+               the compressed latent + shared rope key (DeepSeek-V2 style).
+
+FFN variants: dense SwiGLU, or mixture-of-experts (GShard-style capacity
+dispatch entirely in einsums, shardable over an expert axis).
+
+Layers are scanned (stacked params) so the HLO is O(1) in depth — essential
+for 62-layer configs compiled for 512 devices.
+
+Serving uses FIXED-length cache buffers + ``dynamic_update_slice`` (one
+compiled program serves every position), masked by absolute position:
+  ``train_step``   — loss + grads + AdamW update (train_4k cells)
+  ``prefill``      — full-sequence forward returning logits + cache
+  ``decode_step``  — one-token step against a cache (decode/long cells)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    apply_rope,
+    dense_init,
+    embed_init,
+    rms_norm,
+    softmax_cross_entropy,
+)
+from repro.parallel.hints import BATCH, TP, shard_hint
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    n_shared: int = 0             # shared (always-on) experts
+    group_size: int = 1024        # GShard dispatch group (see _moe_ffn)
+    # Pad the expert count so it divides the expert-parallel mesh axis
+    # (e.g. granite's 40e → 48 on a 16-way axis).  Padded experts get
+    # -inf router logits and are never routed; their weights are dead
+    # rows that let BOTH the weights and the (g,e,c,d) activation blocks
+    # shard over the model axis (ff-TP keeps all E per device otherwise).
+    pad_experts_to: Optional[int] = None
+
+    @property
+    def padded_experts(self) -> int:
+        return max(self.num_experts, self.pad_experts_to or 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    d_head_nope: int = 64
+    d_head_rope: int = 32
+    d_head_v: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None          # default d_model // n_heads
+    attention: str = "gqa"                # "gqa" | "mla"
+    window: Optional[int] = None          # sliding-window size (SWA)
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    rope_theta: float = 10000.0
+    dtype: Any = jnp.bfloat16
+    remat: bool = True                    # activation checkpoint per layer
+    # MLA serving: absorb W_uk/W_uv into q/out projections so decode runs
+    # in the latent space (no per-step per-head K/V decompression).
+    mla_absorbed: bool = True
+    # Query-chunked attention (scan over query blocks): caps the live
+    # (b, h, chunk, Lk) score tensor — the XLA-level flash attention.
+    # None disables; used when Lq > attn_chunk and Lq % attn_chunk == 0.
+    attn_chunk: Optional[int] = 1024
+    # Chunked cross-entropy: the training loss projects hidden states to
+    # logits chunk-by-chunk (rematted), so the (B·L, V) fp32 logits are
+    # never materialized.  Opt-in (None = full-logit CE): measured on the
+    # dry-run metric it did NOT reduce per-device temp (XLA stacked the
+    # chunk inputs and cotangents instead — EXPERIMENTS §Perf, refuted).
+    ce_chunk: Optional[int] = None
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded to a 128 multiple: TPU lane alignment AND the
+        divisibility pjit needs to shard embeddings over the model axis.
+        ``param_count`` keeps the true vocab; padded logit columns are
+        masked to -inf before the loss/sampler sees them."""
+        return ((self.vocab + 127) // 128) * 128
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if serve memory is o(L) in context length (SWA ring cache)."""
+        return self.window is not None
+
+    def param_count(self) -> int:
+        """Total parameters (for 6·N·D roofline bookkeeping)."""
+        d, v = self.d_model, self.vocab
+        hd = self.head_dim
+        if self.attention == "mla":
+            m = self.mla or MLAConfig()
+            attn = (
+                d * m.q_lora_rank
+                + m.q_lora_rank * self.n_heads * (m.d_head_nope + m.d_head_rope)
+                + d * (m.kv_lora_rank + m.d_head_rope)
+                + m.kv_lora_rank * self.n_heads * (m.d_head_nope + m.d_head_v)
+                + self.n_heads * m.d_head_v * d
+            )
+        else:
+            attn = (
+                d * self.n_heads * hd
+                + 2 * d * self.n_kv_heads * hd
+                + self.n_heads * hd * d
+            )
+        if self.moe is not None:
+            ffn = (
+                d * self.moe.num_experts
+                + (self.moe.num_experts + self.moe.n_shared)
+                * 3 * d * self.moe.d_ff_expert
+            )
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        return v * d + self.n_layers * per_layer + d + d * v
+
+    def active_param_count(self) -> int:
+        """Activated parameters per token (MoE: only routed experts)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        unused = (
+            self.moe.num_experts - self.moe.top_k
+        ) * 3 * self.d_model * self.moe.d_ff_expert
+        return full - self.n_layers * unused
+
+
+# ---------------------------------------------------------------- params
+def init_params(cfg: TransformerConfig, key: jax.Array) -> PyTree:
+    d, hd = cfg.d_model, cfg.head_dim
+    keys = jax.random.split(key, 16)
+    L = cfg.n_layers
+
+    def stack(f, k):
+        if L == 0:          # cost-probe configs: empty layer stack
+            single = jax.eval_shape(f, k)
+            return jnp.zeros((0,) + single.shape, single.dtype)
+        ks = jax.random.split(k, L)
+        return jax.vmap(f)(ks)
+
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.padded_vocab, d, cfg.dtype),
+        "final_norm": jnp.ones((d,), cfg.dtype),
+        "lm_head": dense_init(keys[1], d, cfg.padded_vocab, cfg.dtype),
+    }
+    if cfg.attention == "mla":
+        m = cfg.mla or MLAConfig()
+        layers = {
+            "norm_attn": jnp.ones((L, d), cfg.dtype),
+            "norm_ffn": jnp.ones((L, d), cfg.dtype),
+            "q_a": stack(lambda k: dense_init(k, d, m.q_lora_rank, cfg.dtype), keys[2]),
+            "q_a_norm": jnp.ones((L, m.q_lora_rank), cfg.dtype),
+            "q_b": stack(
+                lambda k: dense_init(
+                    k, m.q_lora_rank,
+                    cfg.n_heads * (m.d_head_nope + m.d_head_rope), cfg.dtype
+                ),
+                keys[3],
+            ),
+            "kv_a": stack(
+                lambda k: dense_init(
+                    k, d, m.kv_lora_rank + m.d_head_rope, cfg.dtype
+                ),
+                keys[4],
+            ),
+            "kv_a_norm": jnp.ones((L, m.kv_lora_rank), cfg.dtype),
+            "kv_b": stack(
+                lambda k: dense_init(
+                    k, m.kv_lora_rank,
+                    cfg.n_heads * (m.d_head_nope + m.d_head_v), cfg.dtype
+                ),
+                keys[5],
+            ),
+            "o": stack(
+                lambda k: dense_init(k, cfg.n_heads * m.d_head_v, d, cfg.dtype),
+                keys[6],
+            ),
+        }
+    else:
+        layers = {
+            "norm_attn": jnp.ones((L, d), cfg.dtype),
+            "norm_ffn": jnp.ones((L, d), cfg.dtype),
+            "wq": stack(lambda k: dense_init(k, d, cfg.n_heads * hd, cfg.dtype), keys[2]),
+            "wk": stack(lambda k: dense_init(k, d, cfg.n_kv_heads * hd, cfg.dtype), keys[3]),
+            "wv": stack(lambda k: dense_init(k, d, cfg.n_kv_heads * hd, cfg.dtype), keys[4]),
+            "wo": stack(lambda k: dense_init(k, cfg.n_heads * hd, d, cfg.dtype), keys[5]),
+        }
+    if cfg.moe is not None:
+        e, ff = cfg.moe.padded_experts, cfg.moe.d_ff_expert
+
+        def expert_stack(k, fan_in, fan_out):
+            if L == 0:
+                return jnp.zeros((0, e, fan_in, fan_out), cfg.dtype)
+            ks = jax.random.split(k, L)
+            return jax.vmap(
+                lambda kk: jax.vmap(
+                    lambda k3: dense_init(k3, fan_in, fan_out, cfg.dtype)
+                )(jax.random.split(kk, e))
+            )(ks)
+
+        layers.update({
+            "router": stack(lambda k: dense_init(k, d, e, cfg.dtype), keys[7]),  # e = padded
+            "w_gate": expert_stack(keys[8], d, ff),                  # (L,E,d,ff)
+            "w_up": expert_stack(keys[9], d, ff),
+            "w_down": jnp.swapaxes(expert_stack(keys[10], d, ff), -1, -2),
+        })
+        if cfg.moe.n_shared:
+            sff = ff * cfg.moe.n_shared
+            layers.update({
+                "shared_gate": stack(lambda k: dense_init(k, d, sff, cfg.dtype), keys[11]),
+                "shared_up": stack(lambda k: dense_init(k, d, sff, cfg.dtype), keys[12]),
+                "shared_down": stack(lambda k: dense_init(k, sff, d, cfg.dtype), keys[13]),
+            })
+    else:
+        layers.update({
+            "w_gate": stack(lambda k: dense_init(k, d, cfg.d_ff, cfg.dtype), keys[7]),
+            "w_up": stack(lambda k: dense_init(k, d, cfg.d_ff, cfg.dtype), keys[8]),
+            "w_down": stack(lambda k: dense_init(k, cfg.d_ff, d, cfg.dtype), keys[9]),
+        })
+    params["layers"] = layers
+    return params
+
+
+# ------------------------------------------------------------- attention
+def _mask_for(l: int, lk: int, q_pos: jax.Array, window: Optional[int]):
+    """(l, lk) bool mask from absolute query positions (traced OK)."""
+    k_pos = jnp.arange(lk)
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def _chunked_softmax_attn(cfg, q_list, k_list, v_ctx, q_pos, scale):
+    """Masked softmax attention with optional query chunking.
+
+    ``q_list``/``k_list`` are matching lists of (query, key) tensor pairs
+    whose score contributions are summed — one pair for GQA
+    ((b,l,h,e)·(b,m,h,e)), two for MLA (nope-latent + rope).  ``v_ctx`` is
+    (b, m, h, e) or (b, m, r).  Scores for a chunk are (b, h, c, m) fp32 —
+    chunking caps the live score buffer at c·m instead of l·m, which is
+    what lets 32k-token cells fit HBM (§Perf hillclimb 2 v5).  On TPU the
+    Pallas flash kernel replaces this for serving; this path keeps the
+    backward pass free for training.
+    """
+
+    def score(qc, q_pos_c):
+        sc = None
+        for qq, kk in zip(qc, k_list):
+            contract = "bchx,bmhx->bhcm" if kk.ndim == 4 else "bchx,bmx->bhcm"
+            term = jnp.einsum(contract, qq, kk,
+                              preferred_element_type=jnp.float32)
+            sc = term if sc is None else sc + term
+        sc = sc * scale
+        lk = k_list[0].shape[1]
+        mask = _mask_for(qc[0].shape[1], lk, q_pos_c, cfg.window)
+        sc = jnp.where(mask[None, None], sc, -1e30)
+        p = jax.nn.softmax(sc, axis=-1)
+        contract = "bhcm,bmhx->bchx" if v_ctx.ndim == 4 else "bhcm,bmx->bchx"
+        return jnp.einsum(
+            contract, p, v_ctx.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    l = q_list[0].shape[1]
+    chunk = cfg.attn_chunk
+    if not chunk or l <= chunk or l % chunk:
+        return score(q_list, q_pos)
+
+    n_c = l // chunk
+
+    # remat the chunk: without it the scan's backward saves every chunk's
+    # fp32 softmax — stacked across chunks that is the full (b,h,l,m)
+    # score tensor again (~26GB/device at 4k×1M-token train), defeating
+    # the chunking.  Recompute-in-backward caps live scores at one chunk.
+    score_ckpt = jax.checkpoint(score)
+
+    def body(carry, xs):
+        qs, qp = xs
+        return carry, score_ckpt(list(qs), qp)
+
+    qs_chunked = tuple(
+        q.reshape(q.shape[0], n_c, chunk, *q.shape[2:]).swapaxes(0, 1)
+        for q in q_list
+    )
+    qp_chunked = q_pos.reshape(n_c, chunk)
+    _, out = jax.lax.scan(body, None, (qs_chunked, qp_chunked))
+    # out: (n_c, b, chunk, h, x) → (b, l, h, x)
+    out = out.swapaxes(0, 1).reshape(out.shape[1], l, *out.shape[3:])
+    return out
+
+
+def _gqa_attention(
+    cfg: TransformerConfig,
+    lp: PyTree,
+    x: jax.Array,                 # (B, L, d)
+    q_pos: jax.Array,             # (L,) absolute positions (traced)
+    cache: Optional[jax.Array],   # (2, B, S, hkv, hd) fixed buffer or None
+    cache_pos,                    # scalar: where to write this block
+):
+    b, l, d = x.shape
+    hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = shard_hint(
+        jnp.einsum("bld,dh->blh", x, lp["wq"]).reshape(b, l, hq, hd),
+        BATCH, None, TP, None,
+    )
+    k = shard_hint(
+        jnp.einsum("bld,dh->blh", x, lp["wk"]).reshape(b, l, hkv, hd),
+        BATCH, None, TP, None,
+    )
+    v = shard_hint(
+        jnp.einsum("bld,dh->blh", x, lp["wv"]).reshape(b, l, hkv, hd),
+        BATCH, None, TP, None,
+    )
+    q = apply_rope(q.swapaxes(1, 2), q_pos[None, None, :], cfg.rope_theta).swapaxes(1, 2)
+    k = apply_rope(k.swapaxes(1, 2), q_pos[None, None, :], cfg.rope_theta).swapaxes(1, 2)
+    if cache is not None:
+        kc = jax.lax.dynamic_update_slice(cache[0], k, (0, cache_pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache[1], v, (0, cache_pos, 0, 0))
+        k_full, v_full = kc, vc
+        new_cache = jnp.stack([kc, vc], axis=0)
+    else:
+        k_full, v_full = k, v
+        new_cache = None
+    group = hq // hkv
+    kr = jnp.repeat(k_full, group, axis=2)
+    vr = jnp.repeat(v_full, group, axis=2)
+    # sequence-parallel keys: heads rarely divide the TP axis (24 vs 16),
+    # so shard the KEY/VALUE sequence axis instead — scores become
+    # (b, h, c, m/TP) and softmax runs distributed over the key shards.
+    kr = shard_hint(kr, BATCH, TP, None, None)
+    vr = shard_hint(vr, BATCH, TP, None, None)
+    scale = 1.0 / (hd ** 0.5)
+    o = _chunked_softmax_attn(
+        cfg, [q], [kr], vr, q_pos, scale
+    ).astype(x.dtype).reshape(b, l, hq * hd)
+    return jnp.einsum("blh,hd->bld", o, lp["wo"]), new_cache
+
+
+def _mla_attention(
+    cfg: TransformerConfig,
+    lp: PyTree,
+    x: jax.Array,
+    q_pos: jax.Array,
+    cache: Optional[jax.Array],   # (B, S, kv_rank + d_rope) or None
+    cache_pos,
+):
+    m = cfg.mla or MLAConfig()
+    b, l, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = m.d_head_nope, m.d_head_rope, m.d_head_v
+    qa = rms_norm(jnp.einsum("bld,dr->blr", x, lp["q_a"]), lp["q_a_norm"])
+    qb = jnp.einsum("blr,rh->blh", qa, lp["q_b"]).reshape(b, l, h, dn + dr)
+    q_nope, q_rope = qb[..., :dn], qb[..., dn:]
+    q_rope = apply_rope(
+        q_rope.swapaxes(1, 2), q_pos[None, None, :], cfg.rope_theta
+    ).swapaxes(1, 2)
+    kva = jnp.einsum("bld,dr->blr", x, lp["kv_a"])
+    c_kv = rms_norm(kva[..., : m.kv_lora_rank], lp["kv_a_norm"])
+    k_rope = apply_rope(
+        kva[..., m.kv_lora_rank:][:, None], q_pos[None, None, :],
+        cfg.rope_theta,
+    )[:, 0]                                           # (B, L, dr)
+    latent = jnp.concatenate([c_kv, k_rope], axis=-1)
+    if cache is not None:
+        latent_full = jax.lax.dynamic_update_slice(
+            cache, latent, (0, cache_pos, 0)
+        )
+        new_cache = latent_full
+    else:
+        latent_full = latent
+        new_cache = None
+    lk = latent_full.shape[1]
+    c_full = latent_full[..., : m.kv_lora_rank]
+    krope_full = latent_full[..., m.kv_lora_rank:]
+    scale = 1.0 / ((dn + dr) ** 0.5)
+
+    if cfg.mla_absorbed and cache is not None:
+        # DeepSeek-V2 "absorbed" serving path: fold W_uk into the query and
+        # W_uv into the output so attention runs in the rank-r latent
+        # space.  The naive path below decompresses per-head K/V for ALL
+        # cache positions on every step — a (b, lk, h, dn+dv) intermediate
+        # and 2·b·lk·r·h·(dn+dv) FLOPs per token; absorbed needs neither
+        # (§Perf hillclimb 3).
+        kvb_w = lp["kv_b"].reshape(m.kv_lora_rank, h, dn + dv)
+        w_uk, w_uv = kvb_w[..., :dn], kvb_w[..., dn:]
+        q_abs = jnp.einsum("blhe,rhe->blhr", q_nope, w_uk)   # (b,l,h,r)
+        ctx = _chunked_softmax_attn(
+            cfg, [q_abs, q_rope], [c_full, krope_full], c_full, q_pos, scale
+        ).astype(x.dtype)                                    # (b,l,h,r)
+        o = jnp.einsum("blhr,rhe->blhe", ctx, w_uv).reshape(b, l, h * dv)
+        return jnp.einsum("blh,hd->bld", o, lp["o"]), new_cache
+
+    kvb = jnp.einsum("bmr,rh->bmh", c_full, lp["kv_b"]).reshape(
+        b, lk, h, dn + dv
+    )
+    k_nope, v_lat = kvb[..., :dn], kvb[..., dn:]
+    o = _chunked_softmax_attn(
+        cfg, [q_nope, q_rope], [k_nope, krope_full], v_lat, q_pos, scale
+    ).astype(x.dtype).reshape(b, l, h * dv)
+    return jnp.einsum("blh,hd->bld", o, lp["o"]), new_cache
+
+
+# ------------------------------------------------------------------ MoE
+def _moe_ffn(cfg: TransformerConfig, lp: PyTree, x: jax.Array) -> jax.Array:
+    """GShard-style grouped capacity dispatch, all einsums.
+
+    Tokens are split into groups of ``group_size`` before the one-hot
+    dispatch (GShard's G axis): a flat dispatch matmul over T global
+    tokens costs 1.25·T²·k·d FLOPs — quadratic in T, ~500× the expert
+    FLOPs at T=1M — while grouped dispatch costs 1.25·T·g·k·d, a small
+    constant factor of the expert compute for g≈1k.  The group axis also
+    carries the data-parallel sharding; experts shard over the model axis
+    (EP) with an all-to-all materializing (g, e, c, d) blocks.
+    """
+    moe = cfg.moe
+    b, l, d = x.shape
+    t = b * l
+    g_sz = min(moe.group_size, t)
+    n_g = t // g_sz
+    assert n_g * g_sz == t, f"tokens {t} not divisible by group {g_sz}"
+    xt = shard_hint(x.reshape(n_g, g_sz, d), BATCH, None, None)
+    logits = jnp.einsum("gtd,de->gte", xt, lp["router"]).astype(jnp.float32)
+    e = moe.padded_experts
+    if e != moe.num_experts:   # mask padded experts out of routing
+        dead = jnp.arange(e) >= moe.num_experts
+        logits = jnp.where(dead[None, None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, moe.top_k)       # (g, t, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9
+    )
+    # capacity is a property of the REAL expert count — padding must not
+    # change which tokens are dropped
+    cap = max(1, int(moe.capacity_factor * g_sz * moe.top_k
+                     / moe.num_experts))
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)       # (g, t, k, e)
+    flat = onehot.reshape(n_g, g_sz * moe.top_k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1                          # (g, t*k, e)
+    pos = (pos * flat).sum(axis=-1).reshape(n_g, g_sz, moe.top_k)
+    keep = pos < cap
+    disp = (
+        jax.nn.one_hot(gate_idx, e, dtype=x.dtype)
+        * keep[..., None].astype(x.dtype)
+    )                                                           # (g, t, k, e)
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=x.dtype)            # (g, t, k, c)
+    # contraction over k via explicit batched dot_general: an einsum here
+    # can lower to a broadcast (g,t,k,e,c) intermediate — 17 GB/device at
+    # this cell's shapes (measured) — instead of a tiny batched GEMM.
+    gt = n_g * g_sz
+
+    def _k_contract(a, b):                                      # (gt,k,e)x(gt,k,c)
+        out = jax.lax.dot_general(
+            a.reshape(gt, moe.top_k, e),
+            b.reshape(gt, moe.top_k, cap),
+            (((1,), (1,)), ((0,), (0,))),
+        )
+        return out.reshape(n_g, g_sz, e, cap)
+
+    dispatch = shard_hint(
+        _k_contract(disp, pos_oh),                              # (g, t, e, c)
+        BATCH, None, TP, None,
+    )
+    combine = shard_hint(
+        _k_contract(disp * gate_vals.astype(x.dtype)[..., None], pos_oh),
+        BATCH, None, TP, None,
+    )
+    x_e = shard_hint(
+        jnp.einsum("gtec,gtd->gecd", dispatch, xt),             # (g, e, c, d)
+        BATCH, TP, None, None,
+    )
+    hg = jnp.einsum("gecd,edf->gecf", x_e, lp["w_gate"])
+    hu = jnp.einsum("gecd,edf->gecf", x_e, lp["w_up"])
+    h = jax.nn.silu(hg.astype(jnp.float32)).astype(x.dtype) * hu
+    y_e = shard_hint(
+        jnp.einsum("gecf,efd->gecd", h, lp["w_down"]),
+        BATCH, TP, None, None,
+    )
+    out = shard_hint(
+        jnp.einsum("gtec,gecd->gtd", combine, y_e), BATCH, None, None
+    )
+    if moe.n_shared:
+        sg = jnp.einsum("gtd,df->gtf", xt, lp["shared_gate"])
+        su = jnp.einsum("gtd,df->gtf", xt, lp["shared_up"])
+        sh = jax.nn.silu(sg.astype(jnp.float32)).astype(x.dtype) * su
+        out = out + jnp.einsum("gtf,fd->gtd", sh, lp["shared_down"])
+    return out.reshape(b, l, d)
+
+
+def _dense_ffn(lp: PyTree, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("bld,df->blf", x, lp["w_gate"])
+    u = jnp.einsum("bld,df->blf", x, lp["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("blf,fd->bld", h, lp["w_down"])
+
+
+# ---------------------------------------------------------------- forward
+def _layer(cfg: TransformerConfig, lp: PyTree, x, q_pos, cache, cache_pos):
+    x = shard_hint(x, BATCH, None, None)
+    attn_fn = _mla_attention if cfg.attention == "mla" else _gqa_attention
+    h, new_cache = attn_fn(
+        cfg, lp, rms_norm(x, lp["norm_attn"]), q_pos, cache, cache_pos
+    )
+    x = shard_hint(x + h, BATCH, None, None)
+    ffn_in = rms_norm(x, lp["norm_ffn"])
+    ffn = _moe_ffn(cfg, lp, ffn_in) if cfg.moe is not None else _dense_ffn(lp, ffn_in)
+    return shard_hint(x + ffn, BATCH, None, None), new_cache
+
+
+def forward(
+    cfg: TransformerConfig,
+    params: PyTree,
+    tokens: jax.Array,                       # (B, L)
+    *,
+    caches: Optional[PyTree] = None,         # stacked fixed buffers or None
+    cache_pos=0,                             # write offset == query offset
+) -> Tuple[jax.Array, Optional[PyTree]]:
+    b, l = tokens.shape
+    x = shard_hint(params["embed"][tokens], BATCH, None, None)
+    q_pos = jnp.arange(l) + cache_pos
+
+    if caches is None:
+        layer_fn = _layer
+        if cfg.remat:
+            layer_fn = jax.checkpoint(
+                _layer, static_argnums=(0,),
+                policy=jax.checkpoint_policies.nothing_saveable,
+            )
+
+        def body(carry, lp):
+            h, _ = layer_fn(cfg, lp, carry, q_pos, None, 0)
+            return h, None
+
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        caches_out = None
+    else:
+        def body(carry, scanned):
+            lp, cache = scanned
+            h, cache_out = _layer(cfg, lp, carry, q_pos, cache, cache_pos)
+            return h, cache_out
+
+        x, caches_out = jax.lax.scan(body, x, (params["layers"], caches))
+
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bld,dv->blv", x, params["lm_head"])
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    return logits, caches_out
+
+
+# --------------------------------------------------------------- entry points
+def hidden_states(cfg: TransformerConfig, params: PyTree, tokens: jax.Array):
+    """Forward pass up to the final norm — no unembedding."""
+    b, l = tokens.shape
+    x = shard_hint(params["embed"][tokens], BATCH, None, None)
+    q_pos = jnp.arange(l)
+
+    layer_fn = _layer
+    if cfg.remat:
+        layer_fn = jax.checkpoint(
+            _layer, static_argnums=(0,),
+            policy=jax.checkpoint_policies.nothing_saveable,
+        )
+
+    def body(carry, lp):
+        h, _ = layer_fn(cfg, lp, carry, q_pos, None, 0)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return rms_norm(x, params["final_norm"])
+
+
+def chunked_ce_loss(cfg, params, tokens, labels):
+    """CE computed chunk-by-chunk over tokens: logits for a chunk are
+    projected, reduced, and (being rematted) never stored for backward —
+    the peak live logit buffer is (ce_chunk, V) instead of (B·L, V)."""
+    x = hidden_states(cfg, params, tokens)
+    b, l, d = x.shape
+    t = b * l
+    xt = x.reshape(t, d)
+    yt = labels.reshape(t)
+    chunk = cfg.ce_chunk
+    if not chunk or t <= chunk or t % chunk:
+        logits = jnp.einsum("td,dv->tv", xt, params["lm_head"])
+        if cfg.padded_vocab != cfg.vocab:
+            pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+            logits = jnp.where(pad[None, :], -1e30, logits)
+        return softmax_cross_entropy(logits, yt)
+
+    n_c = t // chunk
+    xc = xt.reshape(n_c, chunk, d)
+    yc = yt.reshape(n_c, chunk)
+
+    @jax.checkpoint
+    def chunk_ce(args):
+        xs, ys = args
+        logits = jnp.einsum(
+            "td,dv->tv", xs, params["lm_head"]
+        ).astype(jnp.float32)
+        if cfg.padded_vocab != cfg.vocab:
+            pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+            logits = jnp.where(pad[None, :], -1e30, logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ys[:, None], axis=-1)[:, 0]
+        return jnp.sum(logz - gold)
+
+    def body(acc, args):
+        return acc + chunk_ce(args), None
+
+    total, _ = jax.lax.scan(body, jnp.asarray(0.0, jnp.float32), (xc, yc))
+    return total / t
+
+
+def loss_fn(cfg, params, tokens, labels):
+    if cfg.ce_chunk:
+        return chunked_ce_loss(cfg, params, tokens, labels)
+    logits, _ = forward(cfg, params, tokens)
+    return softmax_cross_entropy(logits, labels)
+
+
+def make_train_step(cfg: TransformerConfig, optimizer):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch["tokens"], batch["labels"])
+        )(params)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill(cfg: TransformerConfig):
+    """Full-sequence forward + cache build (prefill_32k cells)."""
+
+    def prefill(params, tokens, caches):
+        logits, caches = forward(cfg, params, tokens, caches=caches,
+                                 cache_pos=0)
+        return logits[:, -1], caches
+
+    return prefill
+
+
+def make_decode_step(cfg: TransformerConfig):
+    """One-token decode against stacked fixed-length caches.
+
+    GQA cache: (L, 2, B, S, hkv, hd); MLA: (L, B, S, kv_rank+d_rope).
+    ``cache_len`` is a traced scalar — one compiled program serves every
+    position.
+    """
+
+    def decode_step(params, caches, token, cache_len):
+        logits, new_caches = forward(
+            cfg, params, token, caches=caches, cache_pos=cache_len
+        )
+        return logits[:, -1], new_caches
+
+    return decode_step
+
+
+def init_cache(cfg: TransformerConfig, batch: int, length: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    if cfg.attention == "mla":
+        m = cfg.mla or MLAConfig()
+        return jnp.zeros(
+            (cfg.n_layers, batch, length, m.kv_lora_rank + m.d_head_rope),
+            dtype,
+        )
+    return jnp.zeros(
+        (cfg.n_layers, 2, batch, length, cfg.n_kv_heads, cfg.head_dim), dtype
+    )
+
+
+def cache_spec(cfg: TransformerConfig, batch: int, length: int, dtype=None):
+    """ShapeDtypeStruct stand-in for the cache (dry-run input spec)."""
+    dtype = dtype or cfg.dtype
+    if cfg.attention == "mla":
+        m = cfg.mla or MLAConfig()
+        return jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, length, m.kv_lora_rank + m.d_head_rope),
+            dtype,
+        )
+    return jax.ShapeDtypeStruct(
+        (cfg.n_layers, 2, batch, length, cfg.n_kv_heads, cfg.head_dim), dtype
+    )

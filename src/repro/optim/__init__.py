@@ -1,0 +1,21 @@
+from repro.optim.optimizers import (
+    OptState,
+    adamw,
+    clip_by_global_norm,
+    sgd_momentum,
+)
+from repro.optim.schedules import (
+    constant,
+    cosine_decay,
+    linear_warmup_cosine,
+)
+
+__all__ = [
+    "OptState",
+    "adamw",
+    "clip_by_global_norm",
+    "constant",
+    "cosine_decay",
+    "linear_warmup_cosine",
+    "sgd_momentum",
+]

@@ -1,0 +1,131 @@
+"""Optimizers in pure JAX (no optax in this environment).
+
+Functional interface mirroring the usual gradient-transform style:
+
+    opt = adamw(lr_schedule, weight_decay=0.1)
+    state = opt.init(params)
+    params, state = opt.update(grads, state, params)
+
+State lives in fp32 regardless of param dtype (master-weights policy for
+bf16 training); the update casts back to the param dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: PyTree        # first moment (or momentum)
+    nu: Optional[PyTree]  # second moment (None for SGD)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, PyTree], Tuple[PyTree, OptState]]
+
+
+def _zeros_like_f32(params: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads
+    ), gnorm
+
+
+def adamw(
+    lr: Schedule | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    lr_fn: Schedule = (lambda s: jnp.asarray(lr, jnp.float32)) if not callable(lr) else lr
+
+    def init(params: PyTree) -> OptState:
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=_zeros_like_f32(params),
+            nu=_zeros_like_f32(params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_n = b1 * m + (1.0 - b1) * g32
+            v_n = b2 * v + (1.0 - b2) * jnp.square(g32)
+            mhat = m_n / b1c
+            vhat = v_n / b2c
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            delta = delta + weight_decay * p.astype(jnp.float32)
+            p_n = p.astype(jnp.float32) - lr_t * delta
+            return p_n.astype(p.dtype), m_n, v_n
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_v = tdef.flatten_up_to(state.nu)
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, OptState(step=step, mu=new_m, nu=new_v)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd_momentum(
+    lr: Schedule | float, *, momentum: float = 0.9, weight_decay: float = 0.0
+) -> Optimizer:
+    lr_fn: Schedule = (lambda s: jnp.asarray(lr, jnp.float32)) if not callable(lr) else lr
+
+    def init(params: PyTree) -> OptState:
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=_zeros_like_f32(params),
+            nu=None,
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m, p):
+            g32 = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            m_n = momentum * m + g32
+            p_n = p.astype(jnp.float32) - lr_t * m_n
+            return p_n.astype(p.dtype), m_n
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+        return (
+            tdef.unflatten([o[0] for o in out]),
+            OptState(step=step, mu=tdef.unflatten([o[1] for o in out]), nu=None),
+        )
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,176 @@
+"""Graph substrate: structures, segment ops, sampler, partitioner."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.graph import (
+    CSRAdjacency,
+    EdgeList,
+    NeighborSampler,
+    PaddedCSR,
+    balance_report,
+    edge_partition,
+    erdos_renyi,
+    node_partition,
+    relabel_to_local,
+    scatter_spmm,
+    segment_mean,
+    segment_softmax,
+    segment_sum,
+)
+
+
+def small_edges(seed=0, n=20, e=60):
+    return erdos_renyi(n, e, seed=seed)
+
+
+class TestEdgeList:
+    def test_dense_roundtrip(self):
+        edges = small_edges()
+        A = edges.to_dense()
+        back = EdgeList.from_dense(A)
+        np.testing.assert_allclose(back.to_dense(), A)
+
+    def test_symmetrize(self):
+        edges = small_edges()
+        sym = edges.symmetrized()
+        A = sym.to_dense()
+        # support is symmetric
+        np.testing.assert_array_equal(A > 0, (A > 0).T)
+
+    def test_self_loops(self):
+        edges = small_edges()
+        sl = edges.with_self_loops()
+        A = sl.to_dense()
+        assert (np.diag(A) > 0).all()
+
+    def test_pad_multiple(self):
+        edges = small_edges()
+        p = edges.pad_to_multiple(64)
+        assert p.num_edges % 64 == 0
+        np.testing.assert_allclose(p.to_dense(), edges.to_dense())
+
+    def test_degrees(self):
+        edges = small_edges()
+        assert edges.in_degrees().sum() == edges.num_edges
+        assert edges.out_degrees().sum() == edges.num_edges
+
+
+class TestPaddedCSR:
+    def test_matches_edgelist(self):
+        edges = small_edges()
+        csr = PaddedCSR.from_edgelist(edges)
+        A = edges.to_dense()
+        # reconstruct: row v sums w over its neighbor slots
+        n = edges.num_nodes
+        R = np.zeros((n, n), dtype=np.float32)
+        for v in range(n):
+            for k in range(csr.max_deg):
+                if csr.wgt[v, k] != 0:
+                    R[v, csr.nbr[v, k]] += csr.wgt[v, k]
+        np.testing.assert_allclose(R, A)
+
+    def test_truncation_cap(self):
+        edges = small_edges()
+        csr = PaddedCSR.from_edgelist(edges, max_deg=2)
+        assert csr.max_deg == 2
+        assert (csr.deg == edges.in_degrees()).all()
+
+
+class TestSegmentOps:
+    def test_scatter_spmm_equals_dense(self):
+        edges = small_edges()
+        A = edges.to_dense()
+        rng = np.random.default_rng(0)
+        F = rng.random((edges.num_nodes, 5)).astype(np.float32)
+        out = scatter_spmm(
+            jnp.asarray(edges.src), jnp.asarray(edges.dst),
+            jnp.asarray(edges.weights()), jnp.asarray(F), edges.num_nodes,
+        )
+        np.testing.assert_allclose(np.asarray(out), A @ F, rtol=1e-5)
+
+    def test_segment_mean(self):
+        data = jnp.asarray([[1.0], [3.0], [10.0]])
+        ids = jnp.asarray([0, 0, 2])
+        out = segment_mean(data, ids, 3)
+        np.testing.assert_allclose(np.asarray(out)[:, 0], [2.0, 0.0, 10.0])
+
+    def test_segment_softmax_sums_to_one(self):
+        rng = np.random.default_rng(1)
+        scores = jnp.asarray(rng.random(30).astype(np.float32))
+        ids = jnp.asarray(np.sort(rng.integers(0, 5, 30)))
+        sm = segment_softmax(scores, ids, 5)
+        sums = segment_sum(sm, ids, 5)
+        present = np.unique(np.asarray(ids))
+        np.testing.assert_allclose(np.asarray(sums)[present], 1.0, rtol=1e-5)
+
+
+class TestSampler:
+    def test_csr_adjacency(self):
+        edges = small_edges()
+        adj = CSRAdjacency.from_edgelist(edges)
+        assert adj.indptr[-1] == edges.num_edges
+        deg = adj.degree(np.arange(edges.num_nodes))
+        np.testing.assert_array_equal(deg, edges.in_degrees())
+
+    def test_sampled_neighbors_are_real(self):
+        edges = small_edges(n=50, e=400)
+        adj = CSRAdjacency.from_edgelist(edges)
+        A = (edges.to_dense() > 0)
+        sampler = NeighborSampler(adj, fanouts=[4, 3], seed=0)
+        seeds = np.array([1, 5, 9], dtype=np.int32)
+        sub = sampler.sample(seeds)
+        assert len(sub.blocks) == 2
+        for blk in sub.blocks:
+            for i, v in enumerate(blk.nodes):
+                for k in range(blk.nbr.shape[1]):
+                    if blk.mask[i, k]:
+                        assert A[v, blk.nbr[i, k]]
+
+    def test_relabel(self):
+        edges = small_edges(n=30, e=150)
+        adj = CSRAdjacency.from_edgelist(edges)
+        sampler = NeighborSampler(adj, fanouts=[3], seed=1)
+        sub = sampler.sample(np.array([0, 2], dtype=np.int32))
+        all_nodes, hops = relabel_to_local(sub)
+        fr, nbr, mask = hops[0]
+        # local indices map back to the right global ids
+        np.testing.assert_array_equal(all_nodes[fr], sub.blocks[0].nodes)
+        np.testing.assert_array_equal(
+            all_nodes[nbr][mask], sub.blocks[0].nbr[mask]
+        )
+
+    def test_zero_degree_masked(self):
+        # node with no in-neighbors must come back fully masked
+        edges = EdgeList(src=np.array([1]), dst=np.array([2]),
+                         w=None, num_nodes=4)
+        adj = CSRAdjacency.from_edgelist(edges)
+        sampler = NeighborSampler(adj, fanouts=[3], seed=0)
+        sub = sampler.sample(np.array([0], dtype=np.int32))
+        assert not sub.blocks[0].mask.any()
+
+
+class TestPartition:
+    def test_edge_partition_covers_all(self):
+        edges = small_edges(n=40, e=200)
+        shards = edge_partition(edges, 4)
+        assert shards.num_shards == 4
+        # padded entries have zero weight, so the dense sum matches
+        n = edges.num_nodes
+        A = np.zeros((n, n), dtype=np.float32)
+        for k in range(4):
+            np.add.at(A, (shards.dst[k], shards.src[k]), shards.w[k])
+        np.testing.assert_allclose(A, edges.to_dense())
+
+    def test_node_partition_bounds(self):
+        bands = node_partition(100, 8)
+        assert bands.bounds[0] == 0 and bands.bounds[-1] == 100
+        owner = bands.owner_of(np.arange(100))
+        assert (np.diff(owner) >= 0).all()
+        assert owner.max() == 7
+
+    def test_balance_report(self):
+        edges = small_edges(n=64, e=512)
+        ratio, counts = balance_report(edges, 4)
+        assert sum(counts) == edges.num_edges
+        assert ratio >= 1.0

@@ -1,0 +1,166 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import (
+    attention_ref,
+    csr_aggregate,
+    csr_aggregate_ref,
+    embedding_bag,
+    embedding_bag_ref,
+    flash_attention,
+    gqa_attention_op,
+    lp_round,
+    lp_round_op,
+    lp_round_ref,
+)
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-4, atol=5e-4
+    )
+
+
+class TestLPBlockSpmm:
+    @pytest.mark.parametrize("n,s", [(128, 128), (257, 130), (384, 96), (64, 640)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, n, s, dtype):
+        A = jnp.asarray(RNG.random((n, n)), dtype) / n
+        F = jnp.asarray(RNG.random((n, s)), dtype)
+        base = jnp.asarray(RNG.random((n, s)), dtype)
+        got = lp_round(A, F, base, c=0.36, bm=128, bs=128, bk=128,
+                       interpret=True)
+        want = lp_round_ref(A, F, base, 0.36)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **_tol(dtype),
+        )
+
+    @pytest.mark.parametrize("blocks", [(64, 64, 64), (128, 256, 128)])
+    def test_block_shape_invariance(self, blocks):
+        bm, bs, bk = blocks
+        n, s = 256, 256
+        A = jnp.asarray(RNG.random((n, n)), jnp.float32) / n
+        F = jnp.asarray(RNG.random((n, s)), jnp.float32)
+        base = jnp.zeros((n, s), jnp.float32)
+        got = lp_round(A, F, base, c=0.25, bm=bm, bs=bs, bk=bk, interpret=True)
+        want = lp_round_ref(A, F, base, 0.25)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_op_fallback_small(self):
+        n, s = 16, 8
+        A = jnp.asarray(RNG.random((n, n)), jnp.float32)
+        F = jnp.asarray(RNG.random((n, s)), jnp.float32)
+        base = jnp.asarray(RNG.random((n, s)), jnp.float32)
+        got = lp_round_op(A, F, base, c=0.1)
+        want = lp_round_ref(A, F, base, 0.1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+class TestCSRAggregate:
+    @pytest.mark.parametrize("n,d,s", [(128, 8, 32), (200, 11, 37), (256, 33, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, n, d, s, dtype):
+        nbr = jnp.asarray(RNG.integers(0, n, (n, d)).astype(np.int32))
+        wgt = jnp.asarray(
+            (RNG.random((n, d)) * (RNG.random((n, d)) < 0.7)), dtype
+        )
+        F = jnp.asarray(RNG.random((n, s)), dtype)
+        got = csr_aggregate(nbr, wgt, F, bn=64, bs=32, bd=8, interpret=True)
+        want = csr_aggregate_ref(nbr, wgt, F)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **_tol(dtype),
+        )
+
+    def test_matches_dense_spmm(self):
+        """CSR kernel ≡ dense A @ F when built from the same graph."""
+        from repro.graph import PaddedCSR, erdos_renyi
+
+        edges = erdos_renyi(150, 800, seed=3)
+        csr = PaddedCSR.from_edgelist(edges)
+        A = edges.to_dense()
+        F = RNG.random((150, 20)).astype(np.float32)
+        got = csr_aggregate(
+            jnp.asarray(csr.nbr), jnp.asarray(csr.wgt), jnp.asarray(F),
+            bn=64, bs=16, bd=8, interpret=True,
+        )
+        np.testing.assert_allclose(np.asarray(got), A @ F, rtol=1e-4, atol=1e-5)
+
+
+class TestEmbeddingBag:
+    @pytest.mark.parametrize("v,d,b,k", [
+        (1000, 32, 128, 5), (4096, 16, 300, 8), (512, 64, 64, 40),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, v, d, b, k, dtype):
+        tab = jnp.asarray(RNG.random((v, d)), dtype)
+        idx = jnp.asarray(RNG.integers(0, v, (b, k)).astype(np.int32))
+        w = jnp.asarray(RNG.random((b, k)), dtype)
+        got = embedding_bag(tab, idx, w, bb=64, bv=256, interpret=True)
+        want = embedding_bag_ref(tab, idx, w)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **_tol(dtype),
+        )
+
+    def test_panel_sweep_counts_each_index_once(self):
+        v, d = 100, 8
+        tab = jnp.asarray(np.eye(v, d).astype(np.float32))
+        idx = jnp.asarray(np.array([[3, 3, 3]], dtype=np.int32))
+        w = jnp.ones((1, 3), jnp.float32)
+        got = embedding_bag(tab, idx, w, bb=8, bv=16, interpret=True)
+        want = embedding_bag_ref(tab, idx, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,h,lq,lk,d,window,q_offset", [
+        (2, 4, 128, 128, 64, None, 0),     # causal prefill
+        (1, 2, 100, 100, 32, 48, 0),       # sliding window
+        (2, 2, 1, 256, 64, None, 255),     # single-token decode
+        (1, 3, 130, 200, 64, None, 70),    # chunked prefill (kv > q)
+        (1, 1, 64, 512, 128, 128, 448),    # windowed decode chunk
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, b, h, lq, lk, d, window, q_offset, dtype):
+        q = jnp.asarray(RNG.standard_normal((b, h, lq, d)), dtype)
+        k = jnp.asarray(RNG.standard_normal((b, h, lk, d)), dtype)
+        v = jnp.asarray(RNG.standard_normal((b, h, lk, d)), dtype)
+        got = flash_attention(q, k, v, causal=True, window=window,
+                              q_offset=q_offset, bq=64, bk=64, interpret=True)
+        want = attention_ref(q, k, v, causal=True, window=window,
+                             q_offset=q_offset)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **_tol(dtype),
+        )
+
+    def test_gqa_grouping(self):
+        b, hq, hkv, l, d = 1, 8, 2, 64, 32
+        q = jnp.asarray(RNG.standard_normal((b, hq, l, d)), jnp.float32)
+        k = jnp.asarray(RNG.standard_normal((b, hkv, l, d)), jnp.float32)
+        v = jnp.asarray(RNG.standard_normal((b, hkv, l, d)), jnp.float32)
+        got = gqa_attention_op(q, k, v, use_kernel=True, bq=32, bk=32)
+        want = attention_ref(
+            q, jnp.repeat(k, 4, axis=1), jnp.repeat(v, 4, axis=1)
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=5e-4)
+
+    def test_window_equals_full_when_large(self):
+        b, h, l, d = 1, 2, 96, 32
+        q = jnp.asarray(RNG.standard_normal((b, h, l, d)), jnp.float32)
+        k = jnp.asarray(RNG.standard_normal((b, h, l, d)), jnp.float32)
+        v = jnp.asarray(RNG.standard_normal((b, h, l, d)), jnp.float32)
+        full = flash_attention(q, k, v, causal=True, window=None,
+                               bq=32, bk=32, interpret=True)
+        win = flash_attention(q, k, v, causal=True, window=4 * l,
+                              bq=32, bk=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(win),
+                                   rtol=1e-6)

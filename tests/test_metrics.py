@@ -1,0 +1,102 @@
+"""Metric implementations (AUC / AUPR / BestACC) against hand-checked cases."""
+import numpy as np
+import pytest
+
+from repro.eval import (
+    auc_score,
+    aupr_score,
+    best_accuracy,
+    evaluate_predictions,
+    kfold_masks,
+)
+
+
+class TestAUC:
+    def test_perfect(self):
+        s = np.array([0.9, 0.8, 0.2, 0.1])
+        y = np.array([1, 1, 0, 0])
+        assert auc_score(s, y) == 1.0
+
+    def test_inverted(self):
+        s = np.array([0.1, 0.2, 0.8, 0.9])
+        y = np.array([1, 1, 0, 0])
+        assert auc_score(s, y) == 0.0
+
+    def test_random_is_half(self):
+        rng = np.random.default_rng(0)
+        s = rng.random(20000)
+        y = rng.random(20000) < 0.3
+        assert abs(auc_score(s, y) - 0.5) < 0.02
+
+    def test_ties_average(self):
+        s = np.array([0.5, 0.5, 0.5, 0.5])
+        y = np.array([1, 0, 1, 0])
+        assert auc_score(s, y) == pytest.approx(0.5)
+
+    def test_hand_case(self):
+        # scores 3>2>1; labels pos at 3 and 1: pairs (3,2)+, (1,2)- → 0.5
+        assert auc_score(np.array([3.0, 2.0, 1.0]),
+                         np.array([1, 0, 1])) == pytest.approx(0.5)
+
+
+class TestAUPR:
+    def test_perfect(self):
+        s = np.array([0.9, 0.8, 0.2, 0.1])
+        y = np.array([1, 1, 0, 0])
+        assert aupr_score(s, y) == 1.0
+
+    def test_hand_case(self):
+        # order: pos, neg, pos → AP = (1/1 + 2/3)/2
+        s = np.array([0.9, 0.5, 0.2])
+        y = np.array([1, 0, 1])
+        assert aupr_score(s, y) == pytest.approx((1.0 + 2.0 / 3.0) / 2.0)
+
+    def test_baseline_prevalence(self):
+        rng = np.random.default_rng(1)
+        s = rng.random(50000)
+        y = rng.random(50000) < 0.1
+        assert abs(aupr_score(s, y) - 0.1) < 0.02
+
+
+class TestBestAcc:
+    def test_perfect(self):
+        s = np.array([0.9, 0.8, 0.2, 0.1])
+        y = np.array([1, 1, 0, 0])
+        assert best_accuracy(s, y) == 1.0
+
+    def test_majority_floor(self):
+        # predicting all-negative is always available
+        s = np.array([0.9, 0.1, 0.2, 0.3])
+        y = np.array([0, 0, 0, 1])
+        assert best_accuracy(s, y) >= 0.75
+
+    def test_hand_case(self):
+        s = np.array([0.9, 0.8, 0.7])
+        y = np.array([0, 1, 1])
+        # thresholds: k=0 → 2/3? no: all-neg → 1/3... best is top-3 → 2/3
+        assert best_accuracy(s, y) == pytest.approx(2.0 / 3.0)
+
+
+class TestValidation:
+    def test_single_class_raises(self):
+        with pytest.raises(ValueError):
+            auc_score(np.array([1.0, 2.0]), np.array([1, 1]))
+
+    def test_evaluate_bundle(self):
+        s = np.array([0.9, 0.8, 0.2, 0.1])
+        y = np.array([1, 1, 0, 0])
+        m = evaluate_predictions(s, y)
+        assert set(m) == {"auc", "aupr", "best_acc"}
+
+
+class TestKFold:
+    def test_partition_covers_all_positives_once(self):
+        rng = np.random.default_rng(2)
+        R = (rng.random((20, 15)) < 0.2).astype(float)
+        masks = list(kfold_masks(R, k=5, seed=0))
+        assert len(masks) == 5
+        total = np.zeros_like(R, dtype=int)
+        for m in masks:
+            assert (R[m] > 0).all()  # only positives hidden
+            total += m.astype(int)
+        np.testing.assert_array_equal(total, (R > 0).astype(int))

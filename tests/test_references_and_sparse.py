@@ -1,0 +1,95 @@
+"""Baselines (MINProp/Heter-LP) and the sparse COO engine vs the dense one."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    HeteroLP,
+    HeteroNetwork,
+    LPConfig,
+    fixed_seed_solution,
+    minprop_single_seed,
+    run_all_seeds,
+)
+from repro.core.sparse import SparseHeteroLP
+
+
+def rand_net(seed=1, n=(10, 8, 6), density=0.35):
+    rng = np.random.default_rng(seed)
+    P = []
+    for ni in n:
+        a = (rng.random((ni, ni)) < density) * rng.random((ni, ni))
+        np.fill_diagonal(a, 0)
+        P.append((a + a.T) / 2)
+    R = {
+        (i, j): (rng.random((n[i], n[j])) < density).astype(float)
+        for (i, j) in [(0, 1), (0, 2), (1, 2)]
+    }
+    return HeteroNetwork(P=P, R=R)
+
+
+@pytest.fixture(scope="module")
+def net():
+    return rand_net()
+
+
+@pytest.fixture(scope="module")
+def norm(net):
+    return net.normalize()
+
+
+class TestReferences:
+    def test_minprop_single_seed_matches_closed_form(self, norm):
+        """Gauss–Seidel MINProp and Jacobi DHLP share the fixed point."""
+        H, M = norm.assemble_dense()
+        n = norm.num_nodes
+        y = np.zeros(n)
+        y[0] = 1.0
+        want = fixed_seed_solution(H, M, y[:, None], 0.5)[:, 0]
+        got = minprop_single_seed(
+            norm, y, alpha=0.5, sigma=1e-11, max_outer=3000, max_inner=3000
+        )
+        np.testing.assert_allclose(got.F, want, atol=1e-7)
+
+    def test_minprop_matches_dhlp1(self, net, norm):
+        r_ref = run_all_seeds(
+            norm, alg="minprop", sigma=1e-9,
+            seeds=np.eye(norm.num_nodes)[:, :3],
+            max_outer=3000, max_inner=3000,
+        )
+        r_d = HeteroLP(
+            LPConfig(alg="dhlp1", sigma=1e-7, max_iter=3000, max_inner=3000,
+                     hetero_scale=1.0)
+        ).run(net, seeds=np.eye(norm.num_nodes)[:, :3])
+        np.testing.assert_allclose(r_ref.F, r_d.F, atol=1e-5)
+
+    def test_heterlp_converges(self, norm):
+        r = run_all_seeds(
+            norm, alg="heterlp", sigma=1e-4,
+            seeds=np.eye(norm.num_nodes)[:, :2],
+        )
+        assert np.isfinite(r.F).all()
+
+
+class TestSparseEngine:
+    @pytest.mark.parametrize("alg", ["dhlp1", "dhlp2"])
+    def test_matches_dense(self, net, norm, alg):
+        cfg = LPConfig(alg=alg, seed_mode="fixed", sigma=1e-7,
+                       max_iter=3000, max_inner=300)
+        dense = HeteroLP(cfg).run(net)
+        sparse = SparseHeteroLP(cfg).run(norm, pad_mult=32)
+        np.testing.assert_allclose(dense.F, sparse.F, atol=1e-5)
+
+    def test_drift_mode_matches_dense(self, net, norm):
+        cfg = LPConfig(alg="dhlp2", sigma=1e-4)
+        dense = HeteroLP(cfg).run(net)
+        sparse = SparseHeteroLP(cfg).run(norm, pad_mult=32)
+        np.testing.assert_allclose(dense.F, sparse.F, atol=1e-5)
+
+    def test_seed_chunking(self, norm):
+        cfg = LPConfig(alg="dhlp2", seed_mode="fixed", sigma=1e-6,
+                       seed_chunk=7)
+        full = SparseHeteroLP(
+            LPConfig(alg="dhlp2", seed_mode="fixed", sigma=1e-6)
+        ).run(norm, pad_mult=32)
+        chunked = SparseHeteroLP(cfg).run(norm, pad_mult=32)
+        np.testing.assert_allclose(full.F, chunked.F, atol=1e-6)
