@@ -29,12 +29,12 @@ import numpy as np, jax
 from repro.core import HeteroNetwork, LPConfig
 from repro.data.drugnet import DrugNetSpec, make_drugnet
 from repro.parallel.lp_sharded import ShardedHeteroLP
+from repro.parallel.hints import make_mesh_compat
 
 dn = make_drugnet(DrugNetSpec(n_drug=48, n_disease=32, n_target=24,
                               n_clusters=6, seed=0))
 norm = dn.network.normalize()
-mesh = jax.make_mesh((1, %(dev)d), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh_compat((1, %(dev)d), ("data", "model"))
 cfg = LPConfig(alg="dhlp2", seed_mode="fixed", sigma=1e-5)
 solver = ShardedHeteroLP(cfg, stale_sync=%(stale)d)
 r = solver.run(norm, mesh)   # compile+run

@@ -1,6 +1,7 @@
 """Core library: the paper's contribution (DHLP-1/2) as composable modules."""
 from repro.core.closed_form import dhlp1_inner_solution, fixed_seed_solution
 from repro.core.network import (
+    GraphDelta,
     HeteroCOO,
     HeteroNetwork,
     NormalizedNetwork,
@@ -12,7 +13,13 @@ from repro.core.normalize import (
     spectral_radius_upper_bound,
     symmetric_normalize,
 )
-from repro.core.ranking import LPOutputs, extract_outputs, rank_of, symmetrize
+from repro.core.ranking import (
+    LPOutputs,
+    extract_outputs,
+    rank_of,
+    symmetrize,
+    topk_exclusive,
+)
 from repro.core.reference import (
     RefResult,
     heterlp_single_seed,
@@ -22,6 +29,7 @@ from repro.core.reference import (
 from repro.core.solver import HeteroLP, LPConfig, SolveResult
 
 __all__ = [
+    "GraphDelta",
     "HeteroCOO",
     "HeteroLP",
     "HeteroNetwork",
@@ -43,4 +51,5 @@ __all__ = [
     "spectral_radius_upper_bound",
     "symmetric_normalize",
     "symmetrize",
+    "topk_exclusive",
 ]

@@ -124,6 +124,68 @@ class HeteroNetwork:
             type_names=self.type_names,
         )
 
+    def apply_delta(self, delta: "GraphDelta") -> "HeteroNetwork":
+        """Return a new network with ``delta``'s edits applied.
+
+        The serving layer (``repro/serve``) uses this as its incremental
+        update path: apply, bump the network version, invalidate cached
+        label columns whose types the delta touches, and warm-start the
+        re-solve from the stale columns (DESIGN.md §9).
+        """
+        P = [p.copy() for p in self.P]
+        R = {k: v.copy() for k, v in self.R.items()}
+
+        # 1. grow blocks first so subsequent edge edits may target new nodes
+        for t, count in sorted(delta.add_nodes.items()):
+            if not 0 <= t < len(P):
+                raise ValueError(f"add_nodes: no such type {t}")
+            if count < 0:
+                raise ValueError("add_nodes count must be >= 0")
+            n_old = P[t].shape[0]
+            grown = np.zeros((n_old + count, n_old + count), dtype=np.float64)
+            grown[:n_old, :n_old] = P[t]
+            P[t] = grown
+            for (i, j) in list(R):
+                r = R[(i, j)]
+                if i == t:
+                    R[(i, j)] = np.concatenate(
+                        [r, np.zeros((count, r.shape[1]))], axis=0
+                    )
+                elif j == t:
+                    R[(i, j)] = np.concatenate(
+                        [r, np.zeros((r.shape[0], count))], axis=1
+                    )
+
+        # 2. similarity edits (kept symmetric; weight 0 removes the edge)
+        for t, u, v, w in delta.sim:
+            if not 0 <= t < len(P):
+                raise ValueError(f"sim edit: no such type {t}")
+            n = P[t].shape[0]
+            if not (0 <= u < n and 0 <= v < n):
+                raise ValueError(
+                    f"sim edit ({u}, {v}) out of range for type {t} (n={n})"
+                )
+            P[t][u, v] = w
+            P[t][v, u] = w
+
+        # 3. association edits (weight 0 removes the edge)
+        for pair, u, v, w in delta.assoc:
+            i, j = min(pair), max(pair)
+            if pair[0] > pair[1]:
+                u, v = v, u
+            if (i, j) not in R:
+                if not (0 <= i < len(P) and 0 <= j < len(P)):
+                    raise ValueError(f"assoc edit: no such pair {pair}")
+                R[(i, j)] = np.zeros((P[i].shape[0], P[j].shape[0]))
+            r = R[(i, j)]
+            if not (0 <= u < r.shape[0] and 0 <= v < r.shape[1]):
+                raise ValueError(
+                    f"assoc edit ({u}, {v}) out of range for {r.shape}"
+                )
+            r[u, v] = w
+
+        return HeteroNetwork(P=P, R=R, type_names=self.type_names)
+
     def with_masked_fold(
         self, pair: TypePair, mask: np.ndarray
     ) -> "HeteroNetwork":
@@ -138,6 +200,44 @@ class HeteroNetwork:
         R[(i, j)] = np.where(mask, 0.0, R[(i, j)])
         return HeteroNetwork(P=[p.copy() for p in self.P], R=R,
                              type_names=self.type_names)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphDelta:
+    """A batch of edits to a :class:`HeteroNetwork` (the online-update unit).
+
+    Attributes:
+      assoc: ``(pair, row, col, weight)`` association edits; ``row``/``col``
+        are local indices within the pair's blocks and ``weight == 0``
+        removes the edge.  Pairs are given in either orientation.
+      sim: ``(type, u, v, weight)`` similarity edits (applied symmetrically).
+      add_nodes: ``{type: count}`` — append ``count`` isolated nodes to the
+        end of the type's block (no re-indexing of existing nodes).
+    """
+
+    assoc: Tuple[Tuple[TypePair, int, int, float], ...] = ()
+    sim: Tuple[Tuple[int, int, int, float], ...] = ()
+    add_nodes: Mapping[int, int] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "assoc", tuple(tuple(e) for e in self.assoc))
+        object.__setattr__(self, "sim", tuple(tuple(e) for e in self.sim))
+        object.__setattr__(self, "add_nodes", dict(self.add_nodes))
+
+    @property
+    def is_empty(self) -> bool:
+        return not (self.assoc or self.sim or self.add_nodes)
+
+    def touched_types(self) -> frozenset:
+        """Types whose nodes the delta edits (serving's invalidation set)."""
+        out = set()
+        for (i, j), _, _, _ in self.assoc:
+            out.add(i)
+            out.add(j)
+        for t, _, _, _ in self.sim:
+            out.add(t)
+        out.update(self.add_nodes)
+        return frozenset(out)
 
 
 @dataclasses.dataclass

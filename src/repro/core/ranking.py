@@ -12,7 +12,7 @@ The paper symmetrizes mutual labels in the last superstep
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -61,6 +61,38 @@ def extract_outputs(F: np.ndarray, norm: NormalizedNetwork) -> LPOutputs:
         for j in range(i + 1, norm.num_types):
             inters[(i, j)] = out[sl[i], sl[j]].copy()
     return LPOutputs(similarities=sims, interactions=inters)
+
+
+def topk_exclusive(
+    scores: np.ndarray,
+    top_k: int,
+    exclude: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Indices of the ``top_k`` highest scores, skipping ``exclude``.
+
+    The serving front-end's ranking step: candidate lists for drug
+    repositioning must *exclude* the already-known associations (they would
+    trivially top the list — the paper's Tables 3/4 rank the held-out /
+    novel candidates).  ``exclude`` is an index array or boolean mask over
+    ``scores``; ties break stably by index like :func:`rank_of`.
+    """
+    scores = np.asarray(scores, dtype=np.float64)
+    if scores.ndim != 1:
+        raise ValueError(f"scores must be 1-D, got {scores.shape}")
+    keep = np.ones(scores.shape[0], dtype=bool)
+    if exclude is not None:
+        exclude = np.asarray(exclude)
+        if exclude.dtype == bool:
+            if exclude.shape != scores.shape:
+                raise ValueError(
+                    f"boolean exclude shape {exclude.shape} != {scores.shape}"
+                )
+            keep &= ~exclude
+        elif exclude.size:
+            keep[exclude.astype(np.int64)] = False
+    candidates = np.nonzero(keep)[0]
+    order = np.argsort(-scores[candidates], kind="stable")
+    return candidates[order[:top_k]]
 
 
 def rank_of(scores: np.ndarray, index: int) -> int:

@@ -106,13 +106,19 @@ def _dhlp2_step_loop(
     H: jax.Array,
     M: jax.Array,
     Y: jax.Array,
+    F0: jax.Array,
     *,
     alpha: float,
     sigma: float,
     max_iter: int,
     seed_mode: str,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Un-fused (paper-faithful) DHLP-2: two propagation ops per round."""
+    """Un-fused (paper-faithful) DHLP-2: two propagation ops per round.
+
+    ``F0`` is the warm-start state (pass ``Y`` for a cold solve).  In
+    fixed-seed mode the fixed point is independent of ``F0``, so a warm
+    start reaches the same answer in fewer rounds (DESIGN.md §9).
+    """
     beta = 1.0 - alpha
     acc = jnp.float32
 
@@ -135,7 +141,7 @@ def _dhlp2_step_loop(
 
     s = Y.shape[1]
     state0 = (
-        Y,
+        F0,
         jnp.ones((s,), dtype=bool),
         jnp.asarray(0, jnp.int32),
         jnp.zeros((s,), jnp.int32),
@@ -153,6 +159,7 @@ def _dhlp2_fused_loop(
     A_eff: jax.Array,
     beta2: jax.Array,
     Y: jax.Array,
+    F0: jax.Array,
     *,
     sigma: float,
     max_iter: int,
@@ -164,6 +171,8 @@ def _dhlp2_fused_loop(
 
       drift:  F ← β²F + A_eff @ F
       fixed:  F ← β²Y + A_eff @ F [+ μ(F − F_prev) heavy-ball]
+
+    ``F0`` warm-starts the iteration (pass ``Y`` for cold; DESIGN.md §9).
     """
     acc = jnp.float32
 
@@ -194,8 +203,8 @@ def _dhlp2_fused_loop(
 
     s = Y.shape[1]
     state0 = (
-        Y,
-        Y,
+        F0,
+        F0,
         jnp.ones((s,), dtype=bool),
         jnp.asarray(0, jnp.int32),
         jnp.zeros((s,), jnp.int32),
@@ -215,6 +224,7 @@ def _dhlp1_loop(
     H: jax.Array,
     M: jax.Array,
     Y: jax.Array,
+    F0: jax.Array,
     *,
     alpha: float,
     sigma: float,
@@ -272,7 +282,7 @@ def _dhlp1_loop(
 
     s = Y.shape[1]
     state0 = (
-        Y,
+        F0,
         jnp.ones((s,), dtype=bool),
         jnp.asarray(0, jnp.int32),
         jnp.asarray(0, jnp.int32),
@@ -311,7 +321,14 @@ class HeteroLP:
         self,
         net,
         seeds: Optional[np.ndarray] = None,
+        F0: Optional[np.ndarray] = None,
     ) -> SolveResult:
+        """Solve LP on ``net`` from ``seeds``.
+
+        ``F0`` (same shape as ``seeds``) warm-starts the iteration from a
+        previous solution — the fixed point is unchanged in fixed-seed mode
+        and already-converged columns freeze in round 0 (DESIGN.md §9).
+        """
         cfg = self.config
         norm = self._prepare(net)
         n = norm.num_nodes
@@ -320,24 +337,43 @@ class HeteroLP:
             Y = Y[:, None]
         if Y.shape[0] != n:
             raise ValueError(f"seeds must have {n} rows, got {Y.shape}")
+        if F0 is not None:
+            F0 = np.asarray(F0)
+            if F0.ndim == 1:
+                F0 = F0[:, None]
+            if F0.shape != Y.shape:
+                raise ValueError(
+                    f"F0 shape {F0.shape} must match seeds shape {Y.shape}"
+                )
 
         if cfg.mode == "sequential":
-            return self._run_sequential(norm, Y)
-        return self._run_batched(norm, Y)
+            return self._run_sequential(norm, Y, F0)
+        return self._run_batched(norm, Y, F0)
 
     # -- batched ------------------------------------------------------------
-    def _run_batched(self, norm: NormalizedNetwork, Y: np.ndarray) -> SolveResult:
+    def _run_batched(
+        self,
+        norm: NormalizedNetwork,
+        Y: np.ndarray,
+        F0: Optional[np.ndarray] = None,
+    ) -> SolveResult:
         cfg = self.config
         chunks = self._chunk_columns(Y, cfg.seed_chunk)
+        f0_chunks = (
+            [None] * len(chunks)
+            if F0 is None
+            else self._chunk_columns(F0, cfg.seed_chunk)
+        )
         F_parts, outer, inner, col_iters = [], 0, 0, []
         arrays = self._device_arrays(norm)
-        for Yc in chunks:
+        for Yc, F0c in zip(chunks, f0_chunks):
             Yd = jnp.asarray(Yc, dtype=cfg.dtype)
+            F0d = Yd if F0c is None else jnp.asarray(F0c, dtype=cfg.dtype)
             if cfg.alg == "dhlp2":
                 if cfg.fused:
                     A_eff, beta2 = arrays["fused"]
                     F, it, ci = _dhlp2_fused_loop(
-                        A_eff, beta2, Yd,
+                        A_eff, beta2, Yd, F0d,
                         sigma=cfg.sigma, max_iter=cfg.max_iter,
                         seed_mode=cfg.resolved_seed_mode(),
                         momentum=cfg.momentum,
@@ -346,7 +382,7 @@ class HeteroLP:
                 else:
                     H, M = arrays["split"]
                     F, it, ci = _dhlp2_step_loop(
-                        H, M, Yd,
+                        H, M, Yd, F0d,
                         alpha=cfg.alpha, sigma=cfg.sigma,
                         max_iter=cfg.max_iter,
                         seed_mode=cfg.resolved_seed_mode(),
@@ -355,7 +391,7 @@ class HeteroLP:
             else:
                 H, M = arrays["split"]
                 F, it, tot_inner, ci = _dhlp1_loop(
-                    H, M, Yd,
+                    H, M, Yd, F0d,
                     alpha=cfg.alpha, sigma=cfg.sigma,
                     max_iter=cfg.max_iter, max_inner=cfg.max_inner,
                     seed_mode=cfg.resolved_seed_mode(),
@@ -376,7 +412,12 @@ class HeteroLP:
         )
 
     # -- sequential (paper-faithful per-seed sweep) --------------------------
-    def _run_sequential(self, norm: NormalizedNetwork, Y: np.ndarray) -> SolveResult:
+    def _run_sequential(
+        self,
+        norm: NormalizedNetwork,
+        Y: np.ndarray,
+        F0: Optional[np.ndarray] = None,
+    ) -> SolveResult:
         """One seed at a time, exactly like the Giraph sweep.
 
         Kept as the faithful baseline; the batched mode is the beyond-paper
@@ -389,10 +430,15 @@ class HeteroLP:
         cols, outer, inner, per_col = [], 0, 0, []
         for c in range(Y.shape[1]):
             Yc = jnp.asarray(Y[:, c : c + 1], dtype=cfg.dtype)
+            F0c = (
+                Yc
+                if F0 is None
+                else jnp.asarray(F0[:, c : c + 1], dtype=cfg.dtype)
+            )
             if cfg.alg == "dhlp2":
                 H, M = arrays["split"]
                 F, it, ci = _dhlp2_step_loop(
-                    H, M, Yc,
+                    H, M, Yc, F0c,
                     alpha=cfg.alpha, sigma=cfg.sigma, max_iter=cfg.max_iter,
                     seed_mode=cfg.resolved_seed_mode(),
                 )
@@ -400,7 +446,7 @@ class HeteroLP:
             else:
                 H, M = arrays["split"]
                 F, it, tot_inner, ci = _dhlp1_loop(
-                    H, M, Yc,
+                    H, M, Yc, F0c,
                     alpha=cfg.alpha, sigma=cfg.sigma,
                     max_iter=cfg.max_iter, max_inner=cfg.max_inner,
                     seed_mode=cfg.resolved_seed_mode(),
@@ -421,9 +467,10 @@ class HeteroLP:
     # -- helpers -------------------------------------------------------------
     def _device_arrays(self, norm: NormalizedNetwork):
         cfg = self.config
-        key = id(norm)
+        # key by identity of the live object (held in the cache entry, so
+        # the address can't be recycled for a different network)
         cache = getattr(self, "_cache", None)
-        if cache is not None and cache[0] == key:
+        if cache is not None and cache[0] is norm:
             return cache[1]
         H, M = norm.assemble_dense()
         H = H * cfg.resolved_hetero_scale(norm.num_types)
@@ -440,7 +487,7 @@ class HeteroLP:
                 jnp.asarray(A_eff, dtype=cfg.dtype),
                 jnp.asarray(beta * beta, dtype=jnp.float32),
             )
-        self._cache = (key, out)
+        self._cache = (norm, out)
         return out
 
     @staticmethod

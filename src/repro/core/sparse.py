@@ -59,10 +59,14 @@ class COOOperator:
 
     def fused_arrays(self, alpha: float) -> Tuple[jax.Array, jax.Array, jax.Array]:
         """concat(αβ·het, α·hom) — one segment-sum per DHLP-2 round."""
+        memo = getattr(self, "_fused_memo", None)
+        if memo is not None and memo[0] == alpha:
+            return memo[1]
         beta = 1.0 - alpha
         src = jnp.concatenate([self.het_src, self.hom_src])
         dst = jnp.concatenate([self.het_dst, self.hom_dst])
         w = jnp.concatenate([alpha * beta * self.het_w, alpha * self.hom_w])
+        self._fused_memo = (alpha, (src, dst, w))
         return src, dst, w
 
 
@@ -74,7 +78,7 @@ def make_dhlp2_coo(alpha: float):
         jax.jit,
         static_argnames=("num_nodes", "sigma", "max_iter", "seed_mode"),
     )
-    def loop(src, dst, w, Y, *, num_nodes, sigma, max_iter, seed_mode):
+    def loop(src, dst, w, Y, F0, *, num_nodes, sigma, max_iter, seed_mode):
         def cond(state):
             _, active, it, _ = state
             return jnp.logical_and(it < max_iter, jnp.any(active))
@@ -91,7 +95,7 @@ def make_dhlp2_coo(alpha: float):
 
         s = Y.shape[1]
         state0 = (
-            Y,
+            F0,
             jnp.ones((s,), dtype=bool),
             jnp.asarray(0, jnp.int32),
             jnp.zeros((s,), jnp.int32),
@@ -113,7 +117,7 @@ def make_dhlp1_coo(alpha: float):
         ),
     )
     def loop(
-        het_src, het_dst, het_w, hom_src, hom_dst, hom_w, Y,
+        het_src, het_dst, het_w, hom_src, hom_dst, hom_w, Y, F0,
         *, num_nodes, sigma, max_iter, max_inner, seed_mode,
     ):
         def inner(Yp, F0, active):
@@ -154,7 +158,7 @@ def make_dhlp1_coo(alpha: float):
 
         s = Y.shape[1]
         state0 = (
-            Y,
+            F0,
             jnp.ones((s,), dtype=bool),
             jnp.asarray(0, jnp.int32),
             jnp.asarray(0, jnp.int32),
@@ -173,35 +177,66 @@ class SparseHeteroLP:
 
     def __init__(self, config: LPConfig = LPConfig()):
         self.config = config
+        self._op_cache = None
+
+    def _operator(self, norm: NormalizedNetwork, pad_mult: int) -> COOOperator:
+        """Device-resident operator, cached per (network, padding).
+
+        The serving path re-solves against the same normalized network many
+        times per version; rebuilding (and re-uploading) the edge arrays per
+        query batch would dominate small solves.  The cache entry holds the
+        norm object itself and compares by identity — an `id()` key could
+        silently match a new network allocated at a recycled address.
+        """
+        cache = self._op_cache
+        if cache is not None and cache[0] is norm and cache[1] == pad_mult:
+            return cache[2]
+        op = COOOperator.from_network(norm, self.config, pad_mult)
+        self._op_cache = (norm, pad_mult, op)
+        return op
 
     def run(
         self,
         norm: NormalizedNetwork,
         seeds: Optional[np.ndarray] = None,
         pad_mult: int = 1024,
+        F0: Optional[np.ndarray] = None,
     ) -> SolveResult:
         cfg = self.config
-        op = COOOperator.from_network(norm, cfg, pad_mult)
+        op = self._operator(norm, pad_mult)
         n = op.num_nodes
         Y = np.eye(n, dtype=np.float32) if seeds is None else np.asarray(seeds)
         if Y.ndim == 1:
             Y = Y[:, None]
-        chunks = (
-            [Y]
-            if cfg.seed_chunk <= 0 or cfg.seed_chunk >= Y.shape[1]
-            else [
-                Y[:, i : i + cfg.seed_chunk]
-                for i in range(0, Y.shape[1], cfg.seed_chunk)
+        if F0 is not None:
+            F0 = np.asarray(F0)
+            if F0.ndim == 1:
+                F0 = F0[:, None]
+            if F0.shape != Y.shape:
+                raise ValueError(
+                    f"F0 shape {F0.shape} must match seeds shape {Y.shape}"
+                )
+
+        def _chunk(A):
+            if cfg.seed_chunk <= 0 or cfg.seed_chunk >= Y.shape[1]:
+                return [A]
+            return [
+                A[:, i : i + cfg.seed_chunk]
+                for i in range(0, A.shape[1], cfg.seed_chunk)
             ]
-        )
+
+        chunks = _chunk(Y)
+        f0_chunks = [None] * len(chunks) if F0 is None else _chunk(F0)
         # hetero weights in `op` are already scaled by hetero_scale.
         parts, outer, inner_tot, cols = [], 0, 0, []
         if cfg.alg == "dhlp2":
             loop = make_dhlp2_coo(cfg.alpha)
             fsrc, fdst, fw = op.fused_arrays(cfg.alpha)
-            for Yc in chunks:
+            for Yc, F0c in zip(chunks, f0_chunks):
+                Yd = jnp.asarray(Yc, jnp.float32)
+                F0d = Yd if F0c is None else jnp.asarray(F0c, jnp.float32)
                 F, it, ci = loop(
-                    fsrc, fdst, fw, jnp.asarray(Yc, jnp.float32),
+                    fsrc, fdst, fw, Yd, F0d,
                     num_nodes=n, sigma=cfg.sigma, max_iter=cfg.max_iter,
                     seed_mode=cfg.resolved_seed_mode(),
                 )
@@ -210,11 +245,13 @@ class SparseHeteroLP:
                 cols.append(np.asarray(ci))
         else:
             loop = make_dhlp1_coo(cfg.alpha)
-            for Yc in chunks:
+            for Yc, F0c in zip(chunks, f0_chunks):
+                Yd = jnp.asarray(Yc, jnp.float32)
+                F0d = Yd if F0c is None else jnp.asarray(F0c, jnp.float32)
                 F, it, ti, ci = loop(
                     op.het_src, op.het_dst, op.het_w,
                     op.hom_src, op.hom_dst, op.hom_w,
-                    jnp.asarray(Yc, jnp.float32),
+                    Yd, F0d,
                     num_nodes=n, sigma=cfg.sigma, max_iter=cfg.max_iter,
                     max_inner=cfg.max_inner,
                     seed_mode=cfg.resolved_seed_mode(),

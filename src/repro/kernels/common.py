@@ -17,6 +17,20 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def tpu_compiler_params(**kwargs):
+    """Build Mosaic compiler params across the Pallas rename.
+
+    Newer Pallas exposes ``pltpu.CompilerParams``; older releases call the
+    same dataclass ``pltpu.TPUCompilerParams``.  Resolve whichever exists.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams"
+    )
+    return cls(**kwargs)
+
+
 def round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 

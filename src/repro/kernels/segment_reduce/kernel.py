@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import cdiv, default_interpret
+from repro.kernels.common import cdiv, default_interpret, tpu_compiler_params
 
 
 def _csr_agg_kernel(nbr_ref, wgt_ref, f_ref, out_ref, acc_ref, *, d_steps, bd):
@@ -90,7 +90,7 @@ def csr_aggregate(
         out_specs=pl.BlockSpec((bn, bs), lambda i, j, d: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n_pad, s_pad), F.dtype),
         scratch_shapes=[pltpu.VMEM((bn, bs), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

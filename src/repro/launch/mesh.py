@@ -8,24 +8,18 @@ see the single real CPU device.
 """
 from __future__ import annotations
 
-import jax
+from repro.parallel.hints import make_mesh_compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(shape, axes):
     """Small mesh over whatever devices exist (tests, local runs)."""
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh_compat(shape, axes)
 
 
 def data_axes(mesh) -> tuple:

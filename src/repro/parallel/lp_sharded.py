@@ -32,7 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.parallel.hints import shard_map_compat
 
 from repro.core.network import NormalizedNetwork
 from repro.core.solver import LPConfig, SolveResult
@@ -164,7 +165,7 @@ def build_sharded_dhlp2(
         # iteration counts differ across seed shards; report local columns'.
         return F, jnp.reshape(iters, (1,)), col_iters
 
-    mapped = shard_map(
+    mapped = shard_map_compat(
         shard_body,
         mesh=mesh,
         in_specs=(
@@ -174,7 +175,7 @@ def build_sharded_dhlp2(
             P(None, seed_axis),
         ),
         out_specs=(P(None, seed_axis), P(seed_axis), P(seed_axis)),
-        check_vma=False,
+        check=False,
     )
     return jax.jit(mapped)
 
@@ -261,7 +262,7 @@ def build_sharded_dhlp1(
         F, _, iters, tot_inner, _ = lax.while_loop(cond, body, state0)
         return F, jnp.reshape(iters, (1,)), jnp.reshape(tot_inner, (1,))
 
-    mapped = shard_map(
+    mapped = shard_map_compat(
         shard_body,
         mesh=mesh,
         in_specs=(
@@ -270,7 +271,7 @@ def build_sharded_dhlp1(
             P(None, seed_axis),
         ),
         out_specs=(P(None, seed_axis), P(seed_axis), P(seed_axis)),
-        check_vma=False,
+        check=False,
     )
     return jax.jit(mapped)
 

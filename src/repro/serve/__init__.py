@@ -1,0 +1,31 @@
+"""Online LP query-serving subsystem (DESIGN.md §9).
+
+The one-shot solvers (``repro.launch.solve``) build a network, solve every
+seed, and exit.  This package turns the same engines into a long-lived
+query service:
+
+* :class:`~repro.serve.scheduler.MicroBatcher` — coalesces pending queries
+  into one batched solve per tick (bounded queue = backpressure).
+* :class:`~repro.serve.cache.ColumnCache` — LRU of solved label columns;
+  repeat queries are cache hits, cold queries warm-start from cached
+  nearby columns.
+* :class:`~repro.serve.engine.LPServeEngine` — the front-end: ranking via
+  ``core/ranking.py``, incremental :class:`~repro.core.GraphDelta` updates
+  with stale-column warm restarts.
+"""
+from repro.serve.cache import CacheStats, ColumnCache, NetworkState
+from repro.serve.engine import LPServeEngine, ServeConfig
+from repro.serve.scheduler import MicroBatcher, SchedulerStats
+from repro.serve.types import QueryResult, QuerySpec
+
+__all__ = [
+    "CacheStats",
+    "ColumnCache",
+    "LPServeEngine",
+    "MicroBatcher",
+    "NetworkState",
+    "QueryResult",
+    "QuerySpec",
+    "SchedulerStats",
+    "ServeConfig",
+]

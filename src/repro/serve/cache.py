@@ -1,0 +1,157 @@
+"""Solver-state + label-column caches (DESIGN.md §9.2).
+
+Two levels:
+
+* :class:`NetworkState` — one per network *version*: the raw network, its
+  normalization, and the per-node type/offset tables.  The solver engines
+  key their prepared device arrays on the identity of the normalized
+  network, so holding one ``NetworkState`` per version means operators are
+  uploaded once per version, not once per query batch.
+* :class:`ColumnCache` — an LRU of solved F-columns keyed by
+  ``(version, node)``.  A hit serves with zero LP rounds.  Entries evicted
+  by a :class:`~repro.core.GraphDelta` are *demoted* to warm-start hints
+  (``stale``): the next solve for that node starts from the stale column
+  instead of the seed vector, which is the delta-propagation trick — the
+  fixed point moved a little, so the stale answer is a few rounds away.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.network import HeteroNetwork, NormalizedNetwork
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    invalidations: int = 0
+    warm_hints: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+@dataclasses.dataclass
+class NetworkState:
+    """Immutable per-version view of the network."""
+
+    version: int
+    net: HeteroNetwork
+    norm: NormalizedNetwork
+    type_of: np.ndarray
+    offsets: List[int]
+    sizes: List[int]
+
+    @classmethod
+    def from_network(cls, net: HeteroNetwork, version: int) -> "NetworkState":
+        return cls(
+            version=version,
+            net=net,
+            norm=net.normalize(),
+            type_of=net.type_of_node(),
+            offsets=net.offsets,
+            sizes=net.sizes,
+        )
+
+    @property
+    def num_nodes(self) -> int:
+        return self.net.num_nodes
+
+    def local_id(self, node: int) -> Tuple[int, int]:
+        """(type, local index) for a global node id."""
+        t = int(self.type_of[node])
+        return t, node - self.offsets[t]
+
+
+class ColumnCache:
+    """LRU of solved label columns keyed by ``(version, node)``.
+
+    Also keeps, per node, at most one *stale* column from a previous
+    version — not servable, but the warm-start seed for the next solve.
+    """
+
+    def __init__(self, capacity: int = 4096):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._lru: "OrderedDict[Tuple[int, int], np.ndarray]" = OrderedDict()
+        self._stale: Dict[int, np.ndarray] = {}
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def get(self, version: int, node: int) -> Optional[np.ndarray]:
+        key = (version, node)
+        col = self._lru.get(key)
+        if col is None:
+            self.stats.misses += 1
+            return None
+        self._lru.move_to_end(key)
+        self.stats.hits += 1
+        return col
+
+    def put(self, version: int, node: int, col: np.ndarray) -> None:
+        key = (version, node)
+        self._lru[key] = np.asarray(col)
+        self._lru.move_to_end(key)
+        self._stale.pop(node, None)  # fresh answer supersedes any hint
+        while len(self._lru) > self.capacity:
+            self._lru.popitem(last=False)
+            self.stats.evictions += 1
+
+    # ---------------------------------------------------------- warm starts
+    def stale_hint(self, node: int) -> Optional[np.ndarray]:
+        return self._stale.get(node)
+
+    def cached_nodes(self, version: int) -> List[int]:
+        return [n for (v, n) in self._lru if v == version]
+
+    # --------------------------------------------------------- invalidation
+    def invalidate_for_delta(
+        self,
+        old_version: int,
+        new_version: int,
+        touched_types: frozenset,
+        type_of: np.ndarray,
+        remap=None,
+        carry_untouched: bool = True,
+    ) -> int:
+        """Apply a version bump.
+
+        Columns of *touched* types are demoted to stale warm-start hints
+        (optionally passed through ``remap`` when the node id space grew).
+        Columns of untouched types are carried into the new version when
+        ``carry_untouched`` (the freshness/latency trade documented in
+        DESIGN.md §9.3) unless ``remap`` is set — a re-shaped id space means
+        every cached column has the wrong length, so everything demotes.
+        Returns the number of demoted columns.
+        """
+        demoted = 0
+        old_items = [
+            ((v, n), col) for (v, n), col in self._lru.items() if v == old_version
+        ]
+        for (v, n), col in old_items:
+            del self._lru[(v, n)]
+            touched = int(type_of[n]) in touched_types
+            if remap is None and carry_untouched and not touched:
+                self._lru[(new_version, n)] = col
+                continue
+            hint = col if remap is None else remap(col)
+            self._stale[n] = hint
+            self.stats.invalidations += 1
+            demoted += 1
+        self.stats.warm_hints = len(self._stale)
+        return demoted
+
+    def clear(self) -> None:
+        self._lru.clear()
+        self._stale.clear()

@@ -1,0 +1,298 @@
+"""The online LP query engine (DESIGN.md §9).
+
+Layers the dense/sparse batched solvers behind a query interface:
+
+* ``query``/``submit`` — rank top-k candidates of a target type for one
+  entity.  Repeat queries hit the column LRU; cold queries warm-start from
+  the cached column of the most-similar same-type node when one exists.
+* ``apply_delta`` — incremental graph update: bump the network version,
+  demote affected cached columns to warm-start hints, and let subsequent
+  queries re-converge from the stale state (delta propagation) instead of
+  from scratch.
+
+Serving always runs the solver in **fixed-seed mode**: the fixed point
+``F* = β²(I − A)⁻¹Y`` is then independent of the iteration's starting
+state, which is exactly the property warm-starting relies on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.network import GraphDelta, HeteroNetwork
+from repro.core.ranking import topk_exclusive
+from repro.core.solver import HeteroLP, LPConfig
+from repro.core.sparse import SparseHeteroLP
+from repro.serve.cache import ColumnCache, NetworkState
+from repro.serve.scheduler import MicroBatcher
+from repro.serve.types import QueryResult, QuerySpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Engine + scheduler + cache knobs."""
+
+    lp: LPConfig = LPConfig(alg="dhlp2", seed_mode="fixed")
+    engine: str = "dense"            # "dense" | "sparse"
+    cache_columns: int = 4096        # column-LRU capacity
+    warm_start: bool = True          # neighbor/stale warm starts
+    carry_untouched: bool = True     # keep untouched-type columns on delta
+    max_batch: int = 64
+    max_wait_s: float = 0.005
+    queue_depth: int = 1024
+
+    def __post_init__(self):
+        if self.engine not in ("dense", "sparse"):
+            raise ValueError(f"unknown engine {self.engine!r}")
+        if self.lp.resolved_seed_mode() != "fixed":
+            # Warm starts and incremental re-solves need the F0-independent
+            # fixed point; drift mode's answer depends on the start state.
+            raise ValueError(
+                "serving requires fixed-seed mode "
+                "(LPConfig(seed_mode='fixed'))"
+            )
+
+
+class LPServeEngine:
+    """Query front-end over a (mutable, versioned) heterogeneous network."""
+
+    def __init__(self, net: HeteroNetwork, config: ServeConfig = ServeConfig()):
+        self.config = config
+        self._state = NetworkState.from_network(net, version=0)
+        self._solver = (
+            SparseHeteroLP(config.lp)
+            if config.engine == "sparse"
+            else HeteroLP(config.lp)
+        )
+        self.columns = ColumnCache(config.cache_columns)
+        self.batcher = MicroBatcher(
+            self._solve_batch,
+            max_batch=config.max_batch,
+            max_wait_s=config.max_wait_s,
+            queue_depth=config.queue_depth,
+        )
+        # one solve/update at a time: the solvers' operator caches and the
+        # column LRU are not concurrency-safe on their own
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ accessors
+    @property
+    def state(self) -> NetworkState:
+        return self._state
+
+    @property
+    def version(self) -> int:
+        return self._state.version
+
+    # -------------------------------------------------------------- queries
+    def _validate(self, spec: QuerySpec) -> None:
+        """Reject bad specs at the edge, before they join a batch.
+
+        A bad spec inside a coalesced batch would fail every co-batched
+        request; validity is stable once checked — the node-id space only
+        ever grows (``GraphDelta.add_nodes``) and the type count is fixed.
+        """
+        state = self._state
+        if not 0 <= spec.entity < state.num_nodes:
+            raise ValueError(
+                f"entity {spec.entity} out of range [0,{state.num_nodes})"
+            )
+        if not 0 <= spec.target_type < state.net.num_types:
+            raise ValueError(f"no such type {spec.target_type}")
+
+    def submit(self, spec: QuerySpec, **kw) -> "Future[QueryResult]":
+        """Enqueue for the micro-batcher (needs ``start()`` or ``drain()``)."""
+        self._validate(spec)
+        return self.batcher.submit(spec, **kw)
+
+    def query(self, spec: QuerySpec) -> QueryResult:
+        """Synchronous single query (a batch of one on a cache miss)."""
+        return self._solve_batch([spec])[0]
+
+    def start(self) -> None:
+        self.batcher.start()
+
+    def stop(self) -> None:
+        self.batcher.stop()
+
+    # ------------------------------------------------------------- the tick
+    def _solve_batch(self, specs: Sequence[QuerySpec]) -> List[QueryResult]:
+        with self._lock:
+            return self._solve_batch_locked(specs)
+
+    def _solve_batch_locked(
+        self, specs: Sequence[QuerySpec]
+    ) -> List[QueryResult]:
+        state = self._state
+        n = state.num_nodes
+        for spec in specs:
+            self._validate(spec)  # no-op for specs vetted at submit()
+
+        # 1. split hits from misses; dedupe miss columns within the batch
+        cols: Dict[int, np.ndarray] = {}
+        sources: Dict[int, str] = {}
+        rounds: Dict[int, int] = {}
+        miss_nodes: List[int] = []
+        for spec in specs:
+            node = spec.entity
+            if node in cols:
+                continue
+            cached = self.columns.get(state.version, node)
+            if cached is not None:
+                cols[node] = cached
+                sources[node] = "cache"
+                rounds[node] = 0
+            else:
+                cols[node] = None  # placeholder, solved below
+                miss_nodes.append(node)
+
+        # 2. one batched solve for every miss column
+        if miss_nodes:
+            warm_index = (
+                self._cached_by_type() if self.config.warm_start else {}
+            )
+            Y = np.zeros((n, len(miss_nodes)), dtype=np.float64)
+            F0 = np.zeros_like(Y)
+            warm = []
+            for c, node in enumerate(miss_nodes):
+                Y[node, c] = 1.0
+                hint = (
+                    self._warm_hint(node, warm_index)
+                    if self.config.warm_start
+                    else None
+                )
+                if hint is not None:
+                    F0[:, c] = hint
+                    warm.append(True)
+                else:
+                    F0[:, c] = Y[:, c]
+                    warm.append(False)
+            result = self._run_solver(Y, F0)
+            per_col = (
+                result.per_column_iters
+                if result.per_column_iters is not None
+                else np.full(len(miss_nodes), result.outer_iters, np.int32)
+            )
+            for c, node in enumerate(miss_nodes):
+                col = result.F[:, c]
+                cols[node] = col
+                sources[node] = "warm" if warm[c] else "cold"
+                rounds[node] = int(per_col[c])
+                self.columns.put(state.version, node, col)
+
+        # 3. rank per request
+        return [self._rank(spec, cols[spec.entity], sources[spec.entity],
+                           rounds[spec.entity]) for spec in specs]
+
+    def _run_solver(self, Y: np.ndarray, F0: np.ndarray):
+        # both engines accept a NormalizedNetwork and cache their prepared
+        # operators on its identity, so repeat batches skip re-assembly
+        return self._solver.run(self._state.norm, seeds=Y, F0=F0)
+
+    def _cached_by_type(self) -> Dict[int, List[int]]:
+        """Group the current version's cached nodes by type, once per tick."""
+        state = self._state
+        by_type: Dict[int, List[int]] = {}
+        for other in self.columns.cached_nodes(state.version):
+            by_type.setdefault(int(state.type_of[other]), []).append(other)
+        return by_type
+
+    def _warm_hint(
+        self, node: int, by_type: Dict[int, List[int]]
+    ) -> Optional[np.ndarray]:
+        """Warm-start column for a cold node.
+
+        Preference order: the node's own stale column from before the last
+        delta (delta propagation), else the fresh column of the
+        most-similar cached node of the same type (neighbor warm start —
+        one vectorized similarity-row lookup, not a per-node scan).
+        """
+        stale = self.columns.stale_hint(node)
+        if stale is not None and stale.shape[0] == self._state.num_nodes:
+            return stale
+        state = self._state
+        t, u = state.local_id(node)
+        cands = [o for o in by_type.get(t, ()) if o != node]
+        if not cands:
+            return None
+        sims = state.net.P[t][u, np.asarray(cands) - state.offsets[t]]
+        best = int(np.argmax(sims))
+        if sims[best] <= 0.0:
+            return None
+        return self.columns.get(state.version, cands[best])
+
+    # -------------------------------------------------------------- ranking
+    def _rank(
+        self, spec: QuerySpec, col: np.ndarray, source: str, rounds: int
+    ) -> QueryResult:
+        state = self._state
+        t_ent, u = state.local_id(spec.entity)
+        tt = spec.target_type
+        off = state.offsets[tt]
+        scores = np.asarray(col[off : off + state.sizes[tt]], dtype=np.float64)
+        exclude = np.zeros(scores.shape[0], dtype=bool)
+        if not spec.include_known:
+            R = state.net.R
+            if (t_ent, tt) in R:
+                exclude |= R[(t_ent, tt)][u] > 0
+            elif (tt, t_ent) in R:
+                exclude |= R[(tt, t_ent)][:, u] > 0
+        if t_ent == tt:
+            exclude[u] = True  # an entity is not its own candidate
+        cand = topk_exclusive(scores, spec.top_k, exclude)
+        return QueryResult(
+            spec=spec,
+            candidates=cand,
+            scores=scores[cand],
+            target_offset=off,
+            version=state.version,
+            source=source,
+            rounds=rounds,
+        )
+
+    # ------------------------------------------------------ incremental path
+    def apply_delta(self, delta: GraphDelta) -> int:
+        """Apply a graph edit; returns the new network version.
+
+        Cached columns whose types the delta touches are demoted to
+        warm-start hints; untouched-type columns are carried forward when
+        ``carry_untouched`` (approximation: their values shift by at most
+        the delta's propagated mass — see DESIGN.md §9.3).  When the delta
+        adds nodes every column demotes (the id space changed shape) and
+        stale hints are remapped into the new layout.
+        """
+        with self._lock:
+            if delta.is_empty:
+                return self._state.version
+            old = self._state
+            new_net = old.net.apply_delta(delta)
+            new = NetworkState.from_network(new_net, old.version + 1)
+            remap = None
+            if delta.add_nodes:
+                remap = _make_remap(old, new)
+            self.columns.invalidate_for_delta(
+                old.version,
+                new.version,
+                delta.touched_types(),
+                old.type_of,
+                remap=remap,
+                carry_untouched=self.config.carry_untouched,
+            )
+            self._state = new
+            return new.version
+
+
+def _make_remap(old: NetworkState, new: NetworkState):
+    """Old-layout → new-layout column scatter (types keep their prefixes)."""
+
+    def remap(col: np.ndarray) -> np.ndarray:
+        out = np.zeros(new.num_nodes, dtype=np.float64)
+        for t, (o_off, o_n) in enumerate(zip(old.offsets, old.sizes)):
+            out[new.offsets[t] : new.offsets[t] + o_n] = col[o_off : o_off + o_n]
+        return out
+
+    return remap

@@ -1,0 +1,188 @@
+"""Micro-batching scheduler (DESIGN.md §9.1).
+
+Independent queries are embarrassingly batchable in LP: each is one seed
+column, and the solver already iterates whole column-blocks per round.  So
+the serving tick is: drain up to ``max_batch`` pending requests (waiting at
+most ``max_wait_s`` for stragglers to coalesce), stack their seed columns,
+run ONE batched solve, scatter results back to per-request futures.
+
+Backpressure is the bounded queue: when ``queue_depth`` requests are
+already pending, ``submit`` either blocks (default) or raises
+``queue.Full`` — the caller sheds load instead of the engine dying.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.serve.types import QueryResult, QuerySpec
+
+# solve_batch: List[QuerySpec] -> List[QueryResult] (same order)
+SolveBatchFn = Callable[[Sequence[QuerySpec]], List[QueryResult]]
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    rejected: int = 0
+    batches: int = 0
+
+    @property
+    def mean_batch_size(self) -> float:
+        return self.completed / self.batches if self.batches else 0.0
+
+
+class MicroBatcher:
+    """Coalesce pending queries into one batched solve per tick."""
+
+    def __init__(
+        self,
+        solve_batch: SolveBatchFn,
+        *,
+        max_batch: int = 64,
+        max_wait_s: float = 0.005,
+        queue_depth: int = 1024,
+    ):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self._solve_batch = solve_batch
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self._queue: "queue.Queue[Tuple[QuerySpec, Future, float]]" = (
+            queue.Queue(maxsize=queue_depth)
+        )
+        self.stats = SchedulerStats()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # ------------------------------------------------------------ producers
+    def submit(
+        self,
+        spec: QuerySpec,
+        block: bool = True,
+        timeout: Optional[float] = None,
+    ) -> "Future[QueryResult]":
+        """Enqueue a query; the future resolves after some later tick.
+
+        With ``block=False`` (or on timeout) a full queue raises
+        ``queue.Full`` — that is the backpressure signal.
+        """
+        fut: "Future[QueryResult]" = Future()
+        try:
+            self._queue.put((spec, fut, time.monotonic()), block, timeout)
+        except queue.Full:
+            self.stats.rejected += 1
+            raise
+        self.stats.submitted += 1
+        return fut
+
+    @property
+    def pending(self) -> int:
+        return self._queue.qsize()
+
+    # ------------------------------------------------------------- consumer
+    def _collect(self, wait: bool) -> List[Tuple[QuerySpec, Future, float]]:
+        """Drain up to ``max_batch`` requests for one tick.
+
+        Blocks up to ``max_wait_s`` for the FIRST request (when ``wait``),
+        then keeps collecting without waiting — the batch closes as soon as
+        the queue momentarily empties or ``max_batch`` is reached.
+        """
+        batch: List[Tuple[QuerySpec, Future, float]] = []
+        try:
+            if wait:
+                # bounded wait so the background loop can observe stop()
+                batch.append(
+                    self._queue.get(timeout=max(self.max_wait_s, 0.05))
+                )
+            else:
+                batch.append(self._queue.get_nowait())
+        except queue.Empty:
+            return batch
+        deadline = time.monotonic() + self.max_wait_s
+        while len(batch) < self.max_batch:
+            try:
+                batch.append(self._queue.get_nowait())
+            except queue.Empty:
+                if time.monotonic() >= deadline:
+                    break
+                time.sleep(min(1e-4, self.max_wait_s / 10 or 1e-4))
+        return batch
+
+    def run_once(self, wait: bool = True) -> int:
+        """One scheduler tick: coalesce → solve → resolve futures.
+
+        Returns the number of requests served (0 when idle).
+        """
+        batch = self._collect(wait)
+        if not batch:
+            return 0
+        # transition futures to RUNNING: drops already-cancelled requests
+        # and, crucially, makes later cancel() impossible — set_result below
+        # can then never race a concurrent cancellation into
+        # InvalidStateError (which would kill the background loop)
+        live = [
+            (s, f, t) for (s, f, t) in batch
+            if f.set_running_or_notify_cancel()
+        ]
+        if not live:
+            return 0
+        specs = [s for s, _, _ in live]
+        try:
+            results = self._solve_batch(specs)
+            if len(results) != len(specs):
+                raise RuntimeError(
+                    f"solve_batch returned {len(results)} results for "
+                    f"{len(specs)} specs"
+                )
+        except Exception as exc:  # noqa: BLE001 — propagate to every waiter
+            for _, fut, _ in live:
+                fut.set_exception(exc)
+            self.stats.failed += len(live)
+            self.stats.batches += 1
+            return 0
+        now = time.monotonic()
+        for (spec, fut, t_in), res in zip(live, results):
+            res.latency_s = now - t_in
+            fut.set_result(res)
+        self.stats.completed += len(live)
+        self.stats.batches += 1
+        return len(live)
+
+    def drain(self) -> int:
+        """Serve until the queue is empty (synchronous drivers, tests)."""
+        total = 0
+        while True:
+            served = self.run_once(wait=False)
+            if served == 0 and self._queue.empty():
+                return total
+            total += served
+
+    # ------------------------------------------------------ background loop
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                self.run_once(wait=True)
+
+        self._thread = threading.Thread(
+            target=loop, name="lp-serve-batcher", daemon=True
+        )
+        self._thread.start()
+
+    def stop(self, timeout: float = 5.0) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout)
+        self._thread = None
+        self.drain()  # don't strand late submissions

@@ -77,13 +77,12 @@ class TestCheckpoint:
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
 
+        from repro.parallel.hints import make_mesh_compat
+
         cm = CheckpointManager(str(tmp_path))
         t = tree(3)
         cm.save(1, t)
-        mesh = jax.make_mesh(
-            (1,), ("data",),
-            axis_types=(jax.sharding.AxisType.Auto,),
-        )
+        mesh = make_mesh_compat((1,), ("data",))
         sh = jax.tree_util.tree_map(
             lambda _: NamedSharding(mesh, P()), t
         )

@@ -22,11 +22,11 @@ sys.path.insert(0, %(src)r)
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager
+from repro.parallel.hints import make_mesh_compat
 
 cm = CheckpointManager(%(root)r)
 like = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh_compat((8,), ("data",))
 sh = {"w": NamedSharding(mesh, P("data", None)),
       "b": NamedSharding(mesh, P())}
 step, restored = cm.restore_latest(like, shardings=sh)
@@ -45,20 +45,21 @@ import os, sys, json
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 sys.path.insert(0, %(src)r)
 import numpy as np, jax, jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.parallel.collectives import grad_allreduce
+from repro.parallel.hints import make_mesh_compat
 
-mesh = jax.make_mesh((4,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh_compat((4,), ("d",))
 rng = np.random.default_rng(0)
 g = rng.standard_normal((16, 8)).astype(np.float32)
 
 def body(gs, key):
     return grad_allreduce({"g": gs}, "d", compression="int8", key=key)["g"]
 
-f = jax.jit(shard_map(body, mesh=mesh,
-                      in_specs=(P("d", None), P()),
-                      out_specs=P("d", None), check_vma=False))
+from repro.parallel.hints import shard_map_compat
+f = jax.jit(shard_map_compat(body, mesh=mesh,
+                             in_specs=(P("d", None), P()),
+                             out_specs=P("d", None), check=False))
 out = np.asarray(f(g, jax.random.PRNGKey(0)))
 # exact per-shard sums for comparison
 want = g.reshape(4, 4, 8).sum(axis=0)

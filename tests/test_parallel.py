@@ -15,10 +15,10 @@ import os, sys, json
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 sys.path.insert(0, %(src)r)
 import numpy as np, jax, jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.core import HeteroNetwork, HeteroLP, LPConfig
 from repro.parallel.lp_sharded import ShardedHeteroLP
+from repro.parallel.hints import make_mesh_compat
 from repro.parallel.collectives import (
     compressed_psum, psum_scatter_then_gather, ring_allreduce_ppermute,
 )
@@ -33,8 +33,7 @@ R = {(i, j): (rng.random((n[i], n[j])) < 0.3).astype(float)
      for (i, j) in [(0, 1), (0, 2), (1, 2)]}
 net = HeteroNetwork(P=Pm, R=R)
 norm = net.normalize()
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh_compat((2, 4), ("data", "model"))
 cfg = LPConfig(alg="dhlp2", seed_mode="fixed", sigma=1e-6, max_iter=3000)
 dense = HeteroLP(cfg).run(net)
 out = {}
@@ -63,9 +62,10 @@ def body(xs):
         psum_scatter_then_gather(xs, "d"),
         ring_allreduce_ppermute(xs, "d"),
     )
-m1 = jax.make_mesh((8,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
-f = jax.jit(shard_map(body, mesh=m1, in_specs=P("d", None),
-                      out_specs=(P("d", None),) * 3, check_vma=False))
+m1 = make_mesh_compat((8,), ("d",))
+from repro.parallel.hints import shard_map_compat
+f = jax.jit(shard_map_compat(body, mesh=m1, in_specs=P("d", None),
+                             out_specs=(P("d", None),) * 3, check=False))
 a, b, c = f(x)
 out["psum_ok"] = bool(np.allclose(np.asarray(a), np.asarray(b)) and
                       np.allclose(np.asarray(a), np.asarray(c)))
@@ -119,10 +119,11 @@ class TestHints:
     def test_applies_with_mesh(self):
         import jax
         import jax.numpy as jnp
-        from repro.parallel.hints import BATCH, shard_hint, set_ambient_mesh
+        from repro.parallel.hints import (
+            BATCH, make_mesh_compat, shard_hint, set_ambient_mesh,
+        )
 
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh_compat((1,), ("data",))
         set_ambient_mesh(mesh)
         try:
             x = jnp.ones((4, 8))
@@ -134,10 +135,11 @@ class TestHints:
     def test_rank_mismatch_raises(self):
         import jax
         import jax.numpy as jnp
-        from repro.parallel.hints import shard_hint, set_ambient_mesh
+        from repro.parallel.hints import (
+            make_mesh_compat, shard_hint, set_ambient_mesh,
+        )
 
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh_compat((1,), ("data",))
         set_ambient_mesh(mesh)
         try:
             with pytest.raises(ValueError):

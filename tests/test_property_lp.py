@@ -1,6 +1,11 @@
 """Property-based tests (hypothesis) for system invariants of the LP core."""
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)",
+)
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.core import (
