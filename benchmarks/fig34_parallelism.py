@@ -18,8 +18,9 @@ import json
 import os
 import subprocess
 import sys
-import time
 from typing import Dict, List
+
+from repro.bench import BenchRecord, register_suite, stats_from_samples
 
 _CHILD = r"""
 import os, sys, json, time
@@ -75,23 +76,37 @@ def run(device_counts=(1, 2, 4), stale_syncs=(1, 4)) -> List[Dict]:
     return rows
 
 
-def main(fast: bool = True) -> List[str]:
+@register_suite("fig34_parallelism",
+                description="paper Figs 3-4: worker-count sweep (subprocess)")
+def records(fast: bool = True) -> List[BenchRecord]:
     rows = run(device_counts=(1, 2) if fast else (1, 2, 4, 8),
                stale_syncs=(1,) if fast else (1, 4))
-    out = []
+    out: List[BenchRecord] = []
     for r in rows:
+        name = f"d{r['devices']}s{r['stale']}"
+        params = {"devices": r["devices"], "stale_sync": r["stale"]}
         if "error" in r:
-            out.append(
-                f"fig34_parallelism/d{r['devices']}s{r['stale']},0,"
-                f"error={r['error'][:40]}"
-            )
+            out.append(BenchRecord(
+                suite="fig34_parallelism", name=name,
+                backend=f"sharded{r['devices']}", params=params,
+                error=r["error"],
+            ))
         else:
-            out.append(
-                f"fig34_parallelism/d{r['devices']}s{r['stale']},"
-                f"{r['seconds']*1e6:.0f},"
-                f"iters={r['iters']};converged={r['converged']}"
-            )
+            out.append(BenchRecord(
+                suite="fig34_parallelism", name=name,
+                backend=f"sharded{r['devices']}", params=params,
+                stats=stats_from_samples([r["seconds"]]).to_dict(),
+                derived={"iters": float(r["iters"]),
+                         "converged": 1.0 if r["converged"] else 0.0},
+                strict=["iters", "converged"],
+            ))
     return out
+
+
+def main(fast: bool = True) -> List[str]:
+    from repro.bench.report import legacy_csv_line
+
+    return [legacy_csv_line(r) for r in records(fast=fast)]
 
 
 if __name__ == "__main__":

@@ -1,71 +1,85 @@
 """Kernel micro-benchmarks: Pallas (interpret) correctness-path timing vs
-the jnp oracle, plus the LP-round fused-vs-unfused op count.
+the jnp oracle, plus derived op/byte throughput.
 
 Wall-times on CPU are NOT TPU predictions (interpret mode runs the kernel
 body in Python); the number that matters is the oracle column (XLA-fused
-jnp path used in production on CPU) and the derived op/byte counts.
+jnp path used in production on CPU) and the derived op counts.
 """
 from __future__ import annotations
 
-import time
 from typing import List
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.bench import BenchRecord, register_suite, time_callable
+from repro.bench.report import legacy_csv_line
+from repro.bench.timing import derived_throughput
 
 
-def _time(fn, *args, reps=3) -> float:
-    fn(*args)  # compile
-    t0 = time.time()
-    for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / reps
+@register_suite("kernels", description="Pallas-kernel jnp-oracle timings")
+def records(fast: bool = True) -> List[BenchRecord]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
 
-
-def main(fast: bool = True) -> List[str]:
     from repro.kernels import (
         attention_ref, csr_aggregate_ref, embedding_bag_ref, lp_round_ref,
     )
 
     rng = np.random.default_rng(0)
-    lines = []
+    out: List[BenchRecord] = []
+    repeats = 3
+
+    def rec(name, params, stats, derived) -> BenchRecord:
+        return BenchRecord(
+            suite="kernels", name=name, backend="xla_ref",
+            params=params, stats=stats.to_dict(), derived=derived,
+        )
 
     n, s = (512, 256) if fast else (2048, 1024)
     A = jnp.asarray(rng.random((n, n)).astype(np.float32)) / n
     F = jnp.asarray(rng.random((n, s)).astype(np.float32))
     base = jnp.asarray(rng.random((n, s)).astype(np.float32))
-    t = _time(jax.jit(lambda a, f, b: lp_round_ref(a, f, b, 0.25)), A, F, base)
-    flops = 2 * n * n * s
-    lines.append(
-        f"kernels/lp_round_ref_{n}x{s},{t*1e6:.0f},"
-        f"gflops={flops/t/1e9:.1f}"
-    )
+    fn = jax.jit(lambda a, f, b: lp_round_ref(a, f, b, 0.25))
+    stats = time_callable(lambda: fn(A, F, base), warmup=1, repeats=repeats)
+    out.append(rec(
+        f"lp_round_ref_{n}x{s}", {"n": n, "s": s}, stats,
+        derived_throughput(stats, flops=2 * n * n * s),
+    ))
 
-    e, d = (20_000, 64) if fast else (200_000, 128)
     nbr = jnp.asarray(rng.integers(0, n, (n, 16)).astype(np.int32))
     wgt = jnp.asarray(rng.random((n, 16)).astype(np.float32))
-    t = _time(jax.jit(csr_aggregate_ref), nbr, wgt, F)
-    lines.append(f"kernels/csr_aggregate_ref_{n}x16,{t*1e6:.0f},"
-                 f"edges_per_s={n*16/t:.3g}")
+    agg = jax.jit(csr_aggregate_ref)
+    stats = time_callable(lambda: agg(nbr, wgt, F), warmup=1, repeats=repeats)
+    out.append(rec(
+        f"csr_aggregate_ref_{n}x16", {"n": n, "deg": 16}, stats,
+        derived_throughput(stats, edges=n * 16),
+    ))
 
     v, dd, b, k = (50_000, 32, 4096, 8) if fast else (500_000, 32, 65_536, 8)
     tab = jnp.asarray(rng.random((v, dd)).astype(np.float32))
     idx = jnp.asarray(rng.integers(0, v, (b, k)).astype(np.int32))
     w = jnp.asarray(rng.random((b, k)).astype(np.float32))
-    t = _time(jax.jit(embedding_bag_ref), tab, idx, w)
-    lines.append(f"kernels/embedding_bag_ref_b{b},{t*1e6:.0f},"
-                 f"lookups_per_s={b*k/t:.3g}")
+    emb = jax.jit(embedding_bag_ref)
+    stats = time_callable(lambda: emb(tab, idx, w), warmup=1, repeats=repeats)
+    out.append(rec(
+        f"embedding_bag_ref_b{b}", {"vocab": v, "dim": dd, "batch": b, "k": k},
+        stats, {"lookups_per_s": b * k / max(stats.median_s, 1e-12)},
+    ))
 
     bq, lq, hd = (2, 256, 64) if fast else (4, 1024, 64)
     q = jnp.asarray(rng.standard_normal((bq, 4, lq, hd)).astype(np.float32))
     kk = jnp.asarray(rng.standard_normal((bq, 4, lq, hd)).astype(np.float32))
     vv = jnp.asarray(rng.standard_normal((bq, 4, lq, hd)).astype(np.float32))
-    t = _time(jax.jit(lambda a, b2, c: attention_ref(a, b2, c, causal=True)),
-              q, kk, vv)
-    lines.append(f"kernels/attention_ref_l{lq},{t*1e6:.0f},"
-                 f"tok_per_s={bq*lq/t:.3g}")
-    return lines
+    att = jax.jit(lambda a, b2, c: attention_ref(a, b2, c, causal=True))
+    stats = time_callable(lambda: att(q, kk, vv), warmup=1, repeats=repeats)
+    out.append(rec(
+        f"attention_ref_l{lq}", {"batch": bq, "heads": 4, "len": lq, "hd": hd},
+        stats, {"tok_per_s": bq * lq / max(stats.median_s, 1e-12)},
+    ))
+    return out
+
+
+def main(fast: bool = True) -> List[str]:
+    return [legacy_csv_line(r) for r in records(fast=fast)]
 
 
 if __name__ == "__main__":

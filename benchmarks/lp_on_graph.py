@@ -14,6 +14,8 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.bench import BenchRecord, register_suite, stats_from_samples
+from repro.bench.report import legacy_csv_line
 from repro.core import HeteroLP, HeteroNetwork, LPConfig
 from repro.data.graphs import planted_partition_graph
 
@@ -95,16 +97,27 @@ def run(n_nodes=400, n_edges=2400, n_classes=5, d_feat=16,
     return rows
 
 
+@register_suite("lp_on_graph",
+                description="LP core vs trained GCN on planted partitions")
+def records(fast: bool = True) -> List[BenchRecord]:
+    n_nodes = 300 if fast else 1000
+    n_edges = 1800 if fast else 8000
+    rows = run(n_nodes=n_nodes, n_edges=n_edges)
+    out: List[BenchRecord] = []
+    for r in rows:
+        out.append(BenchRecord(
+            suite="lp_on_graph", name=r["method"],
+            backend="dense" if r["method"] != "gcn" else "gcn",
+            params={"n_nodes": n_nodes, "n_edges": n_edges},
+            stats=stats_from_samples([r["seconds"]]).to_dict(),
+            derived={"test_acc": r["test_acc"], "iters": float(r["iters"])},
+            strict=["test_acc", "iters"],
+        ))
+    return out
+
+
 def main(fast: bool = True) -> List[str]:
-    rows = run(n_nodes=300 if fast else 1000,
-               n_edges=1800 if fast else 8000)
-    return [
-        (
-            f"lp_on_graph/{r['method']},{r['seconds']*1e6:.0f},"
-            f"test_acc={r['test_acc']:.4f};iters={r['iters']}"
-        )
-        for r in rows
-    ]
+    return [legacy_csv_line(r) for r in records(fast=fast)]
 
 
 if __name__ == "__main__":

@@ -1,61 +1,88 @@
-"""Benchmark harness: one module per paper table/figure.
+"""Benchmark driver: runs every registered suite through the shared
+harness (``repro.bench``) and writes the machine-readable report.
 
-Prints ``name,us_per_call,derived`` CSV lines.  ``--full`` uses the
-paper-scale parameters (slow on CPU); default is a fast pass suited to CI.
-The multi-pod roofline table is produced separately by
-``benchmarks/roofline.py`` from the dry-run artifacts.
+    PYTHONPATH=src python benchmarks/run.py              # fast pass -> BENCH_ci.json
+    PYTHONPATH=src python benchmarks/run.py --full       # paper scale -> BENCH_full.json
+    PYTHONPATH=src python benchmarks/run.py --only lp_matrix,table7_sigma
+
+Artifacts: ``BENCH_<label>.json`` at the repo root (what CI uploads and
+``repro.bench.compare`` gates on) plus a timestamped per-run copy under
+``results/``.  Legacy ``name,us_per_call,derived`` CSV lines still go to
+stdout for eyeballing.  Any suite error makes the exit code nonzero — no
+swallowed failures.  The multi-pod roofline table is produced separately
+by ``benchmarks/roofline.py`` from the dry-run artifacts.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
-import traceback
+
+# The backend matrix runs the sharded engine on 1/2/4 virtual host
+# devices; the device count is locked at jax init, so it must be set
+# before ANY jax import (respect an operator-provided override).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+# make `benchmarks.*` importable when invoked as `python benchmarks/run.py`
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale parameters (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated benchmark names")
-    args, _ = ap.parse_known_args()
+                    help="comma-separated suite names")
+    ap.add_argument("--label", default=None,
+                    help="report label (default: ci, or full with --full)")
+    ap.add_argument("--no-write", action="store_true",
+                    help="skip writing BENCH_<label>.json / results/")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered suites and exit")
+    args, _ = ap.parse_known_args(argv)
     fast = not args.full
 
-    from benchmarks import (
-        fig34_parallelism,
-        kernels_bench,
-        lp_on_graph,
-        table2_cv,
-        table34_deleted,
-        table56_scaling,
-        table7_sigma,
+    from repro.bench import BenchReport, all_suites
+    from repro.bench.registry import run_suites
+    import repro.bench.matrix as bench_matrix
+
+    # suite registration happens at import time
+    import benchmarks.fig34_parallelism  # noqa: F401
+    import benchmarks.kernels_bench  # noqa: F401
+    import benchmarks.lp_on_graph  # noqa: F401
+    import benchmarks.serve_bench  # noqa: F401
+    import benchmarks.table2_cv  # noqa: F401
+    import benchmarks.table34_deleted  # noqa: F401
+    import benchmarks.table56_scaling  # noqa: F401
+    import benchmarks.table7_sigma  # noqa: F401
+
+    bench_matrix.register()
+
+    if args.list:
+        for s in all_suites():
+            print(f"{s.name}: {s.description}")
+        return 0
+
+    label = args.label or ("ci" if fast else "full")
+    report = BenchReport(label)
+    only = args.only.split(",") if args.only else None
+
+    print("name,us_per_call,derived", flush=True)
+    failures = run_suites(
+        report, only=only, fast=fast,
+        echo=lambda line: print(line, flush=True),
     )
 
-    benches = {
-        "table2_cv": table2_cv.main,
-        "table34_deleted": table34_deleted.main,
-        "table56_scaling": table56_scaling.main,
-        "table7_sigma": table7_sigma.main,
-        "fig34_parallelism": fig34_parallelism.main,
-        "kernels": kernels_bench.main,
-        "lp_on_graph": lp_on_graph.main,
-    }
-    if args.only:
-        keep = set(args.only.split(","))
-        benches = {k: v for k, v in benches.items() if k in keep}
-
-    print("name,us_per_call,derived")
-    failures = 0
-    for name, fn in benches.items():
-        try:
-            for line in fn(fast=fast):
-                print(line, flush=True)
-        except Exception:  # noqa: BLE001
-            failures += 1
-            print(f"{name},0,ERROR", flush=True)
-            traceback.print_exc(file=sys.stderr)
-    if failures:
-        sys.exit(1)
+    if not args.no_write:
+        for path in report.write():
+            print(f"wrote {path}", file=sys.stderr)
+    print(
+        f"suites={len(report.suites)} records={len(report.records)} "
+        f"failures={failures}",
+        file=sys.stderr,
+    )
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

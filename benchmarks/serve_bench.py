@@ -25,6 +25,8 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.bench import BenchRecord, register_suite, stats_from_samples
+from repro.bench.report import legacy_csv_line
 from repro.core import GraphDelta, LPConfig
 from repro.data.drugnet import DrugNetSpec, make_drugnet
 from repro.serve import LPServeEngine, QuerySpec, ServeConfig
@@ -49,6 +51,7 @@ def _phase(engine, entities, top_k) -> Dict:
         "qps": len(lats) / wall,
         "mean_rounds": float(np.mean(rounds)),
         "sources": {s: sources.count(s) for s in set(sources)},
+        "latencies": lats,
     }
     out.update(percentiles(lats))
     return out
@@ -104,9 +107,45 @@ def run(args) -> Dict[str, Dict]:
         "batches": engine.batcher.stats.batches,
         "mean_batch_size": engine.batcher.stats.mean_batch_size,
     }
-    burst.update(percentiles([r.latency_s for r in results]))
+    burst["latencies"] = [r.latency_s for r in results]
+    burst.update(percentiles(burst["latencies"]))
     report["batched_burst"] = burst
     return report
+
+
+@register_suite("serve",
+                description="online query engine QPS/latency phases")
+def records(fast: bool = True) -> List[BenchRecord]:
+    args = argparse.Namespace(
+        alg="dhlp2", sigma=1e-4, engine="dense",
+        drugs=40 if fast else 223,
+        diseases=30 if fast else 150,
+        targets=20 if fast else 95,
+        queries=8 if fast else 40,
+        top_k=10, max_batch=16 if fast else 64, seed=0,
+    )
+    report = run(args)
+    out: List[BenchRecord] = []
+    cold_p50 = report["cold"]["p50"]
+    for phase, r in report.items():
+        derived = {"qps": r["qps"]}
+        if "mean_rounds" in r:
+            derived["mean_rounds"] = r["mean_rounds"]
+        if phase == "cache":
+            derived["speedup_vs_cold"] = cold_p50 / max(r["p50"], 1e-9)
+        out.append(BenchRecord(
+            suite="serve", name=phase, backend=args.engine,
+            params={"drugs": args.drugs, "diseases": args.diseases,
+                    "targets": args.targets, "queries": r["queries"],
+                    "top_k": args.top_k},
+            stats=stats_from_samples(r["latencies"]).to_dict(),
+            derived=derived,
+        ))
+    return out
+
+
+def suite_main(fast: bool = True) -> List[str]:
+    return [legacy_csv_line(r) for r in records(fast=fast)]
 
 
 def main() -> None:

@@ -10,6 +10,8 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.bench import BenchRecord, register_suite, stats_from_samples
+from repro.bench.report import legacy_csv_line
 from repro.core import HeteroLP, LPConfig, extract_outputs, rank_of
 from repro.data.drugnet import DrugNetSpec, make_drugnet
 
@@ -61,17 +63,29 @@ def run(n_drug: int = 60, n_disease: int = 40, n_target: int = 30,
     return rows
 
 
+@register_suite("table34_deleted",
+                description="paper Tables 3-4: deleted-interaction recovery")
+def records(fast: bool = True) -> List[BenchRecord]:
+    n_trials = 3 if fast else 10
+    rows = run(n_trials=n_trials)
+    out: List[BenchRecord] = []
+    for r in rows:
+        out.append(BenchRecord(
+            suite="table34_deleted", name=r["algorithm"], backend="dense",
+            params={"trials": r["trials"], "algorithm": r["algorithm"]},
+            stats=stats_from_samples(
+                [r["seconds"] / max(r["trials"], 1)]
+            ).to_dict(),
+            derived={"mean_rank_deleted": r["mean_rank_deleted"],
+                     "median_rank_deleted": r["median_rank_deleted"],
+                     "newdrug_recall_topk": r["newdrug_recall_topk"]},
+            strict=["mean_rank_deleted", "newdrug_recall_topk"],
+        ))
+    return out
+
+
 def main(fast: bool = True) -> List[str]:
-    rows = run(n_trials=3 if fast else 10)
-    return [
-        (
-            f"table34_deleted/{r['algorithm']},"
-            f"{r['seconds']*1e6/max(r['trials'],1):.0f},"
-            f"mean_rank={r['mean_rank_deleted']:.2f};"
-            f"newdrug_recall={r['newdrug_recall_topk']:.3f}"
-        )
-        for r in rows
-    ]
+    return [legacy_csv_line(r) for r in records(fast=fast)]
 
 
 if __name__ == "__main__":

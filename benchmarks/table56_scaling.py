@@ -19,6 +19,8 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.bench import BenchRecord, register_suite, stats_from_samples
+from repro.bench.report import legacy_csv_line
 from repro.core import HeteroLP, LPConfig
 from repro.data.drugnet import DrugNetSpec, make_drugnet
 
@@ -67,17 +69,32 @@ def run(edge_counts=(2_000, 8_000, 32_000, 128_000), n_seeds: int = 64,
     return rows
 
 
-def main(fast: bool = True) -> List[str]:
+@register_suite("table56_scaling",
+                description="paper Tables 5-6: sequential vs batched gain")
+def records(fast: bool = True) -> List[BenchRecord]:
     counts = (2_000, 8_000) if fast else (2_000, 8_000, 32_000, 128_000)
-    rows = run(edge_counts=counts, n_seeds=32 if fast else 128)
-    return [
-        (
-            f"table56_scaling/{r['edges']}edges,"
-            f"{r['t_batched_s']*1e6:.0f},"
-            f"gain={r['gain']:.2f};seq_s={r['t_sequential_s']:.2f}"
-        )
-        for r in rows
-    ]
+    n_seeds = 32 if fast else 128
+    rows = run(edge_counts=counts, n_seeds=n_seeds)
+    out: List[BenchRecord] = []
+    for r in rows:
+        stats = stats_from_samples([r["t_batched_s"]])
+        out.append(BenchRecord(
+            suite="table56_scaling", name=f"{r['edges']}edges",
+            backend="dense",
+            params={"edges": r["edges"], "nodes": r["nodes"],
+                    "seeds": n_seeds},
+            stats=stats.to_dict(),
+            derived={
+                "gain": r["gain"],
+                "t_sequential_s": r["t_sequential_s"],
+                "edges_per_s": r["edges"] / max(r["t_batched_s"], 1e-12),
+            },
+        ))
+    return out
+
+
+def main(fast: bool = True) -> List[str]:
+    return [legacy_csv_line(r) for r in records(fast=fast)]
 
 
 if __name__ == "__main__":

@@ -4,6 +4,8 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
+from repro.bench import BenchRecord, register_suite, stats_from_samples
+from repro.bench.report import legacy_csv_line
 from repro.core import HeteroLP, LPConfig
 from repro.data.drugnet import DrugNetSpec, make_drugnet
 
@@ -34,17 +36,32 @@ def run(n_drug: int = 60, n_disease: int = 40, n_target: int = 30,
     return rows
 
 
+@register_suite("table7_sigma",
+                description="paper Table 7: sigma vs convergence")
+def records(fast: bool = True) -> List[BenchRecord]:
+    sizes = dict(n_drug=40, n_disease=25, n_target=20) if fast else (
+        dict(n_drug=60, n_disease=40, n_target=30)
+    )
+    rows = run(**sizes)
+    out: List[BenchRecord] = []
+    for r in rows:
+        out.append(BenchRecord(
+            suite="table7_sigma",
+            name=f"{r['algorithm']}/s{r['sigma']}",
+            backend="dense",
+            params={"algorithm": r["algorithm"], "sigma": r["sigma"],
+                    **sizes},
+            stats=stats_from_samples([r["seconds"]]).to_dict(),
+            derived={"outer_iters": float(r["outer_iters"]),
+                     "inner_iters": float(r["inner_iters"]),
+                     "supersteps": float(r["supersteps"])},
+            strict=["outer_iters", "supersteps"],
+        ))
+    return out
+
+
 def main(fast: bool = True) -> List[str]:
-    rows = run(n_drug=40 if fast else 60, n_disease=25 if fast else 40,
-               n_target=20 if fast else 30)
-    return [
-        (
-            f"table7_sigma/{r['algorithm']}/s{r['sigma']},"
-            f"{r['seconds']*1e6:.0f},"
-            f"outer={r['outer_iters']};supersteps={r['supersteps']}"
-        )
-        for r in rows
-    ]
+    return [legacy_csv_line(r) for r in records(fast=fast)]
 
 
 if __name__ == "__main__":

@@ -1,0 +1,40 @@
+"""Unified benchmark harness: timing discipline, one versioned record
+schema, machine-readable ``BENCH_<label>.json`` reports, a suite registry,
+the LP backend matrix, and a baseline comparator for the CI perf gate.
+
+Every benchmark in ``benchmarks/`` registers a suite here and emits
+:class:`BenchRecord` rows; ``benchmarks/run.py`` is a thin driver that runs
+the registered suites, writes the report, and exits nonzero on errors.
+``python -m repro.bench.compare`` diffs a report against the committed
+``benchmarks/baseline.json`` (DESIGN.md §10).
+"""
+from repro.bench.registry import BenchSuite, all_suites, get_suite, register_suite
+from repro.bench.report import BenchReport, environment_info, load_report
+from repro.bench.schema import (
+    SCHEMA_VERSION,
+    BenchRecord,
+    SchemaError,
+    record_key,
+    validate_record,
+    validate_report,
+)
+from repro.bench.timing import TimingStats, stats_from_samples, time_callable
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "BenchRecord",
+    "BenchReport",
+    "BenchSuite",
+    "SchemaError",
+    "TimingStats",
+    "all_suites",
+    "environment_info",
+    "get_suite",
+    "load_report",
+    "record_key",
+    "register_suite",
+    "stats_from_samples",
+    "time_callable",
+    "validate_record",
+    "validate_report",
+]

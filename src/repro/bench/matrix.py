@@ -1,0 +1,189 @@
+"""LP-core backend matrix: one table where kernel and sharding wins show.
+
+Runs the same propagation problem across every engine the repo has —
+dense XLA, sparse COO segment-sum, the shard_map distributed engine at
+1/2/4 (virtual) devices, and the Pallas ``lp_round_op`` kernel path — and
+emits one record per cell with identical timing discipline, plus a
+fixed-point agreement check against the dense engine (strict-gated: a
+backend that silently diverges fails CI even if it got faster).
+
+Sharded cells need ``jax.device_count() >= k``; ``benchmarks/run.py``
+fabricates host devices via ``XLA_FLAGS`` before importing jax.  Cells
+that cannot run on this host are skipped LOUDLY (a ``skipped`` line, never
+a silent hole in the table).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.bench.schema import BenchRecord
+from repro.bench.timing import derived_throughput, time_callable
+
+AGREEMENT_TOL = 5e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """One column of the matrix."""
+
+    name: str
+    kind: str  # dense | sparse_coo | sharded | pallas
+    devices: int = 1
+
+    def available(self, device_count: int) -> bool:
+        if self.kind == "sharded":
+            return device_count >= self.devices
+        return True
+
+
+LP_BACKENDS: Tuple[BackendSpec, ...] = (
+    BackendSpec("dense", "dense"),
+    BackendSpec("sparse_coo", "sparse_coo"),
+    BackendSpec("sharded1", "sharded", devices=1),
+    BackendSpec("sharded2", "sharded", devices=2),
+    BackendSpec("sharded4", "sharded", devices=4),
+    BackendSpec("pallas", "pallas"),
+)
+
+
+def expand_matrix(
+    backends: Sequence[BackendSpec],
+    param_sets: Sequence[Dict[str, object]],
+    *,
+    device_count: Optional[int] = None,
+) -> Tuple[List[Tuple[BackendSpec, Dict[str, object]]], List[BackendSpec]]:
+    """Cross backends × params, splitting off unavailable backends.
+
+    Returns ``(cells, skipped)`` — callers must surface ``skipped``.
+    """
+    if device_count is None:
+        import jax
+
+        device_count = jax.device_count()
+    runnable = [b for b in backends if b.available(device_count)]
+    skipped = [b for b in backends if not b.available(device_count)]
+    cells = [(b, dict(p)) for b in runnable for p in param_sets]
+    return cells, skipped
+
+
+def _make_solve(spec: BackendSpec, cfg, norm, Y) -> Callable[[], object]:
+    """Bind a no-arg solve closure for one matrix cell."""
+    from repro.core.solver import HeteroLP
+    from repro.core.sparse import SparseHeteroLP
+
+    if spec.kind == "dense":
+        solver = HeteroLP(dataclasses.replace(cfg, use_kernel=False))
+        return lambda: solver.run(norm, seeds=Y)
+    if spec.kind == "pallas":
+        solver = HeteroLP(dataclasses.replace(cfg, fused=True, use_kernel=True))
+        return lambda: solver.run(norm, seeds=Y)
+    if spec.kind == "sparse_coo":
+        solver = SparseHeteroLP(cfg)
+        return lambda: solver.run(norm, seeds=Y, pad_mult=256)
+    if spec.kind == "sharded":
+        from repro.parallel.hints import make_mesh_compat
+        from repro.parallel.lp_sharded import ShardedHeteroLP
+
+        mesh = make_mesh_compat((1, spec.devices), ("data", "model"))
+        solver = ShardedHeteroLP(cfg)
+        return lambda: solver.run(norm, mesh, seeds=Y)
+    raise ValueError(f"unknown backend kind {spec.kind!r}")
+
+
+def lp_matrix_records(fast: bool = True) -> List[BenchRecord]:
+    """The ``lp_matrix`` suite: every backend on the same drug network."""
+    from repro.core.solver import LPConfig
+    from repro.data.drugnet import DrugNetSpec, make_drugnet
+
+    if fast:
+        spec_net = DrugNetSpec(n_drug=48, n_disease=32, n_target=24, n_clusters=6)
+        n_seeds, repeats = 16, 2
+        algs = ("dhlp2",)
+    else:
+        spec_net = DrugNetSpec(n_drug=96, n_disease=64, n_target=48, n_clusters=8)
+        n_seeds, repeats = 64, 3
+        algs = ("dhlp1", "dhlp2")
+
+    dn = make_drugnet(spec_net)
+    norm = dn.network.normalize()
+    n = norm.num_nodes
+    edges = dn.network.num_edges
+    Y = np.eye(n, dtype=np.float32)[:, :n_seeds]
+
+    param_sets = [{"alg": a} for a in algs]
+    cells, skipped = expand_matrix(LP_BACKENDS, param_sets)
+    records: List[BenchRecord] = []
+    for b in skipped:
+        print(
+            f"lp_matrix: skipped backend {b.name} "
+            f"(needs {b.devices} devices)",
+            flush=True,
+        )
+
+    # dense reference fixed points, one per alg (fixed-seed mode: every
+    # backend must land on the same answer)
+    from repro.core.solver import HeteroLP
+
+    reference: Dict[str, np.ndarray] = {}
+    for alg in algs:
+        cfg = LPConfig(alg=alg, sigma=1e-4, seed_mode="fixed")
+        reference[alg] = HeteroLP(cfg).run(norm, seeds=Y).F
+
+    for spec, params in cells:
+        alg = str(params["alg"])
+        if spec.kind == "pallas" and alg != "dhlp2":
+            # only the fused DHLP-2 round has a kernel path; recording a
+            # dense-path run under backend="pallas" would be a silent lie
+            print(
+                f"lp_matrix: skipped {alg}_{spec.name} "
+                f"(no kernel path for {alg})",
+                flush=True,
+            )
+            continue
+        cfg = LPConfig(alg=alg, sigma=1e-4, seed_mode="fixed")
+        solve = _make_solve(spec, cfg, norm, Y)
+        res = solve()  # warmup: compile + first run
+        stats = time_callable(solve, warmup=0, repeats=repeats)
+        diff = float(np.max(np.abs(res.F - reference[alg])))
+        derived = derived_throughput(stats, edges=edges, supersteps=res.supersteps)
+        derived.update(
+            {
+                "outer_iters": float(res.outer_iters),
+                "supersteps": float(res.supersteps),
+                "agree_dense": 1.0 if diff <= AGREEMENT_TOL else 0.0,
+                "max_abs_diff_vs_dense": diff,
+            }
+        )
+        records.append(
+            BenchRecord(
+                suite="lp_matrix",
+                name=f"{alg}_{spec.name}",
+                backend=spec.name,
+                params={
+                    "alg": alg,
+                    "nodes": n,
+                    "edges": int(edges),
+                    "seeds": n_seeds,
+                    "sigma": 1e-4,
+                    "devices": spec.devices,
+                },
+                stats=stats.to_dict(),
+                derived=derived,
+                strict=["outer_iters", "supersteps", "agree_dense"],
+            )
+        )
+    return records
+
+
+def register() -> None:
+    """Register the lp_matrix suite (import-time side effects kept out of
+    module import so schema/compare tests stay jax-free)."""
+    from repro.bench.registry import register_suite
+
+    register_suite(
+        "lp_matrix",
+        description="LP core across dense/sparse/sharded/pallas backends",
+    )(lp_matrix_records)

@@ -1,0 +1,172 @@
+"""Report assembly and ``BENCH_<label>.json`` / ``results/`` writing."""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import sys
+import time
+from typing import Dict, List, Optional, Union
+
+from repro.bench.schema import (
+    SCHEMA_VERSION,
+    BenchRecord,
+    record_key,
+    validate_report,
+)
+
+
+def environment_info() -> Dict[str, object]:
+    """Fingerprint of the machine the run happened on.
+
+    ``repro.bench.compare`` only applies the *timing* gate when the
+    baseline and candidate fingerprints match — correctness-derived
+    metrics gate unconditionally (DESIGN.md §10).
+    """
+    info: Dict[str, object] = {
+        "platform": sys.platform,
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "cpu_count": os.cpu_count() or 0,
+        # operator-declared runner class (e.g. "gh-ubuntu-large"); CPU
+        # platform/machine alone cannot distinguish a laptop from a CI
+        # runner, and wall times must not gate across host classes
+        "host_class": os.environ.get("BENCH_HOST_CLASS", "unspecified"),
+        "backend": "unknown",
+        "device_kind": "unknown",
+        "device_count": 0,
+    }
+    try:
+        import jax
+
+        info["backend"] = jax.default_backend()
+        devices = jax.devices()
+        info["device_kind"] = devices[0].device_kind if devices else "none"
+        info["device_count"] = len(devices)
+        info["jax_version"] = jax.__version__
+    except Exception as e:  # pragma: no cover - jax always present in repo
+        info["error"] = f"jax unavailable: {e}"
+    return info
+
+
+def env_fingerprint(env: Dict[str, object]) -> tuple:
+    """The subset of the environment that makes wall times comparable.
+
+    ``cpu_count`` and ``host_class`` are included because on CPU backends
+    platform/machine/device_kind are identical across almost all linux
+    x86_64 hosts — without a host-class axis the timing gate would fire
+    against baselines recorded on different hardware.
+    """
+    keys = ("platform", "machine", "backend", "device_kind", "cpu_count", "host_class")
+    return tuple(env.get(k) for k in keys)
+
+
+def repo_root(start: Optional[str] = None) -> str:
+    """Walk up from ``start`` (default cwd) to the enclosing git root."""
+    d = os.path.abspath(start or os.getcwd())
+    while True:
+        if os.path.isdir(os.path.join(d, ".git")):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            return os.path.abspath(start or os.getcwd())
+        d = parent
+
+
+class BenchReport:
+    """Accumulates records across suites and writes the two artifacts:
+
+    * ``BENCH_<label>.json`` at the repo root — the machine-readable
+      trajectory point CI uploads and ``compare`` gates on;
+    * ``results/<label>_<timestamp>.json`` — an append-only per-run copy.
+    """
+
+    def __init__(
+        self,
+        label: str,
+        *,
+        environment: Optional[Dict[str, object]] = None,
+        created_unix: Optional[float] = None,
+    ):
+        self.label = label
+        self.environment = environment or environment_info()
+        self.created_unix = (
+            time.time() if created_unix is None else float(created_unix)
+        )
+        self.records: List[BenchRecord] = []
+        self.errors: List[Dict[str, str]] = []
+
+    def add(self, record: BenchRecord) -> None:
+        key = record_key(record)
+        if any(record_key(r) == key for r in self.records):
+            raise ValueError(f"duplicate record key {key!r}")
+        self.records.append(record)
+
+    def extend(self, records) -> None:
+        for r in records:
+            self.add(r)
+
+    def add_error(self, suite: str, error: str) -> None:
+        """A suite that failed to produce records (driver exits nonzero)."""
+        self.errors.append({"suite": suite, "error": error})
+
+    @property
+    def suites(self) -> List[str]:
+        return sorted({r.suite for r in self.records})
+
+    def to_dict(self) -> Dict[str, object]:
+        d: Dict[str, object] = {
+            "schema_version": SCHEMA_VERSION,
+            "label": self.label,
+            "created_unix": self.created_unix,
+            "environment": self.environment,
+            "records": [r.to_dict() for r in self.records],
+        }
+        if self.errors:
+            d["errors"] = list(self.errors)
+        return d
+
+    def write(
+        self,
+        root: Optional[str] = None,
+        *,
+        results_dir: Optional[str] = None,
+        validate: bool = True,
+    ) -> List[str]:
+        """Write both artifacts; returns the paths written."""
+        doc = self.to_dict()
+        if validate:
+            validate_report(doc)
+        root = root or repo_root()
+        paths = [os.path.join(root, f"BENCH_{self.label}.json")]
+        results_dir = results_dir or os.path.join(root, "results")
+        os.makedirs(results_dir, exist_ok=True)
+        stamp = time.strftime("%Y%m%d-%H%M%S", time.gmtime(self.created_unix))
+        paths.append(os.path.join(results_dir, f"{self.label}_{stamp}.json"))
+        blob = json.dumps(doc, indent=2, sort_keys=False)
+        for p in paths:
+            with open(p, "w") as f:
+                f.write(blob + "\n")
+        return paths
+
+
+def load_report(path: str, *, validate: bool = True) -> Dict[str, object]:
+    with open(path) as f:
+        doc = json.load(f)
+    if validate:
+        validate_report(doc)
+    return doc
+
+
+def legacy_csv_line(record: Union[BenchRecord, Dict[str, object]]) -> str:
+    """The seed scripts' ``name,us_per_call,derived`` stdout format, kept
+    so eyeballing a run still works while JSON is the machine interface."""
+    if isinstance(record, BenchRecord):
+        record = record.to_dict()
+    if record.get("error") is not None:
+        return f"{record['suite']}/{record['name']},0,error={record['error'][:60]}"
+    us = record["stats"]["median_s"] * 1e6
+    derived = ";".join(
+        f"{k}={v:.6g}" for k, v in sorted(record.get("derived", {}).items())
+    )
+    return f"{record['suite']}/{record['name']},{us:.0f},{derived}"

@@ -1,0 +1,132 @@
+"""Timing discipline shared by every benchmark.
+
+One path to a wall-time number: warmup calls (compile/trace excluded),
+``repeats`` measured calls, device sync via ``jax.block_until_ready`` on
+whatever the callable returns, and robust order statistics (median/p10/p90)
+instead of a single noisy sample.  The clock is injectable so tests can
+assert the statistics deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+
+def _default_sync(value):
+    """Block on device work if the value is (a pytree of) jax arrays."""
+    try:
+        import jax
+
+        return jax.block_until_ready(value)
+    except Exception:  # pragma: no cover - jax absent or non-array value
+        return value
+
+
+def _quantile(sorted_xs: Sequence[float], q: float) -> float:
+    """Linear-interpolation quantile on an already-sorted sample."""
+    if not sorted_xs:
+        raise ValueError("empty sample")
+    if len(sorted_xs) == 1:
+        return float(sorted_xs[0])
+    pos = q * (len(sorted_xs) - 1)
+    lo = math.floor(pos)
+    hi = math.ceil(pos)
+    frac = pos - lo
+    return float(sorted_xs[lo] * (1.0 - frac) + sorted_xs[hi] * frac)
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingStats:
+    """Order statistics (seconds) over ``repeats`` measured calls."""
+
+    repeats: int
+    warmup: int
+    median_s: float
+    p10_s: float
+    p90_s: float
+    mean_s: float
+    min_s: float
+    max_s: float
+
+    def to_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, float]) -> "TimingStats":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)})
+
+
+def stats_from_samples(samples: Iterable[float], *, warmup: int = 0) -> TimingStats:
+    """Build :class:`TimingStats` from pre-measured durations (seconds)."""
+    xs = sorted(float(s) for s in samples)
+    if not xs:
+        raise ValueError("stats_from_samples needs at least one sample")
+    return TimingStats(
+        repeats=len(xs),
+        warmup=warmup,
+        median_s=_quantile(xs, 0.5),
+        p10_s=_quantile(xs, 0.1),
+        p90_s=_quantile(xs, 0.9),
+        mean_s=sum(xs) / len(xs),
+        min_s=xs[0],
+        max_s=xs[-1],
+    )
+
+
+def time_callable(
+    fn: Callable[[], object],
+    *,
+    warmup: int = 1,
+    repeats: int = 3,
+    clock: Optional[Callable[[], float]] = None,
+    sync: Optional[Callable[[object], object]] = None,
+) -> TimingStats:
+    """Time ``fn()`` with warmup, repeats, and device synchronization.
+
+    ``clock`` defaults to ``time.perf_counter`` and is injectable for
+    deterministic tests; ``sync`` (default ``jax.block_until_ready``) is
+    applied to the return value inside the timed region so asynchronous
+    dispatch does not leak out of the measurement.
+    """
+    if repeats < 1:
+        raise ValueError("repeats must be >= 1")
+    clock = clock or time.perf_counter
+    sync = sync or _default_sync
+    for _ in range(max(0, warmup)):
+        sync(fn())
+    samples: List[float] = []
+    for _ in range(repeats):
+        t0 = clock()
+        sync(fn())
+        samples.append(clock() - t0)
+    return stats_from_samples(samples, warmup=max(0, warmup))
+
+
+def derived_throughput(
+    stats: TimingStats,
+    *,
+    edges: Optional[int] = None,
+    supersteps: Optional[int] = None,
+    queries: Optional[int] = None,
+    flops: Optional[int] = None,
+) -> Dict[str, float]:
+    """Derive throughput metrics from the median wall time.
+
+    ``edges`` is per-superstep work: edges/s is edge *traversals* per
+    second (edges × supersteps / t) when supersteps is known, matching the
+    paper's messages-per-superstep accounting.
+    """
+    t = max(stats.median_s, 1e-12)
+    out: Dict[str, float] = {}
+    if edges is not None:
+        traversals = edges * (supersteps if supersteps else 1)
+        out["edges_per_s"] = traversals / t
+    if supersteps is not None:
+        out["supersteps_per_s"] = supersteps / t
+    if queries is not None:
+        out["qps"] = queries / t
+    if flops is not None:
+        out["gflops"] = flops / t / 1e9
+    return out

@@ -187,8 +187,11 @@ def _dhlp2_fused_loop(
             from repro.kernels.lp_blockspmm import lp_round_op
 
             # beta2 is traced; fold it into the base operand (c stays
-            # static for the kernel's BlockSpec closure)
-            Fn = lp_round_op(A_eff, F, beta2 * base, c=1.0)
+            # static for the kernel's BlockSpec closure).  use_kernel=True
+            # here forces the kernel path: when the config opts in (e.g.
+            # the bench backend matrix), the op's size heuristic must not
+            # silently fall back to the jnp reference.
+            Fn = lp_round_op(A_eff, F, beta2 * base, c=1.0, use_kernel=True)
         else:
             Fn = beta2 * base + jnp.matmul(
                 A_eff, F, preferred_element_type=acc

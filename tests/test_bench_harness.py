@@ -1,0 +1,364 @@
+"""Tier-1 tests for the repro.bench harness: timer statistics with an
+injected clock, BENCH schema round-trip/validation, backend-matrix
+expansion, report writing, and the compare gate's pass/regress/missing
+paths.  Pure host-side logic — no solver runs, no device work."""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.bench import (
+    SCHEMA_VERSION,
+    BenchRecord,
+    BenchReport,
+    SchemaError,
+    record_key,
+    register_suite,
+    stats_from_samples,
+    time_callable,
+    validate_record,
+    validate_report,
+)
+from repro.bench.compare import compare_reports
+from repro.bench.compare import main as compare_main
+from repro.bench.matrix import LP_BACKENDS, BackendSpec, expand_matrix
+from repro.bench.registry import run_suites
+from repro.bench.report import legacy_csv_line, load_report
+from repro.bench.timing import derived_throughput
+
+
+# ---------------------------------------------------------------------------
+# timing
+# ---------------------------------------------------------------------------
+class FakeClock:
+    """Scripted clock: each call returns the next scheduled instant."""
+
+    def __init__(self, deltas):
+        self.t = 0.0
+        self.deltas = list(deltas)
+        self.calls = 0
+
+    def __call__(self):
+        v = self.t
+        self.calls += 1
+        if self.deltas:
+            self.t += self.deltas.pop(0)
+        return v
+
+
+def test_time_callable_deterministic_with_injected_clock():
+    # 5 measured reps with durations 1,2,3,4,5 (clock advances once per
+    # call: start->stop advance = duration, stop->next-start advance = 0)
+    deltas = []
+    for d in (1.0, 2.0, 3.0, 4.0, 5.0):
+        deltas += [d, 0.0]
+    clock = FakeClock(deltas)
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+
+    stats = time_callable(fn, warmup=2, repeats=5, clock=clock, sync=lambda v: v)
+    assert calls["n"] == 7  # 2 warmup + 5 measured
+    assert stats.repeats == 5 and stats.warmup == 2
+    assert stats.median_s == 3.0
+    assert stats.min_s == 1.0 and stats.max_s == 5.0
+    assert stats.mean_s == 3.0
+    assert stats.p10_s == pytest.approx(1.4)
+    assert stats.p90_s == pytest.approx(4.6)
+
+
+def test_time_callable_rejects_zero_repeats():
+    with pytest.raises(ValueError):
+        time_callable(lambda: None, repeats=0)
+
+
+def test_stats_from_samples_single_sample_and_roundtrip():
+    s = stats_from_samples([0.25])
+    assert s.median_s == s.min_s == s.max_s == 0.25
+    assert type(s).from_dict(s.to_dict()) == s
+    with pytest.raises(ValueError):
+        stats_from_samples([])
+
+
+def test_derived_throughput_uses_median_and_supersteps():
+    s = stats_from_samples([2.0])
+    d = derived_throughput(s, edges=100, supersteps=10, queries=4, flops=2e9)
+    assert d["edges_per_s"] == pytest.approx(100 * 10 / 2.0)
+    assert d["supersteps_per_s"] == pytest.approx(5.0)
+    assert d["qps"] == pytest.approx(2.0)
+    assert d["gflops"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# schema
+# ---------------------------------------------------------------------------
+def _record(
+    name="case",
+    suite="suite",
+    backend="dense",
+    median=1.0,
+    derived=None,
+    strict=(),
+    error=None,
+):
+    stats = {}
+    if error is None:
+        stats = stats_from_samples([median]).to_dict()
+    return {
+        "suite": suite,
+        "name": name,
+        "backend": backend,
+        "params": {"n": 8},
+        "stats": stats,
+        "derived": dict(derived or {}),
+        "strict": list(strict),
+        **({"error": error} if error is not None else {}),
+    }
+
+
+def _report(records, env=None, label="ci"):
+    environment = {
+        "platform": "linux",
+        "machine": "x86_64",
+        "backend": "cpu",
+        "device_kind": "cpu",
+        "device_count": 1,
+    }
+    environment.update(env or {})
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "label": label,
+        "created_unix": 1_000.0,
+        "environment": environment,
+        "records": list(records),
+    }
+
+
+def test_record_roundtrip_and_key():
+    rec = BenchRecord(
+        suite="lp_matrix",
+        name="dhlp2_dense",
+        backend="dense",
+        params={"alg": "dhlp2"},
+        stats=stats_from_samples([0.5]).to_dict(),
+        derived={"outer_iters": 13.0},
+        strict=["outer_iters"],
+    )
+    d = rec.to_dict()
+    validate_record(d)
+    assert "error" not in d
+    assert BenchRecord.from_dict(d) == rec
+    assert record_key(rec) == "lp_matrix/dhlp2_dense@dense"
+    assert record_key(d) == record_key(rec)
+
+
+@pytest.mark.parametrize(
+    "mutate",
+    [
+        lambda d: d.pop("suite"),
+        lambda d: d.__setitem__("name", ""),
+        lambda d: d["stats"].pop("median_s"),
+        lambda d: d["stats"].__setitem__("repeats", 0),
+        lambda d: d["stats"].__setitem__("median_s", 99.0),  # > max_s
+        lambda d: d.__setitem__("strict", ["not_in_derived"]),
+        lambda d: d.__setitem__("stats", {}),  # no stats and no error
+    ],
+)
+def test_record_validation_rejects(mutate):
+    d = _record(derived={"x": 1.0})
+    mutate(d)
+    with pytest.raises(SchemaError):
+        validate_record(d)
+
+
+def test_error_record_is_valid_without_stats():
+    d = _record(error="boom")
+    d["stats"] = {}
+    validate_record(d)
+    assert legacy_csv_line(d).endswith("error=boom")
+
+
+def test_report_validation_duplicate_keys_and_version():
+    doc = _report([_record(), _record()])
+    with pytest.raises(SchemaError, match="duplicate"):
+        validate_report(doc)
+    doc = _report([_record()])
+    doc["schema_version"] = 999
+    with pytest.raises(SchemaError, match="schema_version"):
+        validate_report(doc)
+    validate_report(_report([_record()]))
+
+
+# ---------------------------------------------------------------------------
+# report writing
+# ---------------------------------------------------------------------------
+def test_bench_report_write_and_load(tmp_path):
+    report = BenchReport("ci", environment=_report([])["environment"])
+    report.add(BenchRecord.from_dict(_record(name="a", derived={"m": 1.0})))
+    report.add(BenchRecord.from_dict(_record(name="b")))
+    with pytest.raises(ValueError, match="duplicate"):
+        report.add(BenchRecord.from_dict(_record(name="a")))
+    paths = report.write(str(tmp_path))
+    assert paths[0] == str(tmp_path / "BENCH_ci.json")
+    assert (tmp_path / "results").is_dir()
+    doc = load_report(paths[0])
+    assert doc["label"] == "ci"
+    assert len(doc["records"]) == 2
+    assert report.suites == ["suite"]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_runs_suites_and_propagates_failures():
+    @register_suite("_test_ok", description="test-only")
+    def ok(fast):
+        return [BenchRecord.from_dict(_record(suite="_test_ok", name="x"))]
+
+    @register_suite("_test_boom", description="test-only")
+    def boom(fast):
+        raise RuntimeError("kaput")
+
+    report = BenchReport("t", environment=_report([])["environment"])
+    failures = run_suites(report, only=["_test_ok", "_test_boom"], fast=True)
+    assert failures == 1
+    assert [r.name for r in report.records] == ["x"]
+    assert report.errors and "kaput" in report.errors[0]["error"]
+    # error records inside a suite also count as failures
+    @register_suite("_test_errrec", description="test-only")
+    def errrec(fast):
+        return [
+            BenchRecord.from_dict(
+                _record(suite="_test_errrec", name="y", error="bad")
+            )
+        ]
+
+    report2 = BenchReport("t2", environment=_report([])["environment"])
+    assert run_suites(report2, only=["_test_errrec"], fast=True) == 1
+
+
+def test_registry_duplicate_record_key_fails_suite_not_driver():
+    @register_suite("_test_dup", description="test-only")
+    def dup(fast):
+        rec = _record(suite="_test_dup", name="same")
+        return [BenchRecord.from_dict(rec), BenchRecord.from_dict(rec)]
+
+    @register_suite("_test_after_dup", description="test-only")
+    def after(fast):
+        return [BenchRecord.from_dict(_record(suite="_test_after_dup"))]
+
+    report = BenchReport("t3", environment=_report([])["environment"])
+    failures = run_suites(report, only=["_test_dup", "_test_after_dup"], fast=True)
+    # the duplicate fails its suite but the driver moves on
+    assert failures == 1
+    assert "duplicate" in report.errors[0]["error"]
+    assert [r.suite for r in report.records][-1] == "_test_after_dup"
+
+
+# ---------------------------------------------------------------------------
+# backend matrix
+# ---------------------------------------------------------------------------
+def test_matrix_expansion_filters_by_device_count():
+    params = [{"alg": "dhlp1"}, {"alg": "dhlp2"}]
+    cells, skipped = expand_matrix(LP_BACKENDS, params, device_count=2)
+    names = {b.name for b, _ in cells}
+    assert names == {"dense", "sparse_coo", "sharded1", "sharded2", "pallas"}
+    assert [b.name for b in skipped] == ["sharded4"]
+    assert len(cells) == 5 * 2
+    # params are copied per cell, not shared
+    cells[0][1]["alg"] = "mutated"
+    assert params[0]["alg"] == "dhlp1"
+    cells4, skipped4 = expand_matrix(LP_BACKENDS, params, device_count=4)
+    assert not skipped4 and len(cells4) == 6 * 2
+    assert BackendSpec("sharded8", "sharded", devices=8).available(4) is False
+
+
+# ---------------------------------------------------------------------------
+# compare
+# ---------------------------------------------------------------------------
+def test_compare_pass_improvement_and_new_records():
+    base = _report([_record(name="a", median=1.0)])
+    cand = _report(
+        [_record(name="a", median=0.5), _record(name="extra", median=1.0)]
+    )
+    res = compare_reports(base, cand, tolerance=0.30)
+    assert res.ok and res.compared == 1
+    assert [f.kind for f in res.improvements] == ["timing"]
+    assert res.new_keys == ["suite/extra@dense"]
+
+
+def test_compare_timing_regression_gates_only_on_env_match():
+    base = _report([_record(name="a", median=1.0)])
+    cand = _report([_record(name="a", median=1.5)])
+    res = compare_reports(base, cand, tolerance=0.30)
+    assert not res.ok and res.regressions[0].kind == "timing"
+    # same regression on different hardware: warning, not failure
+    cand_other = _report([_record(name="a", median=1.5)], env={"machine": "arm64"})
+    res2 = compare_reports(base, cand_other, tolerance=0.30)
+    assert res2.ok and not res2.env_match
+    assert [f.kind for f in res2.warnings] == ["timing"]
+    # host_class alone also breaks the fingerprint (CPU platform/machine
+    # are identical across most linux x86_64 hosts)
+    cand_host = _report([_record(name="a", median=1.5)], env={"host_class": "ci"})
+    res_host = compare_reports(base, cand_host, tolerance=0.30)
+    assert res_host.ok and not res_host.env_match
+    # within tolerance passes
+    res3 = compare_reports(
+        base, _report([_record(name="a", median=1.2)]), tolerance=0.30
+    )
+    assert res3.ok
+
+
+def test_compare_strict_metrics_hard_fail_even_on_env_mismatch():
+    base = _report(
+        [_record(name="a", derived={"outer_iters": 13.0}, strict=["outer_iters"])]
+    )
+    cand = _report(
+        [_record(name="a", derived={"outer_iters": 40.0}, strict=["outer_iters"])],
+        env={"machine": "arm64"},
+    )
+    res = compare_reports(base, cand)
+    assert not res.ok
+    assert res.regressions[0].kind == "strict"
+    assert res.regressions[0].metric == "outer_iters"
+
+
+def test_compare_missing_and_error_records_fail():
+    base = _report([_record(name="a"), _record(name="b")])
+    cand = _report([_record(name="a", error="exploded")])
+    res = compare_reports(base, cand)
+    kinds = sorted(f.kind for f in res.regressions)
+    assert kinds == ["error", "missing"]
+
+
+def test_compare_cli_paths(tmp_path, capsys):
+    base_path = tmp_path / "baseline.json"
+    cand_path = tmp_path / "BENCH_ci.json"
+    cand_path.write_text(json.dumps(_report([_record(name="a", median=1.0)])))
+
+    # missing baseline: exit 2, or 0 with --allow-missing
+    argv = ["--baseline", str(base_path), "--candidate", str(cand_path)]
+    assert compare_main(argv) == 2
+    assert compare_main(argv + ["--allow-missing"]) == 0
+
+    # pass path + json summary
+    base_path.write_text(json.dumps(_report([_record(name="a", median=1.0)])))
+    out_json = tmp_path / "summary.json"
+    assert compare_main(argv + ["--json", str(out_json)]) == 0
+    assert json.loads(out_json.read_text())["ok"] is True
+
+    # regression path
+    cand_path.write_text(json.dumps(_report([_record(name="a", median=9.0)])))
+    assert compare_main(argv) == 1
+    assert "REGRESSIONS" in capsys.readouterr().out
+
+    # corrupt baseline: unreadable (2), never waived by --allow-missing
+    base_path.write_text("{not json")
+    assert compare_main(argv) == 2
+    assert compare_main(argv + ["--allow-missing"]) == 2
+    # schema-invalid candidate: also unreadable
+    base_path.write_text(json.dumps(_report([_record(name="a")])))
+    cand_path.write_text(json.dumps({"schema_version": 999}))
+    assert compare_main(argv) == 2
