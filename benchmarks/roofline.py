@@ -127,6 +127,102 @@ def build_table(path: str = "results/dryrun.jsonl") -> List[Dict[str, Any]]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# repro.bench suite: dry-run artifacts → BENCH records (ROADMAP item)
+# ---------------------------------------------------------------------------
+SAMPLE_ARTIFACTS = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "data", "dryrun_sample.jsonl"
+)
+
+
+def artifact_path() -> str:
+    """Pick the dry-run artifact feed for the suite.
+
+    The committed sample is the default — record keys and the strict HLO
+    census must stay reproducible against ``benchmarks/baseline.json``,
+    so a leftover ``results/dryrun.jsonl`` from a local sweep must NOT
+    silently change the suite's identity.  Feeding live artifacts is an
+    explicit opt-in via ``REPRO_DRYRUN_ARTIFACTS`` (refresh the sample
+    itself with ``python -m repro.launch.dryrun --arch dhlp-bio --out
+    benchmarks/data/dryrun_sample.jsonl`` and commit it with a refreshed
+    baseline).
+    """
+    override = os.environ.get("REPRO_DRYRUN_ARTIFACTS")
+    if override:
+        print(f"roofline: reading artifacts from {override} "
+              "(REPRO_DRYRUN_ARTIFACTS)", flush=True)
+        return override
+    return SAMPLE_ARTIFACTS
+
+
+def records(fast: bool = True) -> List[Any]:
+    """One BENCH record per analyzed (arch × shape × mesh) cell.
+
+    ``stats`` carries the measured lower+compile wall time (the only
+    clocked quantity a dry run has); the roofline terms land in
+    ``derived`` with the per-device HLO census marked strict — they are
+    deterministic functions of the committed artifact, so any drift means
+    the compiled program changed, not the runner.
+    """
+    from repro.bench import BenchRecord, stats_from_samples
+
+    path = artifact_path()
+    out: List[Any] = []
+    for rec in load(path):
+        if rec.get("status") != "ok":
+            print(
+                f"roofline: skipped {rec.get('arch')}/{rec.get('shape')}"
+                f"@{rec.get('mesh')} (status={rec.get('status')})",
+                flush=True,
+            )
+            continue
+        a = analyze(rec)
+        if a is None:
+            continue
+        wall = float(rec.get("lower_s", 0.0)) + float(rec.get("compile_s", 0.0))
+        derived = {
+            "flops_per_device": a["flops_per_device"],
+            "hbm_bytes_per_device": a["hbm_bytes_per_device"],
+            "collective_bytes_per_device": a["collective_bytes_per_device"],
+            "t_compute_s": a["t_compute_s"],
+            "t_memory_s": a["t_memory_s"],
+            "t_collective_s": a["t_collective_s"],
+            "roofline_bound_s": a["roofline_bound_s"],
+            "compute_fraction": a["compute_fraction"],
+        }
+        out.append(BenchRecord(
+            suite="roofline",
+            name=f"{a['arch']}/{a['shape']}",
+            backend=a["mesh"],
+            params={
+                "chips": a["chips"],
+                "kind": a.get("kind"),
+                "bottleneck": a["bottleneck"],
+                "artifact": (
+                    "sample" if path == SAMPLE_ARTIFACTS else "live"
+                ),
+            },
+            stats=stats_from_samples([wall]).to_dict(),
+            derived=derived,
+            strict=[
+                "flops_per_device",
+                "hbm_bytes_per_device",
+                "collective_bytes_per_device",
+            ],
+        ))
+    return out
+
+
+def register() -> None:
+    """Register the roofline suite with the shared bench registry."""
+    from repro.bench.registry import register_suite
+
+    register_suite(
+        "roofline",
+        description="roofline terms from multi-pod dry-run artifacts",
+    )(records)
+
+
 def main() -> None:
     import argparse
 

@@ -19,9 +19,14 @@ import os
 import sys
 
 # The backend matrix runs the sharded engine on 1/2/4 virtual host
-# devices; the device count is locked at jax init, so it must be set
-# before ANY jax import (respect an operator-provided override).
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+# devices (8 on the full pass — the dhlp1 × sharded8 cell needs them);
+# the device count is locked at jax init, so it must be set before ANY
+# jax import (respect an operator-provided override).  argv is peeked
+# here because argparse can only run inside main(), after this line.
+_DEVICES = 8 if "--full" in sys.argv else 4
+os.environ.setdefault(
+    "XLA_FLAGS", f"--xla_force_host_platform_device_count={_DEVICES}"
+)
 
 # make `benchmarks.*` importable when invoked as `python benchmarks/run.py`
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
@@ -42,6 +47,21 @@ def main(argv=None) -> int:
     args, _ = ap.parse_known_args(argv)
     fast = not args.full
 
+    import jax
+
+    if args.full and jax.device_count() < 8:
+        # the device count was locked from the PROCESS argv at import
+        # (sys.argv peek above) — a programmatic main(['--full']) or an
+        # abbreviated flag cannot raise it after jax initialized, and the
+        # sharded8 cells would silently vanish from the full report
+        print(
+            "run.py: --full needs 8 devices but jax initialized with "
+            f"{jax.device_count()} — invoke as `python benchmarks/run.py "
+            "--full` (literal flag) or set XLA_FLAGS yourself",
+            file=sys.stderr,
+        )
+        return 2
+
     from repro.bench import BenchReport, all_suites
     from repro.bench.registry import run_suites
     import repro.bench.matrix as bench_matrix
@@ -55,8 +75,10 @@ def main(argv=None) -> int:
     import benchmarks.table34_deleted  # noqa: F401
     import benchmarks.table56_scaling  # noqa: F401
     import benchmarks.table7_sigma  # noqa: F401
+    import benchmarks.roofline as bench_roofline
 
     bench_matrix.register()
+    bench_roofline.register()
 
     if args.list:
         for s in all_suites():

@@ -45,7 +45,7 @@ def main() -> None:
     print(f"batched multi-source:      {t_bat:.2f}s  "
           f"(gain {t_seq/max(t_bat,1e-9):.1f}x)")
 
-    # sparse COO engine (the scalable representation)
+    # sparse COO engine (the legacy scalable representation)
     sp = SparseHeteroLP(LPConfig(sigma=args.sigma))
     sp.run(norm, seeds=seeds[:, :2])
     t0 = time.time()
@@ -53,6 +53,19 @@ def main() -> None:
     t_coo = time.time() - t0
     print(f"sparse COO engine:         {t_coo:.2f}s  "
           f"(iters {res.outer_iters})")
+
+    # blocked-CSR engine via the backend registry (DESIGN.md §11) — the
+    # default scalability path that replaced COO
+    from repro.engine import make_engine
+
+    csr = make_engine("sparse", LPConfig(sigma=args.sigma))
+    csr.run(norm, seeds=seeds[:, :2])
+    t0 = time.time()
+    res = csr.run(norm, seeds=seeds)
+    t_csr = time.time() - t0
+    print(f"blocked-CSR engine:        {t_csr:.2f}s  "
+          f"(iters {res.outer_iters}, gain vs COO "
+          f"{t_coo/max(t_csr,1e-9):.1f}x)")
 
 
 if __name__ == "__main__":

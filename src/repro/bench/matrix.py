@@ -1,16 +1,25 @@
 """LP-core backend matrix: one table where kernel and sharding wins show.
 
-Runs the same propagation problem across every engine the repo has —
-dense XLA, sparse COO segment-sum, the shard_map distributed engine at
-1/2/4 (virtual) devices, and the Pallas ``lp_round_op`` kernel path — and
-emits one record per cell with identical timing discipline, plus a
-fixed-point agreement check against the dense engine (strict-gated: a
-backend that silently diverges fails CI even if it got faster).
+Runs the same propagation problem across every backend the engine
+registry knows (``repro.engine``) — dense XLA, blocked-CSR sparse, legacy
+COO segment-sum, the shard_map distributed engine at 1/2/4 (virtual)
+devices (8 on the full pass), and the fused blocked-CSR Pallas ``kernel``
+path — and emits one record per cell with identical timing discipline,
+plus a fixed-point agreement check against the dense engine
+(strict-gated: a backend that silently diverges fails CI even if it got
+faster).  The sweep iterates the registry, so registering a new backend
+grows the table without touching this file.
 
 Sharded cells need ``jax.device_count() >= k``; ``benchmarks/run.py``
 fabricates host devices via ``XLA_FLAGS`` before importing jax.  Cells
-that cannot run on this host are skipped LOUDLY (a ``skipped`` line, never
-a silent hole in the table).
+that cannot run on this host — or whose (alg, momentum) the backend does
+not support — are skipped LOUDLY (a ``skipped`` line, never a silent hole
+in the table).
+
+Momentum cells (heavy-ball, beyond-paper) run on every
+momentum-capable backend and share the momentum-off dense reference:
+fixed-seed heavy ball keeps the fixed point, so ``agree_dense`` doubles
+as the acceleration-correctness check (DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -23,14 +32,18 @@ from repro.bench.schema import BenchRecord
 from repro.bench.timing import derived_throughput, time_callable
 
 AGREEMENT_TOL = 5e-3
+# Heavy-ball coefficient for the momentum-on cells.  The case-study
+# operator's spectral radius is modest (α=0.5), so the sweet spot is small
+# — 0.1 cuts rounds ~15% where 0.5 over-accelerates and doubles them.
+MOMENTUM = 0.1
 
 
 @dataclasses.dataclass(frozen=True)
 class BackendSpec:
-    """One column of the matrix."""
+    """One column of the matrix; ``kind`` is an engine-registry key."""
 
     name: str
-    kind: str  # dense | sparse_coo | sharded | pallas
+    kind: str  # dense | sparse | sparse_coo | sharded | kernel
     devices: int = 1
 
     def available(self, device_count: int) -> bool:
@@ -39,14 +52,23 @@ class BackendSpec:
         return True
 
 
-LP_BACKENDS: Tuple[BackendSpec, ...] = (
-    BackendSpec("dense", "dense"),
-    BackendSpec("sparse_coo", "sparse_coo"),
-    BackendSpec("sharded1", "sharded", devices=1),
-    BackendSpec("sharded2", "sharded", devices=2),
-    BackendSpec("sharded4", "sharded", devices=4),
-    BackendSpec("pallas", "pallas"),
-)
+def lp_backend_specs(*, full: bool = False) -> Tuple[BackendSpec, ...]:
+    """Iterate the engine registry into matrix columns.
+
+    ``sharded`` fans out into per-device-count columns (1/2/4, plus 8 on
+    the full pass — the ROADMAP's dhlp1 × sharded8 point); every other
+    registered backend is one column under its registry key.
+    """
+    from repro.engine import available_backends
+
+    specs: List[BackendSpec] = []
+    for name in available_backends():
+        if name == "sharded":
+            for k in (1, 2, 4, 8) if full else (1, 2, 4):
+                specs.append(BackendSpec(f"sharded{k}", "sharded", devices=k))
+        else:
+            specs.append(BackendSpec(name, name))
+    return tuple(specs)
 
 
 def expand_matrix(
@@ -71,36 +93,36 @@ def expand_matrix(
 
 def _make_solve(spec: BackendSpec, cfg, norm, Y) -> Callable[[], object]:
     """Bind a no-arg solve closure for one matrix cell."""
-    from repro.core.solver import HeteroLP
-    from repro.core.sparse import SparseHeteroLP
+    from repro.engine import make_engine
 
-    if spec.kind == "dense":
-        solver = HeteroLP(dataclasses.replace(cfg, use_kernel=False))
-        return lambda: solver.run(norm, seeds=Y)
-    if spec.kind == "pallas":
-        solver = HeteroLP(dataclasses.replace(cfg, fused=True, use_kernel=True))
-        return lambda: solver.run(norm, seeds=Y)
-    if spec.kind == "sparse_coo":
-        solver = SparseHeteroLP(cfg)
-        return lambda: solver.run(norm, seeds=Y, pad_mult=256)
-    if spec.kind == "sharded":
-        from repro.parallel.hints import make_mesh_compat
-        from repro.parallel.lp_sharded import ShardedHeteroLP
+    kw = {"devices": spec.devices} if spec.kind == "sharded" else {}
+    engine = make_engine(spec.kind, cfg, **kw)
+    return lambda: engine.run(norm, seeds=Y)
 
-        mesh = make_mesh_compat((1, spec.devices), ("data", "model"))
-        solver = ShardedHeteroLP(cfg)
-        return lambda: solver.run(norm, mesh, seeds=Y)
-    raise ValueError(f"unknown backend kind {spec.kind!r}")
+
+def _cell_skip_reason(spec: BackendSpec, alg: str, momentum: float):
+    """Why a (backend, params) cell cannot run, or None."""
+    from repro.engine import get_backend_class
+
+    cls = get_backend_class(spec.kind)
+    if alg not in cls.supports_algs:
+        return f"no {alg} path for backend {spec.name}"
+    if momentum and not cls.supports_momentum:
+        return f"backend {spec.name} has no momentum loop"
+    return None
 
 
 def lp_matrix_records(fast: bool = True) -> List[BenchRecord]:
-    """The ``lp_matrix`` suite: every backend on the same drug network."""
-    from repro.core.solver import LPConfig
+    """The ``lp_matrix`` suite: every registered backend, same network."""
+    from repro.core.solver import HeteroLP, LPConfig
     from repro.data.drugnet import DrugNetSpec, make_drugnet
 
     if fast:
+        # sub-ms cells on a shared 1-core runner: more repeats per cell so
+        # the median sits below the scheduler-noise tail (the compare gate
+        # diffs medians)
         spec_net = DrugNetSpec(n_drug=48, n_disease=32, n_target=24, n_clusters=6)
-        n_seeds, repeats = 16, 2
+        n_seeds, repeats = 16, 5
         algs = ("dhlp2",)
     else:
         spec_net = DrugNetSpec(n_drug=96, n_disease=64, n_target=48, n_clusters=8)
@@ -113,8 +135,12 @@ def lp_matrix_records(fast: bool = True) -> List[BenchRecord]:
     edges = dn.network.num_edges
     Y = np.eye(n, dtype=np.float32)[:, :n_seeds]
 
-    param_sets = [{"alg": a} for a in algs]
-    cells, skipped = expand_matrix(LP_BACKENDS, param_sets)
+    # momentum on/off × alg; momentum only accelerates the fused DHLP-2
+    # round, so the on-cells pair with dhlp2
+    param_sets: List[Dict[str, object]] = [{"alg": a, "momentum": 0.0} for a in algs]
+    if "dhlp2" in algs:
+        param_sets.append({"alg": "dhlp2", "momentum": MOMENTUM})
+    cells, skipped = expand_matrix(lp_backend_specs(full=not fast), param_sets)
     records: List[BenchRecord] = []
     for b in skipped:
         print(
@@ -124,9 +150,7 @@ def lp_matrix_records(fast: bool = True) -> List[BenchRecord]:
         )
 
     # dense reference fixed points, one per alg (fixed-seed mode: every
-    # backend must land on the same answer)
-    from repro.core.solver import HeteroLP
-
+    # backend AND the momentum cells must land on the same answer)
     reference: Dict[str, np.ndarray] = {}
     for alg in algs:
         cfg = LPConfig(alg=alg, sigma=1e-4, seed_mode="fixed")
@@ -134,16 +158,14 @@ def lp_matrix_records(fast: bool = True) -> List[BenchRecord]:
 
     for spec, params in cells:
         alg = str(params["alg"])
-        if spec.kind == "pallas" and alg != "dhlp2":
-            # only the fused DHLP-2 round has a kernel path; recording a
-            # dense-path run under backend="pallas" would be a silent lie
-            print(
-                f"lp_matrix: skipped {alg}_{spec.name} "
-                f"(no kernel path for {alg})",
-                flush=True,
-            )
+        momentum = float(params["momentum"])
+        reason = _cell_skip_reason(spec, alg, momentum)
+        mom_tag = "_mom" if momentum else ""
+        name = f"{alg}{mom_tag}_{spec.name}"
+        if reason is not None:
+            print(f"lp_matrix: skipped {name} ({reason})", flush=True)
             continue
-        cfg = LPConfig(alg=alg, sigma=1e-4, seed_mode="fixed")
+        cfg = LPConfig(alg=alg, sigma=1e-4, seed_mode="fixed", momentum=momentum)
         solve = _make_solve(spec, cfg, norm, Y)
         res = solve()  # warmup: compile + first run
         stats = time_callable(solve, warmup=0, repeats=repeats)
@@ -160,10 +182,11 @@ def lp_matrix_records(fast: bool = True) -> List[BenchRecord]:
         records.append(
             BenchRecord(
                 suite="lp_matrix",
-                name=f"{alg}_{spec.name}",
+                name=name,
                 backend=spec.name,
                 params={
                     "alg": alg,
+                    "momentum": momentum,
                     "nodes": n,
                     "edges": int(edges),
                     "seeds": n_seeds,
@@ -185,5 +208,5 @@ def register() -> None:
 
     register_suite(
         "lp_matrix",
-        description="LP core across dense/sparse/sharded/pallas backends",
+        description="LP core across every engine-registry backend",
     )(lp_matrix_records)

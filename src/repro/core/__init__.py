@@ -1,4 +1,9 @@
 """Core library: the paper's contribution (DHLP-1/2) as composable modules."""
+from repro.core.blocked_csr import (
+    BlockedCSR,
+    blocked_csr_from_network,
+    split_blocked_csr_from_network,
+)
 from repro.core.closed_form import dhlp1_inner_solution, fixed_seed_solution
 from repro.core.network import (
     GraphDelta,
@@ -29,6 +34,7 @@ from repro.core.reference import (
 from repro.core.solver import HeteroLP, LPConfig, SolveResult
 
 __all__ = [
+    "BlockedCSR",
     "GraphDelta",
     "HeteroCOO",
     "HeteroLP",
@@ -39,6 +45,7 @@ __all__ = [
     "RefResult",
     "SolveResult",
     "bipartite_normalize",
+    "blocked_csr_from_network",
     "dhlp1_inner_solution",
     "extract_outputs",
     "fixed_seed_solution",
@@ -49,6 +56,7 @@ __all__ = [
     "seeds_for_nodes",
     "seeds_identity",
     "spectral_radius_upper_bound",
+    "split_blocked_csr_from_network",
     "symmetric_normalize",
     "symmetrize",
     "topk_exclusive",

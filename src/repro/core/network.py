@@ -320,7 +320,7 @@ class HeteroCOO:
 
     het_src: np.ndarray  # (E_h,) int32 — message source (column index)
     het_dst: np.ndarray  # (E_h,) int32 — message destination (row index)
-    het_w: np.ndarray    # (E_h,) float — normalized weight
+    het_w: np.ndarray  # (E_h,) float — normalized weight
     hom_src: np.ndarray
     hom_dst: np.ndarray
     hom_w: np.ndarray

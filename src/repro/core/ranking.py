@@ -21,7 +21,7 @@ from repro.core.network import NormalizedNetwork, TypePair
 
 @dataclasses.dataclass
 class LPOutputs:
-    similarities: List[np.ndarray]            # per type: (n_i, n_i)
+    similarities: List[np.ndarray]  # per type: (n_i, n_i)
     interactions: Dict[TypePair, np.ndarray]  # per pair (i<j): (n_i, n_j)
 
     def ranked_candidates(

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Literal, Optional, Tuple
 
 import jax
@@ -45,16 +46,21 @@ class LPConfig:
     alg: Algorithm = "dhlp2"
     alpha: float = 0.5
     sigma: float = 1e-3
-    max_iter: int = 1000          # outer-iteration cap (DHLP-2 rounds)
-    max_inner: int = 200          # DHLP-1 inner-loop cap
+    max_iter: int = 1000  # outer-iteration cap (DHLP-2 rounds)
+    max_inner: int = 200  # DHLP-1 inner-loop cap
     seed_mode: Optional[SeedMode] = None  # default: per-pseudocode
     mode: Literal["batched", "sequential"] = "batched"
-    seed_chunk: int = 0           # 0 = all seeds in one program
+    seed_chunk: int = 0  # 0 = all seeds in one program
     dtype: jnp.dtype = jnp.float32
-    fused: bool = True            # DHLP-2: pre-combine αβH + αM (beyond-paper)
-    # Route the fused round through the Pallas lp_blockspmm kernel
-    # (interpret-mode on CPU; Mosaic on TPU).  The jnp path lowers to the
-    # same math — the kernel buys the VMEM-resident axpy epilogue on TPU.
+    fused: bool = True  # DHLP-2: pre-combine αβH + αM (beyond-paper)
+    # Execution backend, a `repro.engine` registry key ("dense", "sparse",
+    # "sparse_coo", "sharded", "kernel", "auto").  None lets the caller
+    # decide (HeteroLP stays dense, serve/launch/bench pick via registry).
+    backend: Optional[str] = None
+    # DEPRECATED — use backend="kernel".  Routes the dense fused round
+    # through the Pallas lp_blockspmm kernel (interpret-mode on CPU; Mosaic
+    # on TPU).  Constructing LPConfig(use_kernel=True) without an explicit
+    # backend warns and maps to backend="kernel" (see __post_init__).
     use_kernel: bool = False
     # Heavy-ball acceleration (beyond-paper): F ← β²·base + A·F_t
     # + momentum·(F_t − F_{t−1}).  Same fixed point (fixed-seed mode), the
@@ -68,6 +74,17 @@ class LPConfig:
     # below 1).  ``None`` = auto-scale H by 1/(T−1); pass 1.0 for the
     # strictly-literal paper update.
     hetero_scale: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        if self.use_kernel and self.backend is None:
+            warnings.warn(
+                "LPConfig(use_kernel=True) is deprecated; use "
+                "LPConfig(backend='kernel') — the engine registry routes it "
+                "through the fused blocked-CSR Pallas round (DESIGN.md §11)",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+            object.__setattr__(self, "backend", "kernel")
 
     def resolved_hetero_scale(self, num_types: int) -> float:
         if self.hetero_scale is not None:
@@ -84,9 +101,9 @@ class LPConfig:
 
 @dataclasses.dataclass
 class SolveResult:
-    F: np.ndarray                 # (N, S) final labels
-    outer_iters: int              # rounds until all columns converged
-    inner_iters: int              # DHLP-1 total inner iterations (0 for -2)
+    F: np.ndarray  # (N, S) final labels
+    outer_iters: int  # rounds until all columns converged
+    inner_iters: int  # DHLP-1 total inner iterations (0 for -2)
     converged: bool
     per_column_iters: Optional[np.ndarray] = None
 
@@ -130,10 +147,14 @@ def _dhlp2_step_loop(
         F, active, it, col_iters = state
         src = Y if seed_mode == "fixed" else F
         # superstep A: heterogeneous injection  y' = βy + αHF
-        Yp = beta * src + alpha * jnp.matmul(H, F, preferred_element_type=acc).astype(F.dtype)
+        Yp = beta * src + alpha * jnp.matmul(
+            H, F, preferred_element_type=acc
+        ).astype(F.dtype)
         # superstep B: homogeneous propagation  f = βy' + αMF
-        Fn = beta * Yp + alpha * jnp.matmul(M, F, preferred_element_type=acc).astype(F.dtype)
-        Fn = jnp.where(active[None, :], Fn, F)      # voteToHalt: freeze
+        Fn = beta * Yp + alpha * jnp.matmul(
+            M, F, preferred_element_type=acc
+        ).astype(F.dtype)
+        Fn = jnp.where(active[None, :], Fn, F)  # voteToHalt: freeze
         delta = jnp.max(jnp.abs(Fn - F), axis=0)
         still = jnp.logical_and(active, ~(delta < sigma))
         col_iters = col_iters + active.astype(jnp.int32)
@@ -152,8 +173,7 @@ def _dhlp2_step_loop(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("sigma", "max_iter", "seed_mode", "momentum",
-                     "use_kernel"),
+    static_argnames=("sigma", "max_iter", "seed_mode", "momentum", "use_kernel"),
 )
 def _dhlp2_fused_loop(
     A_eff: jax.Array,
@@ -313,11 +333,7 @@ class HeteroLP:
     # -- assembly ----------------------------------------------------------
     @staticmethod
     def _prepare(net) -> NormalizedNetwork:
-        if isinstance(net, HeteroNetwork):
-            return net.normalize()
-        if isinstance(net, NormalizedNetwork):
-            return net
-        raise TypeError(f"unsupported network type {type(net)}")
+        return coerce_normalized(net)
 
     # -- main entry ---------------------------------------------------------
     def run(
@@ -376,8 +392,12 @@ class HeteroLP:
                 if cfg.fused:
                     A_eff, beta2 = arrays["fused"]
                     F, it, ci = _dhlp2_fused_loop(
-                        A_eff, beta2, Yd, F0d,
-                        sigma=cfg.sigma, max_iter=cfg.max_iter,
+                        A_eff,
+                        beta2,
+                        Yd,
+                        F0d,
+                        sigma=cfg.sigma,
+                        max_iter=cfg.max_iter,
                         seed_mode=cfg.resolved_seed_mode(),
                         momentum=cfg.momentum,
                         use_kernel=cfg.use_kernel,
@@ -385,8 +405,12 @@ class HeteroLP:
                 else:
                     H, M = arrays["split"]
                     F, it, ci = _dhlp2_step_loop(
-                        H, M, Yd, F0d,
-                        alpha=cfg.alpha, sigma=cfg.sigma,
+                        H,
+                        M,
+                        Yd,
+                        F0d,
+                        alpha=cfg.alpha,
+                        sigma=cfg.sigma,
                         max_iter=cfg.max_iter,
                         seed_mode=cfg.resolved_seed_mode(),
                     )
@@ -394,9 +418,14 @@ class HeteroLP:
             else:
                 H, M = arrays["split"]
                 F, it, tot_inner, ci = _dhlp1_loop(
-                    H, M, Yd, F0d,
-                    alpha=cfg.alpha, sigma=cfg.sigma,
-                    max_iter=cfg.max_iter, max_inner=cfg.max_inner,
+                    H,
+                    M,
+                    Yd,
+                    F0d,
+                    alpha=cfg.alpha,
+                    sigma=cfg.sigma,
+                    max_iter=cfg.max_iter,
+                    max_inner=cfg.max_inner,
                     seed_mode=cfg.resolved_seed_mode(),
                 )
                 ii = int(tot_inner)
@@ -441,17 +470,27 @@ class HeteroLP:
             if cfg.alg == "dhlp2":
                 H, M = arrays["split"]
                 F, it, ci = _dhlp2_step_loop(
-                    H, M, Yc, F0c,
-                    alpha=cfg.alpha, sigma=cfg.sigma, max_iter=cfg.max_iter,
+                    H,
+                    M,
+                    Yc,
+                    F0c,
+                    alpha=cfg.alpha,
+                    sigma=cfg.sigma,
+                    max_iter=cfg.max_iter,
                     seed_mode=cfg.resolved_seed_mode(),
                 )
                 ii = 0
             else:
                 H, M = arrays["split"]
                 F, it, tot_inner, ci = _dhlp1_loop(
-                    H, M, Yc, F0c,
-                    alpha=cfg.alpha, sigma=cfg.sigma,
-                    max_iter=cfg.max_iter, max_inner=cfg.max_inner,
+                    H,
+                    M,
+                    Yc,
+                    F0c,
+                    alpha=cfg.alpha,
+                    sigma=cfg.sigma,
+                    max_iter=cfg.max_iter,
+                    max_inner=cfg.max_inner,
                     seed_mode=cfg.resolved_seed_mode(),
                 )
                 ii = int(tot_inner)
@@ -468,6 +507,14 @@ class HeteroLP:
         )
 
     # -- helpers -------------------------------------------------------------
+    def operator_arrays(self, norm: NormalizedNetwork):
+        """Device-resident dense operator arrays, cached per network.
+
+        Public so the engine layer (``repro/engine/dense.py``) can reuse the
+        prepared ``split``/``fused`` arrays for its ``round`` contract.
+        """
+        return self._device_arrays(norm)
+
     def _device_arrays(self, norm: NormalizedNetwork):
         cfg = self.config
         # key by identity of the live object (held in the cache entry, so
@@ -495,6 +542,28 @@ class HeteroLP:
 
     @staticmethod
     def _chunk_columns(Y: np.ndarray, chunk: int):
-        if chunk <= 0 or chunk >= Y.shape[1]:
-            return [Y]
-        return [Y[:, i : i + chunk] for i in range(0, Y.shape[1], chunk)]
+        return chunk_columns(Y, chunk)
+
+
+def chunk_columns(Y: np.ndarray, chunk: int):
+    """Split seed/state columns into ``chunk``-wide slices (0 = no split).
+
+    Shared by every engine that honors ``LPConfig.seed_chunk`` — one copy
+    of the boundary rule, not one per backend.
+    """
+    if chunk <= 0 or chunk >= Y.shape[1]:
+        return [Y]
+    return [Y[:, i : i + chunk] for i in range(0, Y.shape[1], chunk)]
+
+
+def coerce_normalized(net) -> NormalizedNetwork:
+    """Accept a raw or normalized network; the one coercion boundary.
+
+    Shared by :class:`HeteroLP` and the engine registry
+    (``repro/engine/base.py``) so the accepted-input rule cannot drift.
+    """
+    if isinstance(net, HeteroNetwork):
+        return net.normalize()
+    if isinstance(net, NormalizedNetwork):
+        return net
+    raise TypeError(f"unsupported network type {type(net)}")

@@ -1,4 +1,4 @@
-"""Sparse (COO / segment-sum) LP engine — the scalability path.
+"""Sparse (COO / segment-sum) LP engine — the legacy scalability path.
 
 The dense engine materializes (N, N) operators; fine for the case-study
 network, hopeless for the paper's 20M-edge scaling experiments and beyond.
@@ -6,8 +6,11 @@ This engine keeps the operator as edge lists and performs each superstep as
 ``gather → multiply → segment_sum`` — exactly Giraph's
 send-messages / combine / update cycle, tensorized.
 
-The distributed version (edge shards over a device mesh + psum) lives in
-``repro/parallel/lp_sharded.py`` and reuses these bodies.
+Superseded as the default sparse path by the blocked-CSR engine
+(``repro/engine/sparse.py`` over ``core/blocked_csr.py``, DESIGN.md §11);
+kept registered as backend ``sparse_coo`` so every bench pass A/Bs the
+two layouts.  The distributed version (edge shards over a device mesh +
+psum) lives in ``repro/parallel/lp_sharded.py``.
 """
 from __future__ import annotations
 
@@ -20,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.network import HeteroCOO, NormalizedNetwork
-from repro.core.solver import LPConfig, SolveResult
+from repro.core.solver import LPConfig, SolveResult, chunk_columns
 from repro.graph.segment import scatter_spmm
 
 
@@ -113,12 +116,28 @@ def make_dhlp1_coo(alpha: float):
     @functools.partial(
         jax.jit,
         static_argnames=(
-            "num_nodes", "sigma", "max_iter", "max_inner", "seed_mode",
+            "num_nodes",
+            "sigma",
+            "max_iter",
+            "max_inner",
+            "seed_mode",
         ),
     )
     def loop(
-        het_src, het_dst, het_w, hom_src, hom_dst, hom_w, Y, F0,
-        *, num_nodes, sigma, max_iter, max_inner, seed_mode,
+        het_src,
+        het_dst,
+        het_w,
+        hom_src,
+        hom_dst,
+        hom_w,
+        Y,
+        F0,
+        *,
+        num_nodes,
+        sigma,
+        max_iter,
+        max_inner,
+        seed_mode,
     ):
         def inner(Yp, F0, active):
             def icond(istate):
@@ -217,16 +236,12 @@ class SparseHeteroLP:
                     f"F0 shape {F0.shape} must match seeds shape {Y.shape}"
                 )
 
-        def _chunk(A):
-            if cfg.seed_chunk <= 0 or cfg.seed_chunk >= Y.shape[1]:
-                return [A]
-            return [
-                A[:, i : i + cfg.seed_chunk]
-                for i in range(0, A.shape[1], cfg.seed_chunk)
-            ]
-
-        chunks = _chunk(Y)
-        f0_chunks = [None] * len(chunks) if F0 is None else _chunk(F0)
+        chunks = chunk_columns(Y, cfg.seed_chunk)
+        f0_chunks = (
+            [None] * len(chunks)
+            if F0 is None
+            else chunk_columns(F0, cfg.seed_chunk)
+        )
         # hetero weights in `op` are already scaled by hetero_scale.
         parts, outer, inner_tot, cols = [], 0, 0, []
         if cfg.alg == "dhlp2":
@@ -236,8 +251,14 @@ class SparseHeteroLP:
                 Yd = jnp.asarray(Yc, jnp.float32)
                 F0d = Yd if F0c is None else jnp.asarray(F0c, jnp.float32)
                 F, it, ci = loop(
-                    fsrc, fdst, fw, Yd, F0d,
-                    num_nodes=n, sigma=cfg.sigma, max_iter=cfg.max_iter,
+                    fsrc,
+                    fdst,
+                    fw,
+                    Yd,
+                    F0d,
+                    num_nodes=n,
+                    sigma=cfg.sigma,
+                    max_iter=cfg.max_iter,
                     seed_mode=cfg.resolved_seed_mode(),
                 )
                 parts.append(np.asarray(F, np.float64))
@@ -249,10 +270,17 @@ class SparseHeteroLP:
                 Yd = jnp.asarray(Yc, jnp.float32)
                 F0d = Yd if F0c is None else jnp.asarray(F0c, jnp.float32)
                 F, it, ti, ci = loop(
-                    op.het_src, op.het_dst, op.het_w,
-                    op.hom_src, op.hom_dst, op.hom_w,
-                    Yd, F0d,
-                    num_nodes=n, sigma=cfg.sigma, max_iter=cfg.max_iter,
+                    op.het_src,
+                    op.het_dst,
+                    op.het_w,
+                    op.hom_src,
+                    op.hom_dst,
+                    op.hom_w,
+                    Yd,
+                    F0d,
+                    num_nodes=n,
+                    sigma=cfg.sigma,
+                    max_iter=cfg.max_iter,
                     max_inner=cfg.max_inner,
                     seed_mode=cfg.resolved_seed_mode(),
                 )

@@ -1,0 +1,49 @@
+"""Unified LP execution backends (DESIGN.md §11).
+
+One propagation contract — ``prepare(norm) → Operator``,
+``solve(op, Y, F0=None) → SolveResult``, ``round(op, F, Y) → F`` — over a
+string-keyed backend registry, so backend choice is one
+``LPConfig.backend`` field instead of per-call-site branching:
+
+>>> from repro.engine import make_engine
+>>> engine = make_engine("sparse", LPConfig(alg="dhlp2"))
+>>> result = engine.run(net)            # prepare + solve
+
+Registered backends: ``dense`` (XLA matmul), ``sparse`` (blocked-CSR
+width-bucket gather), ``sparse_coo`` (legacy COO segment-sum), ``sharded``
+(device-mesh shard_map), ``kernel`` (fused blocked-CSR Pallas round), and
+the ``auto`` selection policy (:func:`select_backend`).
+"""
+
+from repro.engine.base import (
+    AUTO_DENSE_MAX_NODES,
+    BackendUnsupported,
+    LPEngine,
+    Operator,
+    UnknownBackendError,
+    available_backends,
+    get_backend_class,
+    make_engine,
+    register_backend,
+    resolve_backend,
+    select_backend,
+)
+
+# importing the submodules registers the built-in backends
+from repro.engine import dense as _dense  # noqa: E402,F401
+from repro.engine import sharded as _sharded  # noqa: E402,F401
+from repro.engine import sparse as _sparse  # noqa: E402,F401
+
+__all__ = [
+    "AUTO_DENSE_MAX_NODES",
+    "BackendUnsupported",
+    "LPEngine",
+    "Operator",
+    "UnknownBackendError",
+    "available_backends",
+    "get_backend_class",
+    "make_engine",
+    "register_backend",
+    "resolve_backend",
+    "select_backend",
+]

@@ -1,0 +1,80 @@
+"""Sharded backend: the shard_map distributed engine behind the registry.
+
+The operator shards are flat slices of the blocked-CSR slot storage
+(``BlockedCSR.to_edges``) — the same format the sparse/kernel engines
+aggregate, reshaped for the edge axis (DESIGN.md §6/§11).  The mesh is a
+deployment knob: pass ``devices=`` (edge-axis size, seed axis 1) or a
+ready ``mesh=``; ``auto`` never selects this backend.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.network import NormalizedNetwork
+from repro.core.solver import LPConfig, SolveResult
+from repro.engine.base import LPEngine, Operator, register_backend
+
+
+@register_backend("sharded")
+class ShardedEngine(LPEngine):
+    def __init__(
+        self,
+        config: Optional[LPConfig] = None,
+        *,
+        devices: Optional[int] = None,
+        mesh=None,
+        edge_axis: str = "model",
+        seed_axis: str = "data",
+        stale_sync: int = 1,
+        compression: str = "none",
+    ):
+        super().__init__(config if config is not None else LPConfig())
+        from repro.parallel.lp_sharded import ShardedHeteroLP
+
+        self.devices = devices
+        self.edge_axis = edge_axis
+        self.seed_axis = seed_axis
+        self._mesh = mesh
+        self._solver = ShardedHeteroLP(
+            self.config, stale_sync=stale_sync, compression=compression
+        )
+
+    def mesh(self):
+        if self._mesh is None:
+            import jax
+
+            from repro.parallel.hints import make_mesh_compat
+
+            k = self.devices or jax.device_count()
+            if k > jax.device_count():
+                raise ValueError(
+                    f"sharded backend needs {k} devices, host has "
+                    f"{jax.device_count()}"
+                )
+            self._mesh = make_mesh_compat((1, k), (self.seed_axis, self.edge_axis))
+        return self._mesh
+
+    def _build(self, norm: NormalizedNetwork) -> Operator:
+        prep = self._solver.prepare(
+            norm,
+            self.mesh(),
+            edge_axis=self.edge_axis,
+            seed_axis=self.seed_axis,
+        )
+        return Operator(
+            backend=self.name,
+            norm=norm,
+            num_nodes=norm.num_nodes,
+            payload=prep,
+        )
+
+    def solve(
+        self,
+        op: Operator,
+        Y: np.ndarray,
+        F0: Optional[np.ndarray] = None,
+    ) -> SolveResult:
+        return self._solver.solve_prepared(op.payload, Y, F0=F0)

@@ -1,0 +1,388 @@
+"""Sparse backends: blocked-CSR (default scalability path) + legacy COO.
+
+``sparse`` aggregates per blocked-CSR width bucket — a gather + einsum
+over each ``(rows, width)`` rectangle, concatenated and inverse-permuted
+back to node order.  No scatter: every shape is static and regular, which
+is what replaced the COO gather/segment-sum path as the default
+(DESIGN.md §11).  ``kernel`` is the same engine with each bucket's round
+routed through the fused ``csr_round`` Pallas kernel
+(``β²·Y + A_bucket @ F`` in one VMEM-resident pass).
+
+``sparse_coo`` keeps the COO/segment-sum engine
+(:class:`~repro.core.sparse.SparseHeteroLP`) registered for A/B
+comparison — the bench matrix times both layouts on every pass.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocked_csr import (
+    blocked_csr_from_network,
+    split_blocked_csr_from_network,
+)
+from repro.core.network import NormalizedNetwork
+from repro.core.solver import LPConfig, SolveResult, chunk_columns
+from repro.core.sparse import SparseHeteroLP
+from repro.engine.base import LPEngine, Operator, register_backend
+from repro.graph.segment import scatter_spmm
+from repro.kernels.segment_reduce import csr_round_op
+
+# device-side bucket: (rows, nbr, wgt) with nbr/wgt (R, width)
+Bucket = Tuple[jax.Array, jax.Array, jax.Array]
+
+
+def _device_buckets(bcsr) -> Tuple[Tuple[Bucket, ...], jax.Array]:
+    """Upload width buckets + the inverse row permutation."""
+    buckets = bcsr.width_buckets()
+    dev = tuple(
+        (
+            jnp.asarray(b.rows),
+            jnp.asarray(b.nbr),
+            jnp.asarray(b.wgt, dtype=jnp.float32),
+        )
+        for b in buckets
+    )
+    order = np.concatenate([b.rows for b in buckets])
+    inv = np.argsort(order).astype(np.int32)
+    return dev, jnp.asarray(inv)
+
+
+def _bucket_agg(buckets, inv_perm, F):
+    """``A @ F`` via per-bucket gather + einsum, back in node order."""
+    parts = []
+    for _, nbr, wgt in buckets:
+        gathered = F[nbr].astype(jnp.float32)  # (R, w, S)
+        parts.append(jnp.einsum("rw,rws->rs", wgt, gathered).astype(F.dtype))
+    return jnp.concatenate(parts, axis=0)[inv_perm]
+
+
+def _bucket_round(buckets, inv_perm, F, base, *, beta2: float):
+    """Fused kernel round: ``β²·base + A @ F`` per bucket, node order.
+
+    ``use_kernel=True`` through the op wrapper: an opted-in kernel
+    backend must never silently fall back to the oracle on a size
+    heuristic.
+    """
+    parts = [
+        csr_round_op(nbr, wgt, F, base[rows], c=beta2, use_kernel=True)
+        for rows, nbr, wgt in buckets
+    ]
+    return jnp.concatenate(parts, axis=0)[inv_perm]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "beta2",
+        "sigma",
+        "max_iter",
+        "seed_mode",
+        "momentum",
+        "use_kernel",
+    ),
+)
+def _dhlp2_csr_loop(
+    buckets,
+    inv_perm,
+    Y,
+    F0,
+    *,
+    beta2: float,
+    sigma: float,
+    max_iter: int,
+    seed_mode: str,
+    momentum: float,
+    use_kernel: bool,
+):
+    """Fused DHLP-2 on blocked-CSR buckets (same math as the dense loop)."""
+
+    def cond(state):
+        _, _, active, it, _ = state
+        return jnp.logical_and(it < max_iter, jnp.any(active))
+
+    def body(state):
+        F, F_prev, active, it, col_iters = state
+        base = Y if seed_mode == "fixed" else F
+        if use_kernel:
+            Fn = _bucket_round(buckets, inv_perm, F, base, beta2=beta2)
+        else:
+            agg = _bucket_agg(buckets, inv_perm, F)
+            Fn = beta2 * base + agg
+        if momentum:
+            Fn = Fn + momentum * (F - F_prev)
+        Fn = jnp.where(active[None, :], Fn, F)
+        delta = jnp.max(jnp.abs(Fn - F), axis=0)
+        still = jnp.logical_and(active, ~(delta < sigma))
+        col_iters = col_iters + active.astype(jnp.int32)
+        return Fn, F, still, it + 1, col_iters
+
+    s = Y.shape[1]
+    state0 = (
+        F0,
+        F0,
+        jnp.ones((s,), dtype=bool),
+        jnp.asarray(0, jnp.int32),
+        jnp.zeros((s,), jnp.int32),
+    )
+    F, _, _, iters, col_iters = jax.lax.while_loop(cond, body, state0)
+    return F, iters, col_iters
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("alpha", "sigma", "max_iter", "max_inner", "seed_mode"),
+)
+def _dhlp1_csr_loop(
+    het_buckets,
+    het_inv,
+    hom_buckets,
+    hom_inv,
+    Y,
+    F0,
+    *,
+    alpha: float,
+    sigma: float,
+    max_iter: int,
+    max_inner: int,
+    seed_mode: str,
+):
+    """DHLP-1 on blocked-CSR: outer hetero injection + inner homo solve."""
+    beta = 1.0 - alpha
+
+    def inner(Yp, F0i, active):
+        def icond(istate):
+            _, iact, it = istate
+            return jnp.logical_and(it < max_inner, jnp.any(iact))
+
+        def ibody(istate):
+            F, iact, it = istate
+            Fn = beta * Yp + alpha * _bucket_agg(hom_buckets, hom_inv, F)
+            Fn = jnp.where(iact[None, :], Fn, F)
+            delta = jnp.max(jnp.abs(Fn - F), axis=0)
+            return Fn, jnp.logical_and(iact, ~(delta < sigma)), it + 1
+
+        F, _, inner_it = jax.lax.while_loop(
+            icond, ibody, (F0i, active, jnp.asarray(0, jnp.int32))
+        )
+        return F, inner_it
+
+    def cond(state):
+        _, active, it, _, _ = state
+        return jnp.logical_and(it < max_iter, jnp.any(active))
+
+    def body(state):
+        F, active, it, tot_inner, col_iters = state
+        src = Y if seed_mode == "fixed" else F
+        Yp = beta * src + alpha * _bucket_agg(het_buckets, het_inv, F)
+        Fn, inner_it = inner(Yp, F, active)
+        Fn = jnp.where(active[None, :], Fn, F)
+        delta = jnp.max(jnp.abs(Fn - F), axis=0)
+        still = jnp.logical_and(active, ~(delta < sigma))
+        col_iters = col_iters + active.astype(jnp.int32)
+        return Fn, still, it + 1, tot_inner + inner_it, col_iters
+
+    s = Y.shape[1]
+    state0 = (
+        F0,
+        jnp.ones((s,), dtype=bool),
+        jnp.asarray(0, jnp.int32),
+        jnp.asarray(0, jnp.int32),
+        jnp.zeros((s,), jnp.int32),
+    )
+    F, _, iters, tot_inner, col_iters = jax.lax.while_loop(cond, body, state0)
+    return F, iters, tot_inner, col_iters
+
+
+class _CSRPayload:
+    """Device-resident blocked-CSR operator bundle.
+
+    ``fused`` stays None for DHLP-1 configs until ``round`` needs it —
+    the DHLP-1 solve runs on the split pair only, so the fused build
+    (COO sort + bucket packing + upload) would be wasted per prepare.
+    """
+
+    def __init__(self, fused=None, fused_inv=None, split=None):
+        self.fused = fused
+        self.fused_inv = fused_inv
+        self.split = split  # ((het_buckets, het_inv), (hom_buckets, hom_inv))
+
+
+@register_backend("sparse")
+class SparseCSREngine(LPEngine):
+    """Blocked-CSR width-bucket engine — the default scalability path."""
+
+    supports_momentum = True
+    use_kernel = False
+
+    def __init__(self, config=None, *, block_rows=64, width_mult=8):
+        super().__init__(config if config is not None else LPConfig())
+        self.block_rows = block_rows
+        self.width_mult = width_mult
+
+    def _build(self, norm: NormalizedNetwork) -> Operator:
+        cfg = self.config
+        pay = _CSRPayload()
+        if cfg.alg == "dhlp1":
+            het, hom = split_blocked_csr_from_network(
+                norm,
+                hetero_scale=cfg.resolved_hetero_scale(norm.num_types),
+                block_rows=self.block_rows,
+                width_mult=self.width_mult,
+            )
+            pay.split = (_device_buckets(het), _device_buckets(hom))
+        op = Operator(
+            backend=self.name,
+            norm=norm,
+            num_nodes=norm.num_nodes,
+            payload=pay,
+        )
+        if cfg.alg == "dhlp2":
+            self._fused_buckets(op)
+        return op
+
+    def _fused_buckets(self, op: Operator):
+        """Fused-operator buckets, built on first use (eager for dhlp2)."""
+        pay: _CSRPayload = op.payload
+        if pay.fused is None:
+            cfg = self.config
+            bcsr = blocked_csr_from_network(
+                op.norm,
+                alpha=cfg.alpha,
+                hetero_scale=cfg.resolved_hetero_scale(op.norm.num_types),
+                block_rows=self.block_rows,
+                width_mult=self.width_mult,
+            )
+            pay.fused, pay.fused_inv = _device_buckets(bcsr)
+        return pay.fused, pay.fused_inv
+
+    def solve(
+        self,
+        op: Operator,
+        Y: np.ndarray,
+        F0: Optional[np.ndarray] = None,
+    ) -> SolveResult:
+        cfg = self.config
+        pay: _CSRPayload = op.payload
+        Y = np.asarray(Y)
+        if Y.ndim == 1:
+            Y = Y[:, None]
+
+        chunks = chunk_columns(Y, cfg.seed_chunk)
+        f0_chunks = (
+            [None] * len(chunks)
+            if F0 is None
+            else chunk_columns(np.asarray(F0), cfg.seed_chunk)
+        )
+        parts: List[np.ndarray] = []
+        outer, inner_tot, cols = 0, 0, []
+        beta = 1.0 - cfg.alpha
+        for Yc, F0c in zip(chunks, f0_chunks):
+            Yd = jnp.asarray(Yc, jnp.float32)
+            F0d = Yd if F0c is None else jnp.asarray(F0c, jnp.float32)
+            if cfg.alg == "dhlp2":
+                fused, fused_inv = self._fused_buckets(op)
+                F, it, ci = _dhlp2_csr_loop(
+                    fused,
+                    fused_inv,
+                    Yd,
+                    F0d,
+                    beta2=beta * beta,
+                    sigma=cfg.sigma,
+                    max_iter=cfg.max_iter,
+                    seed_mode=cfg.resolved_seed_mode(),
+                    momentum=cfg.momentum,
+                    use_kernel=self.use_kernel,
+                )
+            else:
+                (hb, hi), (mb, mi) = pay.split
+                F, it, ti, ci = _dhlp1_csr_loop(
+                    hb,
+                    hi,
+                    mb,
+                    mi,
+                    Yd,
+                    F0d,
+                    alpha=cfg.alpha,
+                    sigma=cfg.sigma,
+                    max_iter=cfg.max_iter,
+                    max_inner=cfg.max_inner,
+                    seed_mode=cfg.resolved_seed_mode(),
+                )
+                inner_tot += int(ti)
+            parts.append(np.asarray(F, np.float64))
+            outer = max(outer, int(it))
+            cols.append(np.asarray(ci))
+        return SolveResult(
+            F=np.concatenate(parts, axis=1),
+            outer_iters=outer,
+            inner_iters=inner_tot,
+            converged=bool(outer < cfg.max_iter),
+            per_column_iters=np.concatenate(cols),
+        )
+
+    def round(self, op: Operator, F, Y):
+        cfg = self.config
+        fused, fused_inv = self._fused_buckets(op)
+        beta2 = (1.0 - cfg.alpha) ** 2
+        Fd = jnp.asarray(F, jnp.float32)
+        Yd = jnp.asarray(Y, jnp.float32)
+        if self.use_kernel:
+            out = _bucket_round(fused, fused_inv, Fd, Yd, beta2=beta2)
+        else:
+            out = beta2 * Yd + _bucket_agg(fused, fused_inv, Fd)
+        return np.asarray(out, dtype=np.float64)
+
+
+@register_backend("kernel")
+class KernelCSREngine(SparseCSREngine):
+    """Blocked-CSR with the fused ``csr_round`` Pallas kernel per bucket.
+
+    Interpret-mode on CPU, Mosaic on TPU.  Only the fused DHLP-2 round has
+    a kernel; DHLP-1's two-phase schedule stays on ``sparse``/``dense``.
+    """
+
+    supports_algs = ("dhlp2",)
+    use_kernel = True
+
+
+@register_backend("sparse_coo")
+class SparseCOOEngine(LPEngine):
+    """Legacy COO gather/segment-sum engine behind the registry."""
+
+    def __init__(self, config=None, *, pad_mult: int = 256):
+        super().__init__(config if config is not None else LPConfig())
+        self.pad_mult = pad_mult
+
+    def _build(self, norm: NormalizedNetwork) -> Operator:
+        solver = SparseHeteroLP(self.config)
+        solver._operator(norm, self.pad_mult)  # upload now
+        return Operator(
+            backend=self.name,
+            norm=norm,
+            num_nodes=norm.num_nodes,
+            payload=solver,
+        )
+
+    def solve(
+        self,
+        op: Operator,
+        Y: np.ndarray,
+        F0: Optional[np.ndarray] = None,
+    ) -> SolveResult:
+        return op.payload.run(op.norm, seeds=Y, pad_mult=self.pad_mult, F0=F0)
+
+    def round(self, op: Operator, F, Y):
+        cfg = self.config
+        coo = op.payload._operator(op.norm, self.pad_mult)
+        src, dst, w = coo.fused_arrays(cfg.alpha)
+        beta2 = (1.0 - cfg.alpha) ** 2
+        Fd = jnp.asarray(F, jnp.float32)
+        Yd = jnp.asarray(Y, jnp.float32)
+        out = beta2 * Yd + scatter_spmm(src, dst, w, Fd, op.num_nodes)
+        return np.asarray(out, dtype=np.float64)

@@ -7,13 +7,23 @@ oracle used by the allclose test sweeps).
 from repro.kernels.embedding_bag import embedding_bag, embedding_bag_op, embedding_bag_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention, gqa_attention_op
 from repro.kernels.lp_blockspmm import lp_round, lp_round_op, lp_round_ref
-from repro.kernels.segment_reduce import csr_aggregate, csr_aggregate_op, csr_aggregate_ref
+from repro.kernels.segment_reduce import (
+    csr_aggregate,
+    csr_aggregate_op,
+    csr_aggregate_ref,
+    csr_round,
+    csr_round_op,
+    csr_round_ref,
+)
 
 __all__ = [
     "attention_ref",
     "csr_aggregate",
     "csr_aggregate_op",
     "csr_aggregate_ref",
+    "csr_round",
+    "csr_round_op",
+    "csr_round_ref",
     "embedding_bag",
     "embedding_bag_op",
     "embedding_bag_ref",

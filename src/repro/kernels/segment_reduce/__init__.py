@@ -1,5 +1,12 @@
-from repro.kernels.segment_reduce.kernel import csr_aggregate
-from repro.kernels.segment_reduce.ops import csr_aggregate_op
-from repro.kernels.segment_reduce.ref import csr_aggregate_ref
+from repro.kernels.segment_reduce.kernel import csr_aggregate, csr_round
+from repro.kernels.segment_reduce.ops import csr_aggregate_op, csr_round_op
+from repro.kernels.segment_reduce.ref import csr_aggregate_ref, csr_round_ref
 
-__all__ = ["csr_aggregate", "csr_aggregate_op", "csr_aggregate_ref"]
+__all__ = [
+    "csr_aggregate",
+    "csr_aggregate_op",
+    "csr_aggregate_ref",
+    "csr_round",
+    "csr_round_op",
+    "csr_round_ref",
+]

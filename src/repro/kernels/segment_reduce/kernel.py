@@ -1,20 +1,30 @@
-"""Pallas TPU kernel: padded-CSR neighbor aggregation (gather + reduce).
+"""Pallas TPU kernels: padded-CSR neighbor aggregation (gather + reduce).
 
 TPU adaptation of the Giraph message loop: instead of scattering messages
 edge-by-edge (GPU-style atomics have no TPU analogue), neighbors are packed
-into an (N, max_deg) rectangle (``PaddedCSR``) so each output row *gathers*
-its inputs — a pull model with fully regular tiles:
+into an (M, max_deg) rectangle (``PaddedCSR`` / one ``BlockedCSR`` width
+bucket) so each output row *gathers* its inputs — a pull model with fully
+regular tiles:
 
-  grid = (N/bn, S/bs, D/bd); for each (node-block, seat-block, deg-block):
-      out[bn, bs] += Σ_{k<bd} wgt[bn, k] · F[nbr[bn, k], bs]
+  grid = (M/bm, S/bs, D/bd); for each (row-block, seat-block, deg-block):
+      out[bm, bs] += Σ_{k<bd} wgt[bm, k] · F[nbr[bm, k], bs]
 
 F's seed/feature column panel (N, bs) stays resident in VMEM across the
-node-block sweep (BlockSpec index ignores i), so the gather is VMEM-local —
+row-block sweep (BlockSpec index ignores i), so the gather is VMEM-local —
 the HBM traffic is one read of F per column panel plus the nbr/wgt tiles.
 VMEM budget: N·bs·4 bytes for the panel (N ≤ ~16k at bs=128 fits the 16MB
 + tiles).  For larger N the caller shards nodes first (the distributed
 engine's node bands keep per-shard N bounded).
+
+The output row count M may differ from the panel row count N: a blocked-CSR
+width bucket aggregates only its own rows while gathering from the full
+panel (DESIGN.md §11).
+
+``csr_round`` is the fused LP round: the same accumulation with a
+``c · base`` epilogue folded into the flush, so one kernel call computes
+``A_eff @ F + β²·Y`` for its row bucket without a second HBM pass.
 """
+
 from __future__ import annotations
 
 import functools
@@ -34,14 +44,14 @@ def _csr_agg_kernel(nbr_ref, wgt_ref, f_ref, out_ref, acc_ref, *, d_steps, bd):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    nbr = nbr_ref[...]            # (bn, bd)
+    nbr = nbr_ref[...]  # (bm, bd)
     wgt = wgt_ref[...].astype(jnp.float32)
-    f = f_ref[...]                # (N, bs) resident panel
+    f = f_ref[...]  # (N, bs) resident panel
     # unrolled gather-accumulate over the neighbor-slot axis: each step is a
-    # (bn,)-row gather from the VMEM panel + an axpy. bd is kept small (8-32)
+    # (bm,)-row gather from the VMEM panel + an axpy. bd is kept small (8-32)
     # so the unroll stays reasonable.
     for k in range(bd):
-        rows = f[nbr[:, k], :].astype(jnp.float32)   # (bn, bs) gather
+        rows = f[nbr[:, k], :].astype(jnp.float32)  # (bm, bs) gather
         acc_ref[...] += wgt[:, k][:, None] * rows
 
     @pl.when(d == d_steps - 1)
@@ -49,33 +59,63 @@ def _csr_agg_kernel(nbr_ref, wgt_ref, f_ref, out_ref, acc_ref, *, d_steps, bd):
         out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("bn", "bs", "bd", "interpret")
-)
+def _csr_round_kernel(
+    nbr_ref, wgt_ref, f_ref, base_ref, out_ref, acc_ref, *, d_steps, bd, c
+):
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init():
+        # epilogue folded into init: acc starts at c·base, the deg sweep
+        # accumulates A_eff @ F on top — one VMEM-resident fused round.
+        acc_ref[...] = c * base_ref[...].astype(jnp.float32)
+
+    nbr = nbr_ref[...]
+    wgt = wgt_ref[...].astype(jnp.float32)
+    f = f_ref[...]
+    for k in range(bd):
+        rows = f[nbr[:, k], :].astype(jnp.float32)
+        acc_ref[...] += wgt[:, k][:, None] * rows
+
+    @pl.when(d == d_steps - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def _pad_inputs(nbr, wgt, F, bm, bs, bd):
+    m, dmax = nbr.shape
+    n, s = F.shape
+    m_pad = cdiv(m, bm) * bm
+    n_pad = cdiv(n, 8) * 8  # panel rows to the f32 sublane multiple
+    s_pad = cdiv(s, bs) * bs
+    d_pad = cdiv(dmax, bd) * bd
+    if m_pad != m or d_pad != dmax:
+        nbr = jnp.pad(nbr, ((0, m_pad - m), (0, d_pad - dmax)))
+        wgt = jnp.pad(wgt, ((0, m_pad - m), (0, d_pad - dmax)))
+    if n_pad != n or s_pad != s:
+        F = jnp.pad(F, ((0, n_pad - n), (0, s_pad - s)))
+    return nbr, wgt, F, m_pad, s_pad, d_pad
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bs", "bd", "interpret"))
 def csr_aggregate(
-    nbr: jax.Array,   # (N, D) int32
-    wgt: jax.Array,   # (N, D)
-    F: jax.Array,     # (N, S)
+    nbr: jax.Array,  # (M, D) int32
+    wgt: jax.Array,  # (M, D)
+    F: jax.Array,  # (N, S)
     *,
     bn: int = 256,
     bs: int = 128,
     bd: int = 16,
     interpret: bool | None = None,
 ) -> jax.Array:
-    n, dmax = nbr.shape
-    _, s = F.shape
-    bn = min(bn, n)
+    """out[r] = Σ_k wgt[r, k] · F[nbr[r, k]] for M rows over an (N, S) panel."""
+    m, dmax = nbr.shape
+    n, s = F.shape
+    bm = min(bn, m)
     bs = min(bs, s)
     bd = min(bd, dmax)
-    n_pad = cdiv(n, bn) * bn
-    s_pad = cdiv(s, bs) * bs
-    d_pad = cdiv(dmax, bd) * bd
-    if n_pad != n or d_pad != dmax:
-        nbr = jnp.pad(nbr, ((0, n_pad - n), (0, d_pad - dmax)))
-        wgt = jnp.pad(wgt, ((0, n_pad - n), (0, d_pad - dmax)))
-    if n_pad != n or s_pad != s:
-        F = jnp.pad(F, ((0, n_pad - n), (0, s_pad - s)))
-    grid = (n_pad // bn, s_pad // bs, d_pad // bd)
+    nbr, wgt, F, m_pad, s_pad, d_pad = _pad_inputs(nbr, wgt, F, bm, bs, bd)
+    grid = (m_pad // bm, s_pad // bs, d_pad // bd)
     if interpret is None:
         interpret = default_interpret()
     kernel = functools.partial(_csr_agg_kernel, d_steps=grid[2], bd=bd)
@@ -83,18 +123,72 @@ def csr_aggregate(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bn, bd), lambda i, j, d: (i, d)),       # nbr tile
-            pl.BlockSpec((bn, bd), lambda i, j, d: (i, d)),       # wgt tile
-            pl.BlockSpec((n_pad, bs), lambda i, j, d: (0, j)),    # F panel
+            pl.BlockSpec((bm, bd), lambda i, j, d: (i, d)),  # nbr tile
+            pl.BlockSpec((bm, bd), lambda i, j, d: (i, d)),  # wgt tile
+            pl.BlockSpec((F.shape[0], bs), lambda i, j, d: (0, j)),  # F panel
         ],
-        out_specs=pl.BlockSpec((bn, bs), lambda i, j, d: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((n_pad, s_pad), F.dtype),
-        scratch_shapes=[pltpu.VMEM((bn, bs), jnp.float32)],
+        out_specs=pl.BlockSpec((bm, bs), lambda i, j, d: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, s_pad), F.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bs), jnp.float32)],
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(nbr, wgt, F)
-    if n_pad != n or s_pad != s:
-        out = out[:n, :s]
+    if m_pad != m or s_pad != s:
+        out = out[:m, :s]
+    return out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("c", "bn", "bs", "bd", "interpret")
+)
+def csr_round(
+    nbr: jax.Array,  # (M, D) int32
+    wgt: jax.Array,  # (M, D)
+    F: jax.Array,  # (N, S)
+    base: jax.Array,  # (M, S)
+    *,
+    c: float,
+    bn: int = 256,
+    bs: int = 128,
+    bd: int = 16,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused LP round for one row bucket: ``c·base + Σ_k wgt·F[nbr]``."""
+    m, dmax = nbr.shape
+    n, s = F.shape
+    if base.shape != (m, s):
+        raise ValueError(f"base must be ({m}, {s}), got {base.shape}")
+    bm = min(bn, m)
+    bs = min(bs, s)
+    bd = min(bd, dmax)
+    nbr, wgt, F, m_pad, s_pad, d_pad = _pad_inputs(nbr, wgt, F, bm, bs, bd)
+    if base.shape != (m_pad, s_pad):
+        base = jnp.pad(base, ((0, m_pad - m), (0, s_pad - s)))
+    grid = (m_pad // bm, s_pad // bs, d_pad // bd)
+    if interpret is None:
+        interpret = default_interpret()
+    kernel = functools.partial(
+        _csr_round_kernel, d_steps=grid[2], bd=bd, c=c
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bd), lambda i, j, d: (i, d)),  # nbr tile
+            pl.BlockSpec((bm, bd), lambda i, j, d: (i, d)),  # wgt tile
+            pl.BlockSpec((F.shape[0], bs), lambda i, j, d: (0, j)),  # F panel
+            pl.BlockSpec((bm, bs), lambda i, j, d: (i, j)),  # base tile
+        ],
+        out_specs=pl.BlockSpec((bm, bs), lambda i, j, d: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, s_pad), F.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bs), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(nbr, wgt, F, base)
+    if m_pad != m or s_pad != s:
+        out = out[:m, :s]
     return out

@@ -1,11 +1,11 @@
-"""Public wrapper: padded-CSR aggregation with fallback to the oracle."""
+"""Public wrappers: padded-CSR aggregation with fallback to the oracle."""
 from __future__ import annotations
 
 import jax
 
 from repro.kernels.common import default_interpret
-from repro.kernels.segment_reduce.kernel import csr_aggregate
-from repro.kernels.segment_reduce.ref import csr_aggregate_ref
+from repro.kernels.segment_reduce.kernel import csr_aggregate, csr_round
+from repro.kernels.segment_reduce.ref import csr_aggregate_ref, csr_round_ref
 
 # The resident F panel must fit VMEM alongside tiles: N·bs·4B ≲ 8MB.
 _MAX_RESIDENT_NODES = 16384
@@ -28,4 +28,33 @@ def csr_aggregate_op(
         return csr_aggregate_ref(nbr, wgt, F)
     return csr_aggregate(
         nbr, wgt, F, bn=bn, bs=bs, bd=bd, interpret=default_interpret()
+    )
+
+
+def csr_round_op(
+    nbr: jax.Array,
+    wgt: jax.Array,
+    F: jax.Array,
+    base: jax.Array,
+    *,
+    c: float,
+    bn: int = 256,
+    bs: int = 128,
+    bd: int = 16,
+    use_kernel: bool | None = None,
+) -> jax.Array:
+    """Fused ``c·base + A_bucket @ F`` round for one blocked-CSR bucket.
+
+    Same size heuristic as :func:`csr_aggregate_op`; the engine registry's
+    ``kernel`` backend passes ``use_kernel=True`` so an opted-in config
+    never silently falls back to the oracle.
+    """
+    n = F.shape[0]
+    if use_kernel is None:
+        use_kernel = 128 <= n <= _MAX_RESIDENT_NODES
+    if not use_kernel:
+        return csr_round_ref(nbr, wgt, F, base, c)
+    return csr_round(
+        nbr, wgt, F, base, c=c, bn=bn, bs=bs, bd=bd,
+        interpret=default_interpret(),
     )

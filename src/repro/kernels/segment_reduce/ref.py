@@ -10,14 +10,26 @@ import jax.numpy as jnp
 
 
 def csr_aggregate_ref(
-    nbr: jnp.ndarray,   # (N, D) int32 neighbor ids
-    wgt: jnp.ndarray,   # (N, D) float weights (0 = pad)
+    nbr: jnp.ndarray,   # (M, D) int32 neighbor ids
+    wgt: jnp.ndarray,   # (M, D) float weights (0 = pad)
     F: jnp.ndarray,     # (N, S) features/labels
 ) -> jnp.ndarray:
-    gathered = F[nbr]                       # (N, D, S)
+    gathered = F[nbr]                       # (M, D, S)
     acc = jnp.einsum(
         "nd,nds->ns",
         wgt.astype(jnp.float32),
         gathered.astype(jnp.float32),
     )
     return acc.astype(F.dtype)
+
+
+def csr_round_ref(
+    nbr: jnp.ndarray,   # (M, D) int32 neighbor ids
+    wgt: jnp.ndarray,   # (M, D) float weights (0 = pad)
+    F: jnp.ndarray,     # (N, S) features/labels
+    base: jnp.ndarray,  # (M, S) seed/base panel for the fused epilogue
+    c: float,
+) -> jnp.ndarray:
+    """Fused LP round oracle: ``c·base + Σ_k wgt[·,k] · F[nbr[·,k]]``."""
+    acc = csr_aggregate_ref(nbr, wgt, F).astype(jnp.float32)
+    return (c * base.astype(jnp.float32) + acc).astype(F.dtype)

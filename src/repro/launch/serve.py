@@ -24,7 +24,16 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--alg", choices=["dhlp1", "dhlp2"], default="dhlp2")
     ap.add_argument("--alpha", type=float, default=0.5)
     ap.add_argument("--sigma", type=float, default=1e-3)
-    ap.add_argument("--engine", choices=["dense", "sparse"], default="dense")
+    ap.add_argument(
+        "--engine",
+        choices=["dense", "sparse", "sparse_coo", "kernel", "auto"],
+        default="dense",
+        help="engine-registry backend (sharded is not servable)",
+    )
+    ap.add_argument(
+        "--refresh-rounds", type=int, default=0,
+        help="fused LP rounds to advance stale hints after each delta",
+    )
     ap.add_argument("--drugs", type=int, default=223)
     ap.add_argument("--diseases", type=int, default=150)
     ap.add_argument("--targets", type=int, default=95)
@@ -70,6 +79,7 @@ def main() -> None:
         engine=args.engine,
         cache_columns=args.cache_columns,
         warm_start=not args.no_warm_start,
+        refresh_rounds=args.refresh_rounds,
         max_batch=args.max_batch,
         max_wait_s=args.max_wait_ms / 1e3,
         queue_depth=args.queue_depth,

@@ -1,12 +1,13 @@
 """LP serving driver — the paper's end-to-end workflow (Fig. 2 steps A-G).
 
 Builds (or generates) the heterogeneous drug/disease/target network,
-normalizes it, runs DHLP-1 or DHLP-2 to σ-convergence, and emits the three
-outputs: predicted interaction matrices, updated similarity matrices, and
-per-entity ranked candidate lists.
+normalizes it, runs DHLP-1 or DHLP-2 to σ-convergence on the selected
+engine backend, and emits the three outputs: predicted interaction
+matrices, updated similarity matrices, and per-entity ranked candidates.
 
   PYTHONPATH=src python -m repro.launch.solve --alg dhlp2 --sigma 1e-3 \
       --drugs 223 --diseases 150 --targets 95 --top-k 20
+  PYTHONPATH=src python -m repro.launch.solve --backend sharded --devices 2
 """
 from __future__ import annotations
 
@@ -24,7 +25,11 @@ def main() -> None:
     ap.add_argument("--sigma", type=float, default=1e-3)
     ap.add_argument("--mode", choices=["batched", "sequential"],
                     default="batched")
-    ap.add_argument("--engine", choices=["dense", "sparse"], default="dense")
+    ap.add_argument("--backend", "--engine", dest="backend", default="dense",
+                    help="engine-registry backend "
+                         "(dense/sparse/sparse_coo/kernel/sharded/auto)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="edge-shard count for --backend sharded")
     ap.add_argument("--drugs", type=int, default=223)
     ap.add_argument("--diseases", type=int, default=150)
     ap.add_argument("--targets", type=int, default=95)
@@ -35,9 +40,9 @@ def main() -> None:
     ap.add_argument("--out", default=None, help="write outputs npz here")
     args = ap.parse_args()
 
-    from repro.core import HeteroLP, LPConfig, extract_outputs
-    from repro.core.sparse import SparseHeteroLP
+    from repro.core import LPConfig, extract_outputs
     from repro.data.drugnet import DrugNetSpec, make_drugnet
+    from repro.engine import UnknownBackendError, make_engine, resolve_backend
 
     dn = make_drugnet(DrugNetSpec(
         n_drug=args.drugs, n_disease=args.diseases, n_target=args.targets,
@@ -50,11 +55,17 @@ def main() -> None:
     cfg = LPConfig(
         alg=args.alg, alpha=args.alpha, sigma=args.sigma, mode=args.mode,
     )
+    try:
+        backend = resolve_backend(
+            args.backend, num_nodes=net.num_nodes, config=cfg
+        )
+    except UnknownBackendError as e:
+        ap.error(str(e))
+    kw = {"devices": args.devices} if backend == "sharded" else {}
+    engine = make_engine(backend, cfg, **kw)
+    print(f"[solve] backend: {backend}")
     t0 = time.time()
-    if args.engine == "sparse":
-        res = SparseHeteroLP(cfg).run(norm)
-    else:
-        res = HeteroLP(cfg).run(net)
+    res = engine.run(norm)
     dt = time.time() - t0
     print(
         f"[solve] {args.alg} converged={res.converged} "

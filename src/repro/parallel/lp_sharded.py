@@ -35,6 +35,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.parallel.hints import shard_map_compat
 
+from repro.core.blocked_csr import (
+    blocked_csr_from_network,
+    split_blocked_csr_from_network,
+)
 from repro.core.network import NormalizedNetwork
 from repro.core.solver import LPConfig, SolveResult
 from repro.graph.segment import segment_sum
@@ -52,30 +56,49 @@ class ShardedLPArrays:
     beta2: float
 
 
-def prepare_sharded_operator(
-    norm: NormalizedNetwork, cfg: LPConfig, num_edge_shards: int
-) -> ShardedLPArrays:
-    coo = norm.to_coo()
-    scale = cfg.resolved_hetero_scale(norm.num_types)
-    alpha, beta = cfg.alpha, 1.0 - cfg.alpha
-    src = np.concatenate([coo.het_src, coo.hom_src])
-    dst = np.concatenate([coo.het_dst, coo.hom_dst])
-    w = np.concatenate(
-        [alpha * beta * scale * coo.het_w, alpha * coo.hom_w]
-    ).astype(np.float32)
-    # destination-contiguous shards balance the segment-sum output bands
-    order = np.argsort(dst, kind="stable")
-    src, dst, w = src[order], dst[order], w[order]
+def _shard_edges(src, dst, w, num_edge_shards: int):
+    """Slice a destination-sorted edge triple into k equal shards.
+
+    Inputs come from ``BlockedCSR.to_edges(include_pads=False)``: slots
+    are row-major (dst non-decreasing) with the zero-weight tile padding
+    already dropped, so equal slices are destination-contiguous — each
+    shard's segment-sum output band stays localized, same property the
+    COO prep sorted for — and a segment-sum never touches pad slots
+    (which on skewed graphs would multiply per-superstep work).
+    """
     e = src.shape[0]
     per = max(1, -(-e // num_edge_shards))
     pad = per * num_edge_shards - e
     src = np.concatenate([src, np.zeros(pad, np.int32)])
     dst = np.concatenate([dst, np.zeros(pad, np.int32)])
-    w = np.concatenate([w, np.zeros(pad, np.float32)])
+    w = np.concatenate([w.astype(np.float32), np.zeros(pad, np.float32)])
+    return (
+        src.reshape(num_edge_shards, per),
+        dst.reshape(num_edge_shards, per),
+        w.reshape(num_edge_shards, per),
+    )
+
+
+def prepare_sharded_operator(
+    norm: NormalizedNetwork, cfg: LPConfig, num_edge_shards: int
+) -> ShardedLPArrays:
+    """Fused DHLP-2 operator as edge shards, derived from blocked-CSR.
+
+    The blocked-CSR operator (DESIGN.md §11) is the shared format: shards
+    are flat slices of its row-major slot storage, so the sharded engine
+    consumes exactly the operator the sparse/kernel engines aggregate.
+    """
+    scale = cfg.resolved_hetero_scale(norm.num_types)
+    beta = 1.0 - cfg.alpha
+    bcsr = blocked_csr_from_network(
+        norm, alpha=cfg.alpha, hetero_scale=scale
+    )
+    src, dst, w = bcsr.to_edges(include_pads=False)
+    src, dst, w = _shard_edges(src, dst, w, num_edge_shards)
     return ShardedLPArrays(
-        src=src.reshape(num_edge_shards, per),
-        dst=dst.reshape(num_edge_shards, per),
-        w=w.reshape(num_edge_shards, per),
+        src=src,
+        dst=dst,
+        w=w,
         num_nodes=norm.num_nodes,
         beta2=beta * beta,
     )
@@ -94,16 +117,18 @@ def build_sharded_dhlp2(
     stale_sync: int = 1,
     compression: str = "none",
 ):
-    """Returns a jit-compiled sharded DHLP-2 solver fn(src, dst, w, Y).
+    """Returns a jit-compiled sharded DHLP-2 solver fn(src, dst, w, Y, F0).
 
-    Input shardings: edge arrays P(edge_axis, None); Y P(None, seed_axis).
+    Input shardings: edge arrays P(edge_axis, None); Y and the warm-start
+    state F0 P(None, seed_axis) (pass Y as F0 for a cold solve).
     Output: F with P(None, seed_axis), iteration count (replicated).
     """
 
-    def shard_body(src, dst, w, Y):
-        # src/dst/w: (1, Ep) local edge shard; Y: (N, s_local)
+    def shard_body(src, dst, w, Y, F0):
+        # src/dst/w: (1, Ep) local edge shard; Y/F0: (N, s_local)
         src, dst, w = src[0], dst[0], w[0]
         Y = Y.astype(jnp.float32)
+        F0 = F0.astype(jnp.float32)
 
         def local_agg(F):
             msgs = w[:, None] * F[src]
@@ -154,7 +179,7 @@ def build_sharded_dhlp2(
 
         s = Y.shape[1]
         state0 = (
-            Y,
+            F0,
             jnp.ones((s,), dtype=bool),
             jnp.asarray(0, jnp.int32),
             jnp.zeros((s,), jnp.int32),
@@ -172,6 +197,7 @@ def build_sharded_dhlp2(
             P(edge_axis, None),
             P(edge_axis, None),
             P(edge_axis, None),
+            P(None, seed_axis),
             P(None, seed_axis),
         ),
         out_specs=(P(None, seed_axis), P(seed_axis), P(seed_axis)),
@@ -202,10 +228,11 @@ def build_sharded_dhlp1(
     """
     beta = 1.0 - alpha
 
-    def shard_body(h_src, h_dst, h_w, m_src, m_dst, m_w, Y):
+    def shard_body(h_src, h_dst, h_w, m_src, m_dst, m_w, Y, F0):
         h_src, h_dst, h_w = h_src[0], h_dst[0], h_w[0]
         m_src, m_dst, m_w = m_src[0], m_dst[0], m_w[0]
         Y = Y.astype(jnp.float32)
+        F0 = F0.astype(jnp.float32)
 
         def agg(src, dst, w, F):
             local = segment_sum(w[:, None] * F[src], dst, num_nodes)
@@ -253,7 +280,7 @@ def build_sharded_dhlp1(
 
         s = Y.shape[1]
         state0 = (
-            Y,
+            F0,
             jnp.ones((s,), dtype=bool),
             jnp.asarray(0, jnp.int32),
             jnp.asarray(0, jnp.int32),
@@ -269,6 +296,7 @@ def build_sharded_dhlp1(
             P(edge_axis, None), P(edge_axis, None), P(edge_axis, None),
             P(edge_axis, None), P(edge_axis, None), P(edge_axis, None),
             P(None, seed_axis),
+            P(None, seed_axis),
         ),
         out_specs=(P(None, seed_axis), P(seed_axis), P(seed_axis)),
         check=False,
@@ -279,30 +307,32 @@ def build_sharded_dhlp1(
 def _prepare_split_operator(
     norm: NormalizedNetwork, cfg: LPConfig, num_edge_shards: int
 ):
-    """Hetero and homo edge shards (scaled), padded per shard."""
-    coo = norm.to_coo()
+    """Hetero and homo edge shards (scaled) from the blocked-CSR operators.
+
+    The blocked-CSR pair is the same format the sparse engine's DHLP-1
+    buckets aggregate; its row-major slots flatten to destination-sorted
+    shards directly.
+    """
     scale = cfg.resolved_hetero_scale(norm.num_types)
-
-    def shard(src, dst, w):
-        order = np.argsort(dst, kind="stable")
-        src, dst, w = src[order], dst[order], w[order].astype(np.float32)
-        per = max(1, -(-len(src) // num_edge_shards))
-        pad = per * num_edge_shards - len(src)
-        return (
-            np.concatenate([src, np.zeros(pad, np.int32)]).reshape(
-                num_edge_shards, per
-            ),
-            np.concatenate([dst, np.zeros(pad, np.int32)]).reshape(
-                num_edge_shards, per
-            ),
-            np.concatenate([w, np.zeros(pad, np.float32)]).reshape(
-                num_edge_shards, per
-            ),
-        )
-
-    het = shard(coo.het_src, coo.het_dst, scale * coo.het_w)
-    hom = shard(coo.hom_src, coo.hom_dst, coo.hom_w)
+    het_csr, hom_csr = split_blocked_csr_from_network(
+        norm, hetero_scale=scale
+    )
+    het = _shard_edges(*het_csr.to_edges(include_pads=False), num_edge_shards)
+    hom = _shard_edges(*hom_csr.to_edges(include_pads=False), num_edge_shards)
     return het, hom
+
+
+@dataclasses.dataclass
+class ShardedPrepared:
+    """Device-ready operator shards + the compiled solver for one mesh."""
+
+    mesh: Mesh
+    num_nodes: int
+    arrays: Tuple[jax.Array, ...]
+    solver: object
+    alg: str
+    edge_axis: str
+    seed_axis: str
 
 
 class ShardedHeteroLP:
@@ -318,28 +348,30 @@ class ShardedHeteroLP:
         self.config = config
         self.stale_sync = stale_sync
         self.compression = compression
+        self._prep_cache: Optional[Tuple[object, Mesh, ShardedPrepared]] = None
 
-    def run(
+    def prepare(
         self,
         norm: NormalizedNetwork,
         mesh: Mesh,
-        seeds: Optional[np.ndarray] = None,
         *,
         edge_axis: str = "model",
         seed_axis: str = "data",
-    ) -> SolveResult:
+    ) -> ShardedPrepared:
+        """Shard the operator and build the compiled solver once per
+        (network, mesh, axes) — repeat solves skip re-upload AND re-trace."""
+        cache = self._prep_cache
+        if (
+            cache is not None
+            and cache[0] is norm
+            and cache[1] is mesh
+            and cache[2].edge_axis == edge_axis
+            and cache[2].seed_axis == seed_axis
+        ):
+            return cache[2]
         cfg = self.config
         k_edges = mesh.shape[edge_axis]
-        k_seeds = mesh.shape[seed_axis]
         n = norm.num_nodes
-        Y = np.eye(n, dtype=np.float32) if seeds is None else np.asarray(seeds)
-        if Y.ndim == 1:
-            Y = Y[:, None]
-        s = Y.shape[1]
-        pad_s = (-s) % k_seeds
-        if pad_s:
-            Y = np.concatenate([Y, np.zeros((n, pad_s), Y.dtype)], axis=1)
-
         if cfg.alg == "dhlp1":
             het, hom = _prepare_split_operator(norm, cfg, k_edges)
             solver = build_sharded_dhlp1(
@@ -354,11 +386,71 @@ class ShardedHeteroLP:
                 seed_axis=seed_axis,
                 compression=self.compression,
             )
-            F, iters, tot_inner = solver(
-                jnp.asarray(het[0]), jnp.asarray(het[1]), jnp.asarray(het[2]),
-                jnp.asarray(hom[0]), jnp.asarray(hom[1]), jnp.asarray(hom[2]),
-                jnp.asarray(Y, jnp.float32),
+            arrays = tuple(
+                jnp.asarray(a) for a in (*het, *hom)
             )
+        else:
+            arrs = prepare_sharded_operator(norm, cfg, k_edges)
+            solver = build_sharded_dhlp2(
+                mesh,
+                num_nodes=n,
+                beta2=arrs.beta2,
+                sigma=cfg.sigma,
+                max_iter=cfg.max_iter,
+                seed_mode=cfg.resolved_seed_mode(),
+                edge_axis=edge_axis,
+                seed_axis=seed_axis,
+                stale_sync=self.stale_sync,
+                compression=self.compression,
+            )
+            arrays = (
+                jnp.asarray(arrs.src),
+                jnp.asarray(arrs.dst),
+                jnp.asarray(arrs.w),
+            )
+        prep = ShardedPrepared(
+            mesh=mesh,
+            num_nodes=n,
+            arrays=arrays,
+            solver=solver,
+            alg=cfg.alg,
+            edge_axis=edge_axis,
+            seed_axis=seed_axis,
+        )
+        self._prep_cache = (norm, mesh, prep)
+        return prep
+
+    def solve_prepared(
+        self,
+        prep: ShardedPrepared,
+        Y: np.ndarray,
+        F0: Optional[np.ndarray] = None,
+    ) -> SolveResult:
+        cfg = self.config
+        n = prep.num_nodes
+        k_seeds = prep.mesh.shape[prep.seed_axis]
+        Y = np.asarray(Y)
+        if Y.ndim == 1:
+            Y = Y[:, None]
+        s = Y.shape[1]
+        pad_s = (-s) % k_seeds
+        if pad_s:
+            Y = np.concatenate([Y, np.zeros((n, pad_s), Y.dtype)], axis=1)
+        if F0 is None:
+            F0 = Y
+        else:
+            F0 = np.asarray(F0)
+            if F0.ndim == 1:
+                F0 = F0[:, None]
+            if pad_s:
+                F0 = np.concatenate(
+                    [F0, np.zeros((n, pad_s), F0.dtype)], axis=1
+                )
+        Yd = jnp.asarray(Y, jnp.float32)
+        F0d = jnp.asarray(F0, jnp.float32)
+
+        if prep.alg == "dhlp1":
+            F, iters, tot_inner = prep.solver(*prep.arrays, Yd, F0d)
             outer = int(np.max(np.asarray(iters)))
             return SolveResult(
                 F=np.asarray(F, np.float64)[:, :s],
@@ -366,31 +458,29 @@ class ShardedHeteroLP:
                 inner_iters=int(np.max(np.asarray(tot_inner))),
                 converged=bool(outer < cfg.max_iter),
             )
-
-        arrs = prepare_sharded_operator(norm, cfg, k_edges)
-        solver = build_sharded_dhlp2(
-            mesh,
-            num_nodes=n,
-            beta2=arrs.beta2,
-            sigma=cfg.sigma,
-            max_iter=cfg.max_iter,
-            seed_mode=cfg.resolved_seed_mode(),
-            edge_axis=edge_axis,
-            seed_axis=seed_axis,
-            stale_sync=self.stale_sync,
-            compression=self.compression,
-        )
-        F, iters, col_iters = solver(
-            jnp.asarray(arrs.src), jnp.asarray(arrs.dst), jnp.asarray(arrs.w),
-            jnp.asarray(Y, jnp.float32),
-        )
-        F = np.asarray(F, np.float64)[:, :s]
-        col = np.asarray(col_iters)[:s]
+        F, iters, col_iters = prep.solver(*prep.arrays, Yd, F0d)
         outer = int(np.max(np.asarray(iters)))
         return SolveResult(
-            F=F,
+            F=np.asarray(F, np.float64)[:, :s],
             outer_iters=outer,
             inner_iters=0,
             converged=bool(outer < cfg.max_iter),
-            per_column_iters=col,
+            per_column_iters=np.asarray(col_iters)[:s],
         )
+
+    def run(
+        self,
+        norm: NormalizedNetwork,
+        mesh: Mesh,
+        seeds: Optional[np.ndarray] = None,
+        *,
+        edge_axis: str = "model",
+        seed_axis: str = "data",
+        F0: Optional[np.ndarray] = None,
+    ) -> SolveResult:
+        n = norm.num_nodes
+        Y = np.eye(n, dtype=np.float32) if seeds is None else seeds
+        prep = self.prepare(
+            norm, mesh, edge_axis=edge_axis, seed_axis=seed_axis
+        )
+        return self.solve_prepared(prep, Y, F0=F0)

@@ -112,6 +112,14 @@ class ColumnCache:
     def stale_hint(self, node: int) -> Optional[np.ndarray]:
         return self._stale.get(node)
 
+    def stale_nodes(self) -> List[int]:
+        """Nodes currently holding a demoted warm-start hint."""
+        return list(self._stale)
+
+    def put_stale(self, node: int, col: np.ndarray) -> None:
+        """Replace a node's hint (serve's post-delta refresh writes back)."""
+        self._stale[node] = np.asarray(col)
+
     def cached_nodes(self, version: int) -> List[int]:
         return [n for (v, n) in self._lru if v == version]
 

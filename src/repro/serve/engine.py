@@ -25,8 +25,8 @@ import numpy as np
 
 from repro.core.network import GraphDelta, HeteroNetwork
 from repro.core.ranking import topk_exclusive
-from repro.core.solver import HeteroLP, LPConfig
-from repro.core.sparse import SparseHeteroLP
+from repro.core.solver import LPConfig
+from repro.engine import make_engine, resolve_backend
 from repro.serve.cache import ColumnCache, NetworkState
 from repro.serve.scheduler import MicroBatcher
 from repro.serve.types import QueryResult, QuerySpec
@@ -37,17 +37,74 @@ class ServeConfig:
     """Engine + scheduler + cache knobs."""
 
     lp: LPConfig = LPConfig(alg="dhlp2", seed_mode="fixed")
-    engine: str = "dense"            # "dense" | "sparse"
+    # any `repro.engine` registry backend incl. "auto"; "sharded" is
+    # excluded (its mesh is a deployment decision, not a per-query knob).
+    # None defers to lp.backend, then "dense"; setting BOTH this and
+    # lp.backend to different keys is a conflict, not a silent precedence.
+    engine: Optional[str] = None
     cache_columns: int = 4096        # column-LRU capacity
     warm_start: bool = True          # neighbor/stale warm starts
     carry_untouched: bool = True     # keep untouched-type columns on delta
+    # after a delta, advance demoted stale hints this many fused LP rounds
+    # against the NEW operator (engine.round) so the next query's warm
+    # start is already partway to the moved fixed point (dhlp2 only — the
+    # round contract is the fused DHLP-2 update)
+    refresh_rounds: int = 0
     max_batch: int = 64
     max_wait_s: float = 0.005
     queue_depth: int = 1024
 
+    def resolved_engine(self) -> str:
+        """Backend key serving will use (before any ``auto`` resolution)."""
+        return self.engine or self.lp.backend or "dense"
+
     def __post_init__(self):
-        if self.engine not in ("dense", "sparse"):
-            raise ValueError(f"unknown engine {self.engine!r}")
+        if (
+            self.engine is not None
+            and self.lp.backend is not None
+            and self.engine != self.lp.backend
+        ):
+            raise ValueError(
+                f"ServeConfig.engine={self.engine!r} conflicts with "
+                f"LPConfig.backend={self.lp.backend!r}; set one (or both "
+                "to the same key)"
+            )
+        resolved = self.resolved_engine()
+        if resolved != "auto":
+            from repro.engine import UnknownBackendError, get_backend_class
+
+            try:
+                resolve_backend(resolved)
+            except UnknownBackendError as e:
+                raise ValueError(f"unknown engine {resolved!r}: {e}") from e
+            cls = get_backend_class(resolved)
+            if self.lp.alg not in cls.supports_algs:
+                # fail at construction, not at the first query batch —
+                # a bad config inside a coalesced batch fails every
+                # co-batched request
+                raise ValueError(
+                    f"engine {resolved!r} does not support alg "
+                    f"{self.lp.alg!r} (supports {cls.supports_algs})"
+                )
+            if self.lp.momentum and not cls.supports_momentum:
+                raise ValueError(
+                    f"engine {resolved!r} has no momentum loop "
+                    f"(LPConfig.momentum={self.lp.momentum})"
+                )
+        if resolved == "sharded":
+            raise ValueError(
+                "serving does not drive the sharded backend; pick "
+                "dense/sparse/sparse_coo/kernel/auto"
+            )
+        if self.refresh_rounds < 0:
+            raise ValueError("refresh_rounds must be >= 0")
+        if self.refresh_rounds and self.lp.alg != "dhlp2":
+            # engine.round is the fused DHLP-2 update; advancing DHLP-1
+            # hints with it would walk them toward the WRONG fixed point.
+            raise ValueError(
+                "refresh_rounds requires alg='dhlp2' (the round contract "
+                "is the fused DHLP-2 update)"
+            )
         if self.lp.resolved_seed_mode() != "fixed":
             # Warm starts and incremental re-solves need the F0-independent
             # fixed point; drift mode's answer depends on the start state.
@@ -63,11 +120,11 @@ class LPServeEngine:
     def __init__(self, net: HeteroNetwork, config: ServeConfig = ServeConfig()):
         self.config = config
         self._state = NetworkState.from_network(net, version=0)
-        self._solver = (
-            SparseHeteroLP(config.lp)
-            if config.engine == "sparse"
-            else HeteroLP(config.lp)
+        backend = resolve_backend(
+            config.resolved_engine(), num_nodes=net.num_nodes,
+            config=config.lp,
         )
+        self._engine = make_engine(backend, config.lp)
         self.columns = ColumnCache(config.cache_columns)
         self.batcher = MicroBatcher(
             self._solve_batch,
@@ -189,9 +246,9 @@ class LPServeEngine:
                            rounds[spec.entity]) for spec in specs]
 
     def _run_solver(self, Y: np.ndarray, F0: np.ndarray):
-        # both engines accept a NormalizedNetwork and cache their prepared
-        # operators on its identity, so repeat batches skip re-assembly
-        return self._solver.run(self._state.norm, seeds=Y, F0=F0)
+        # every registered engine caches its prepared operator on the
+        # normalized network's identity, so repeat batches skip re-assembly
+        return self._engine.run(self._state.norm, seeds=Y, F0=F0)
 
     def _cached_by_type(self) -> Dict[int, List[int]]:
         """Group the current version's cached nodes by type, once per tick."""
@@ -283,7 +340,64 @@ class LPServeEngine:
                 carry_untouched=self.config.carry_untouched,
             )
             self._state = new
+            self._maybe_rescale_engine()
+            if self.config.refresh_rounds:
+                self._refresh_stale_hints()
             return new.version
+
+    def _maybe_rescale_engine(self) -> None:
+        """Re-resolve an ``auto`` engine after the network changed size.
+
+        Node-adding deltas can push the network across the dense/sparse
+        policy boundary (§11); an ``auto`` deployment must not keep
+        rebuilding an O(N²) dense operator forever.  Explicitly pinned
+        engines are left alone.  Called under ``self._lock``.
+        """
+        if self.config.resolved_engine() != "auto":
+            return
+        backend = resolve_backend(
+            "auto", num_nodes=self._state.num_nodes, config=self.config.lp
+        )
+        if backend != self._engine.name:
+            self._engine = make_engine(backend, self.config.lp)
+
+    def _refresh_stale_hints(self) -> int:
+        """Advance demoted hints toward the new fixed point (§9.3).
+
+        One batched ``engine.round`` per refresh round: the fused update
+        ``β²Y + A_eff @ F`` is a contraction toward the NEW operator's
+        fixed point, so k rounds leave every hint k rounds closer — the
+        next query's warm start re-converges in fewer rounds without
+        paying a full solve at delta time.  Called under ``self._lock``.
+        """
+        state = self._state
+        n = state.num_nodes
+        hints = {
+            v: h
+            for v in self.columns.stale_nodes()
+            if (h := self.columns.stale_hint(v)) is not None
+            and h.shape[0] == n
+        }
+        if not hints:
+            return 0
+        op = self._engine.prepare(state.norm)
+        # the stale set is unbounded across deltas while queries cap work
+        # at max_batch — chunk the refresh the same way (f32 slabs) so a
+        # large accumulation cannot blow up memory inside the lock
+        nodes = list(hints)
+        width = max(1, self.config.max_batch)
+        for i in range(0, len(nodes), width):
+            batch = nodes[i : i + width]
+            Y = np.zeros((n, len(batch)), dtype=np.float32)
+            F = np.empty_like(Y)
+            for c, v in enumerate(batch):
+                Y[v, c] = 1.0
+                F[:, c] = hints[v]
+            for _ in range(self.config.refresh_rounds):
+                F = self._engine.round(op, F, Y)
+            for c, v in enumerate(batch):
+                self.columns.put_stale(v, F[:, c])
+        return len(nodes)
 
 
 def _make_remap(old: NetworkState, new: NetworkState):

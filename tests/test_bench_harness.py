@@ -22,7 +22,7 @@ from repro.bench import (
 )
 from repro.bench.compare import compare_reports
 from repro.bench.compare import main as compare_main
-from repro.bench.matrix import LP_BACKENDS, BackendSpec, expand_matrix
+from repro.bench.matrix import BackendSpec, expand_matrix, lp_backend_specs
 from repro.bench.registry import run_suites
 from repro.bench.report import legacy_csv_line, load_report
 from repro.bench.timing import derived_throughput
@@ -261,18 +261,34 @@ def test_registry_duplicate_record_key_fails_suite_not_driver():
 # backend matrix
 # ---------------------------------------------------------------------------
 def test_matrix_expansion_filters_by_device_count():
+    backends = lp_backend_specs()  # fast pass: registry + sharded 1/2/4
     params = [{"alg": "dhlp1"}, {"alg": "dhlp2"}]
-    cells, skipped = expand_matrix(LP_BACKENDS, params, device_count=2)
+    cells, skipped = expand_matrix(backends, params, device_count=2)
     names = {b.name for b, _ in cells}
-    assert names == {"dense", "sparse_coo", "sharded1", "sharded2", "pallas"}
+    assert names == {
+        "dense", "kernel", "sparse", "sparse_coo", "sharded1", "sharded2",
+    }
     assert [b.name for b in skipped] == ["sharded4"]
-    assert len(cells) == 5 * 2
+    assert len(cells) == 6 * 2
     # params are copied per cell, not shared
     cells[0][1]["alg"] = "mutated"
     assert params[0]["alg"] == "dhlp1"
-    cells4, skipped4 = expand_matrix(LP_BACKENDS, params, device_count=4)
-    assert not skipped4 and len(cells4) == 6 * 2
+    cells4, skipped4 = expand_matrix(backends, params, device_count=4)
+    assert not skipped4 and len(cells4) == 7 * 2
     assert BackendSpec("sharded8", "sharded", devices=8).available(4) is False
+
+
+def test_matrix_specs_iterate_registry():
+    """Every registered (non-sharded) backend is a matrix column, and the
+    full pass grows the sharded fan-out to 8."""
+    from repro.engine import available_backends
+
+    fast = {s.name for s in lp_backend_specs()}
+    for name in available_backends():
+        if name != "sharded":
+            assert name in fast
+    full = {s.name for s in lp_backend_specs(full=True)}
+    assert "sharded8" in full and "sharded8" not in fast
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,194 @@
+"""Engine registry: backend contract, auto policy, parity, deprecation.
+
+The tentpole invariant (DESIGN.md §11): every registered backend solves
+the same propagation problem to the same fixed point, so backend choice
+is pure execution policy.  Parity runs on a dhlp-bio-style network
+(3 node types, the paper's case-study shape).
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import LPConfig
+from repro.core.solver import HeteroLP
+from repro.data.drugnet import DrugNetSpec, make_drugnet
+from repro.engine import (
+    AUTO_DENSE_MAX_NODES,
+    BackendUnsupported,
+    UnknownBackendError,
+    available_backends,
+    get_backend_class,
+    make_engine,
+    resolve_backend,
+    select_backend,
+)
+
+
+@pytest.fixture(scope="module")
+def bio_norm():
+    dn = make_drugnet(
+        DrugNetSpec(n_drug=40, n_disease=30, n_target=20, seed=0)
+    )
+    return dn.network.normalize()
+
+
+@pytest.fixture(scope="module")
+def seeds(bio_norm):
+    return np.eye(bio_norm.num_nodes, dtype=np.float32)[:, :10]
+
+
+class TestRegistry:
+    def test_builtin_backends_registered(self):
+        names = available_backends()
+        for expected in ("dense", "sparse", "sparse_coo", "sharded", "kernel"):
+            assert expected in names
+        assert "auto" in available_backends(include_auto=True)
+        assert "auto" not in names  # policy, not a class
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(UnknownBackendError, match="registered:"):
+            make_engine("giraph")
+        with pytest.raises(UnknownBackendError):
+            get_backend_class("pallas")  # pre-registry name must not leak
+
+    def test_registry_classes_carry_names(self):
+        for name in available_backends():
+            assert get_backend_class(name).name == name
+
+
+class TestAutoPolicy:
+    def test_small_network_goes_dense(self):
+        assert select_backend(AUTO_DENSE_MAX_NODES) == "dense"
+        assert resolve_backend("auto", num_nodes=100) == "dense"
+
+    def test_large_network_goes_sparse(self):
+        assert select_backend(AUTO_DENSE_MAX_NODES + 1) == "sparse"
+        assert resolve_backend("auto", num_nodes=10**6) == "sparse"
+
+    def test_auto_without_size_raises(self):
+        with pytest.raises(ValueError, match="num_nodes"):
+            resolve_backend("auto")
+
+    def test_none_means_auto(self):
+        assert resolve_backend(None, num_nodes=10) == "dense"
+
+    def test_concrete_backend_passes_through(self):
+        assert resolve_backend("sparse_coo", num_nodes=10) == "sparse_coo"
+
+
+class TestFixedPointParity:
+    """CSR vs COO vs dense all land on the dense fixed point."""
+
+    @pytest.mark.parametrize("alg", ["dhlp1", "dhlp2"])
+    @pytest.mark.parametrize("backend", ["sparse", "sparse_coo"])
+    def test_sparse_layouts_match_dense(self, bio_norm, seeds, alg, backend):
+        cfg = LPConfig(alg=alg, sigma=1e-4, seed_mode="fixed")
+        ref = make_engine("dense", cfg).run(bio_norm, seeds=seeds)
+        res = make_engine(backend, cfg).run(bio_norm, seeds=seeds)
+        assert np.max(np.abs(res.F - ref.F)) < 5e-3
+        assert res.converged
+
+    def test_kernel_backend_matches_dense(self, bio_norm, seeds):
+        cfg = LPConfig(alg="dhlp2", sigma=1e-4, seed_mode="fixed")
+        ref = make_engine("dense", cfg).run(bio_norm, seeds=seeds)
+        res = make_engine("kernel", cfg).run(bio_norm, seeds=seeds)
+        assert np.max(np.abs(res.F - ref.F)) < 5e-3
+
+    def test_kernel_backend_rejects_dhlp1(self, bio_norm):
+        cfg = LPConfig(alg="dhlp1")
+        with pytest.raises(BackendUnsupported, match="dhlp1"):
+            make_engine("kernel", cfg).prepare(bio_norm)
+
+    def test_momentum_incapable_backend_rejects(self, bio_norm):
+        # silently dropping a configured convergence knob would be a lie
+        cfg = LPConfig(alg="dhlp2", momentum=0.2)
+        with pytest.raises(BackendUnsupported, match="momentum"):
+            make_engine("sparse_coo", cfg).prepare(bio_norm)
+
+    def test_prepare_cache_hits_on_raw_network(self):
+        from repro.data.drugnet import DrugNetSpec, make_drugnet
+
+        net = make_drugnet(
+            DrugNetSpec(n_drug=15, n_disease=10, n_target=8)
+        ).network
+        engine = make_engine("sparse", LPConfig(sigma=1e-3))
+        op1 = engine.prepare(net)
+        assert engine.prepare(net) is op1          # raw-net identity
+        assert engine.prepare(op1.norm) is op1     # derived-norm alias
+
+    def test_momentum_same_fixed_point_on_csr(self, bio_norm, seeds):
+        cfg = LPConfig(alg="dhlp2", sigma=1e-4, seed_mode="fixed")
+        ref = make_engine("dense", cfg).run(bio_norm, seeds=seeds)
+        mom = make_engine(
+            "sparse", LPConfig(alg="dhlp2", sigma=1e-4, seed_mode="fixed",
+                               momentum=0.1)
+        ).run(bio_norm, seeds=seeds)
+        assert np.max(np.abs(mom.F - ref.F)) < 5e-3
+
+
+class TestEngineContract:
+    def test_operator_cached_by_network_identity(self, bio_norm):
+        engine = make_engine("sparse", LPConfig(sigma=1e-3))
+        op1 = engine.prepare(bio_norm)
+        assert engine.prepare(bio_norm) is op1
+
+    def test_warm_start_threads_through(self, bio_norm, seeds):
+        cfg = LPConfig(alg="dhlp2", sigma=1e-4, seed_mode="fixed")
+        for backend in ("dense", "sparse", "sparse_coo"):
+            engine = make_engine(backend, cfg)
+            cold = engine.run(bio_norm, seeds=seeds)
+            warm = engine.run(bio_norm, seeds=seeds, F0=cold.F)
+            assert warm.outer_iters <= 2, backend
+            assert np.max(np.abs(warm.F - cold.F)) < 5e-3
+
+    def test_round_moves_toward_fixed_point(self, bio_norm, seeds):
+        cfg = LPConfig(alg="dhlp2", sigma=1e-4, seed_mode="fixed")
+        for backend in ("dense", "sparse", "sparse_coo", "kernel"):
+            engine = make_engine(backend, cfg)
+            op = engine.prepare(bio_norm)
+            Fstar = engine.solve(op, seeds).F
+            # the fixed point is (numerically) invariant under one round
+            drift = np.max(np.abs(engine.round(op, Fstar, seeds) - Fstar))
+            assert drift < 1e-3, backend
+            # one round from the seed strictly reduces distance to F*
+            d0 = np.max(np.abs(np.asarray(seeds, np.float64) - Fstar))
+            d1 = np.max(np.abs(engine.round(op, seeds, seeds) - Fstar))
+            assert d1 < d0, backend
+
+    def test_sharded_rejects_oversized_mesh(self, bio_norm):
+        import jax
+
+        engine = make_engine(
+            "sharded", LPConfig(), devices=jax.device_count() + 64
+        )
+        with pytest.raises(ValueError, match="devices"):
+            engine.prepare(bio_norm)
+
+
+class TestUseKernelDeprecation:
+    def test_warns_and_maps_to_kernel_backend(self):
+        with pytest.warns(DeprecationWarning, match="backend='kernel'"):
+            cfg = LPConfig(use_kernel=True)
+        assert cfg.backend == "kernel"
+
+    def test_explicit_backend_suppresses_warning(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            cfg = LPConfig(backend="sparse")
+        assert cfg.backend == "sparse"
+
+    def test_equivalent_behavior(self, bio_norm, seeds):
+        """The shimmed config solves to the same fixed point as both the
+        legacy dense use_kernel path and the registry kernel backend."""
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            legacy_cfg = LPConfig(
+                alg="dhlp2", sigma=1e-4, seed_mode="fixed", use_kernel=True
+            )
+        assert legacy_cfg.backend == "kernel"
+        legacy_dense = HeteroLP(legacy_cfg).run(bio_norm, seeds=seeds)
+        via_registry = make_engine(
+            legacy_cfg.backend, legacy_cfg
+        ).run(bio_norm, seeds=seeds)
+        assert np.max(np.abs(via_registry.F - legacy_dense.F)) < 5e-3

@@ -293,6 +293,79 @@ class TestDeltaUpdate:
         incr = engine.query(QuerySpec(entity=0, target_type=2))
         assert incr.rounds < cold.rounds
 
+    def test_refresh_rounds_advance_stale_hints(self):
+        """engine.round-based post-delta refresh: same answer, fewer
+        re-solve rounds than an unrefreshed stale hint."""
+        net = small_net()
+        delta = GraphDelta(assoc=[((0, 2), 0, 4, 1.0)])
+
+        plain = LPServeEngine(net, serve_cfg())
+        plain.query(QuerySpec(entity=0, target_type=2))
+        plain.apply_delta(delta)
+        refreshed = LPServeEngine(net, serve_cfg(refresh_rounds=4))
+        refreshed.query(QuerySpec(entity=0, target_type=2))
+        refreshed.apply_delta(delta)
+
+        # the refreshed hint moved toward the new fixed point in place
+        h_plain = plain.columns.stale_hint(0)
+        h_ref = refreshed.columns.stale_hint(0)
+        assert h_ref is not None and not np.allclose(h_ref, h_plain)
+        r_plain = plain.query(QuerySpec(entity=0, target_type=2))
+        r_ref = refreshed.query(QuerySpec(entity=0, target_type=2))
+        assert r_ref.source == "warm"
+        assert r_ref.rounds <= r_plain.rounds
+        # and both serve the same fixed point
+        np.testing.assert_allclose(
+            refreshed.columns.get(1, 0), plain.columns.get(1, 0),
+            atol=100 * SIGMA,
+        )
+
+    def test_refresh_rounds_validation(self):
+        with pytest.raises(ValueError, match="refresh_rounds"):
+            serve_cfg(refresh_rounds=-1)
+
+    def test_refresh_rounds_rejects_dhlp1(self):
+        # engine.round is the fused DHLP-2 update; advancing DHLP-1 hints
+        # with it would walk them toward the wrong fixed point
+        with pytest.raises(ValueError, match="dhlp2"):
+            serve_cfg(
+                lp=LPConfig(alg="dhlp1", seed_mode="fixed", sigma=SIGMA),
+                refresh_rounds=2,
+            )
+
+    def test_lp_backend_field_selects_serve_engine(self):
+        cfg = serve_cfg(
+            lp=LPConfig(alg="dhlp2", seed_mode="fixed", sigma=SIGMA,
+                        backend="sparse")
+        )
+        assert cfg.resolved_engine() == "sparse"
+        engine = LPServeEngine(small_net(), cfg)
+        assert engine._engine.name == "sparse"
+
+    def test_auto_engine_rescales_after_growth_delta(self, monkeypatch):
+        """A node-adding delta crossing the dense/sparse policy boundary
+        re-resolves an 'auto' engine instead of staying dense forever."""
+        import repro.engine.base as engine_base
+
+        monkeypatch.setattr(engine_base, "AUTO_DENSE_MAX_NODES", 60)
+        net = small_net()  # 39 nodes -> dense
+        engine = LPServeEngine(net, serve_cfg(engine="auto"))
+        assert engine._engine.name == "dense"
+        engine.apply_delta(GraphDelta(add_nodes={0: 40}))  # 79 nodes
+        assert engine._engine.name == "sparse"
+        # pinned engines are left alone
+        pinned = LPServeEngine(small_net(), serve_cfg(engine="dense"))
+        pinned.apply_delta(GraphDelta(add_nodes={0: 40}))
+        assert pinned._engine.name == "dense"
+
+    def test_engine_backend_conflict_rejected(self):
+        with pytest.raises(ValueError, match="conflicts"):
+            serve_cfg(
+                lp=LPConfig(alg="dhlp2", seed_mode="fixed", sigma=SIGMA,
+                            backend="sparse"),
+                engine="dense",
+            )
+
     def test_untouched_type_columns_survive(self):
         net = small_net()
         engine = LPServeEngine(net, serve_cfg())
