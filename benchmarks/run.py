@@ -77,6 +77,10 @@ def main(argv=None) -> int:
     import benchmarks.table7_sigma  # noqa: F401
     import benchmarks.roofline as bench_roofline
 
+    # registers lp_matrix AND scenario_matrix — the fast pass carries
+    # small cells of the non-bio scenarios (kpartite5, heterophilic,
+    # powerlaw) so BENCH_ci.json and the perf-smoke gate cover them;
+    # --full adds the nominal-scale rows incl. the >=1M-edge powerlaw cell
     bench_matrix.register()
     bench_roofline.register()
 

@@ -15,6 +15,18 @@ one) so phases are comparable; a final burst measures coalesced
 throughput through the micro-batcher.
 
   PYTHONPATH=src python benchmarks/serve_bench.py --queries 40
+
+Trace-replay mode (DESIGN.md §12.3) drives the engine with a *scenario*
+workload instead of the fixed four phases: queries arrive on a real
+arrival process (poisson / bursty / diurnal), pace honored by the
+replay clock, and the scenario's timed GraphDelta stream (when it has
+one — ``streaming``) lands mid-trace.  Reports offered vs achieved QPS
+and p50/p95/p99 per process — the number that actually differs across
+processes is the tail.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py --trace streaming
+  PYTHONPATH=src python benchmarks/serve_bench.py --trace powerlaw \
+      --scale 0.02 --rate-qps 80 --horizon 2 --processes poisson,bursty
 """
 from __future__ import annotations
 
@@ -113,6 +125,125 @@ def run(args) -> Dict[str, Dict]:
     return report
 
 
+def _replay(engine, trace, deltas, *, top_k: int, time_scale: float) -> Dict:
+    """Submit ``trace`` through the micro-batcher at its own pace.
+
+    ``time_scale > 1`` compresses the clock (a 4s horizon replays in
+    4/scale seconds — same arrival *pattern*, proportionally higher
+    offered rate).  Timed deltas land between the submissions they
+    precede, exactly as a live feed would interleave them.
+    """
+    deltas = sorted(deltas, key=lambda d: d.t)
+    di = 0
+    futs = []
+    engine.start()
+    t0 = time.monotonic()
+    for i in range(len(trace)):
+        target = float(trace.t[i]) / time_scale
+        while di < len(deltas) and deltas[di].t <= float(trace.t[i]):
+            wait = deltas[di].t / time_scale - (time.monotonic() - t0)
+            if wait > 0:
+                time.sleep(wait)
+            engine.apply_delta(deltas[di].delta)
+            di += 1
+        wait = target - (time.monotonic() - t0)
+        if wait > 0:
+            time.sleep(wait)
+        futs.append(
+            engine.submit(
+                QuerySpec(
+                    entity=int(trace.entity[i]),
+                    target_type=int(trace.target_type[i]),
+                    top_k=top_k,
+                )
+            )
+        )
+    results = [f.result(timeout=600) for f in futs]
+    wall = time.monotonic() - t0
+    engine.stop()
+    lats = [r.latency_s for r in results]
+    sources = [r.source for r in results]
+    out = {
+        "queries": len(results),
+        "offered_qps": len(trace) / (trace.horizon_s / time_scale),
+        "qps": len(results) / wall,
+        "wall_s": wall,
+        "deltas_applied": di,
+        "mean_rounds": float(np.mean([r.rounds for r in results])),
+        "sources": {s: sources.count(s) for s in set(sources)},
+        "batches": engine.batcher.stats.batches,
+        "mean_batch_size": engine.batcher.stats.mean_batch_size,
+        "latencies": lats,
+    }
+    out.update(percentiles(lats))
+    return out
+
+
+def run_trace(args) -> Dict[str, Dict]:
+    """Replay mode: one report section per requested arrival process."""
+    import inspect
+
+    import repro.scenarios as sc
+
+    # scenarios that schedule their own timed workload (streaming) must
+    # schedule it against THIS replay's horizon/rate, or tail deltas
+    # would land past the last query and silently never apply; builders
+    # without those knobs are generated as-is
+    fn = sc.get_scenario(args.trace).fn
+    accepted = inspect.signature(fn).parameters
+    extra = {
+        k: v
+        for k, v in (
+            ("horizon_s", args.horizon),
+            ("rate_qps", args.rate_qps),
+        )
+        if k in accepted
+    }
+    bundle = sc.generate(
+        args.trace, scale=args.scale, seed=args.seed, **extra
+    )
+    net = bundle.network
+    cfg = ServeConfig(
+        lp=LPConfig(alg=args.alg, sigma=args.sigma, seed_mode="fixed"),
+        engine=args.engine,
+        max_batch=args.max_batch,
+        max_wait_s=2e-3,
+    )
+    processes = [p.strip() for p in args.processes.split(",") if p.strip()]
+    report: Dict[str, Dict] = {}
+    for process in processes:
+        # fresh engine per process: each replay starts cold and applies
+        # the scenario's delta stream from version 0
+        engine = LPServeEngine(net, cfg)
+        trace = sc.build_trace(
+            bundle,
+            process,
+            rate_qps=args.rate_qps,
+            horizon_s=args.horizon,
+            seed=args.seed,
+        )
+        if len(trace) == 0:
+            raise SystemExit(
+                f"--trace: the {process} trace came out empty "
+                f"(rate_qps={args.rate_qps}, horizon={args.horizon}); "
+                "raise --rate-qps or --horizon"
+            )
+        # warm the jit cache so the first arrival measures solving
+        engine.query(QuerySpec(
+            entity=int(trace.entity[0]), target_type=int(trace.target_type[0]),
+            top_k=args.top_k,
+        ))
+        engine.columns.clear()
+        report[process] = _replay(
+            engine,
+            trace,
+            bundle.deltas if args.apply_deltas else (),
+            top_k=args.top_k,
+            time_scale=args.time_scale,
+        )
+    return report
+
+
 @register_suite("serve",
                 description="online query engine QPS/latency phases")
 def records(fast: bool = True) -> List[BenchRecord]:
@@ -152,7 +283,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--alg", choices=["dhlp1", "dhlp2"], default="dhlp2")
     ap.add_argument("--sigma", type=float, default=1e-4)
-    ap.add_argument("--engine", choices=["dense", "sparse"], default="dense")
+    ap.add_argument("--engine",
+                    choices=["dense", "sparse", "sparse_coo", "kernel",
+                             "sharded", "auto"],
+                    default="dense")
     ap.add_argument("--drugs", type=int, default=223)
     ap.add_argument("--diseases", type=int, default=150)
     ap.add_argument("--targets", type=int, default=95)
@@ -162,7 +296,40 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None, help="write report here")
+    # ---- trace-replay mode (scenario workloads)
+    ap.add_argument("--trace", default=None, metavar="SCENARIO",
+                    help="replay a generated query trace for this "
+                         "registered scenario instead of the four phases")
+    ap.add_argument("--scale", type=float, default=0.5,
+                    help="scenario scale for --trace")
+    ap.add_argument("--processes", default="poisson,bursty,diurnal",
+                    help="comma-separated arrival processes to replay")
+    ap.add_argument("--rate-qps", type=float, default=40.0)
+    ap.add_argument("--horizon", type=float, default=3.0,
+                    help="trace horizon in seconds")
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help=">1 compresses the replay clock")
+    ap.add_argument("--no-deltas", dest="apply_deltas",
+                    action="store_false",
+                    help="skip the scenario's timed delta stream")
     args = ap.parse_args()
+
+    if args.trace:
+        report = run_trace(args)
+        hdr = (f"{'process':<10}{'queries':>9}{'offered':>9}{'qps':>9}"
+               f"{'p50 ms':>9}{'p95 ms':>9}{'p99 ms':>9}{'deltas':>8}")
+        print(hdr)
+        print("-" * len(hdr))
+        for process, r in report.items():
+            print(f"{process:<10}{r['queries']:>9}"
+                  f"{r['offered_qps']:>9.1f}{r['qps']:>9.1f}"
+                  f"{r['p50'] * 1e3:>9.2f}{r['p95'] * 1e3:>9.2f}"
+                  f"{r['p99'] * 1e3:>9.2f}{r['deltas_applied']:>8}")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(report, f, indent=2)
+            print(f"report written to {args.json}")
+        return
 
     report = run(args)
     hdr = f"{'phase':<14}{'qps':>9}{'p50 ms':>9}{'p95 ms':>9}{'p99 ms':>9}" \

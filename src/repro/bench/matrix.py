@@ -201,8 +201,100 @@ def lp_matrix_records(fast: bool = True) -> List[BenchRecord]:
     return records
 
 
+# --------------------------------------------------------------------------
+# Scenario × backend cross (DESIGN.md §12.4)
+# --------------------------------------------------------------------------
+# Each cell solves one scenario's planted-edge recovery problem on one
+# registry backend: wall time plus three strict correctness metrics —
+# recovery AUC against the planted truth, fixed-point agreement vs the
+# cell row's reference backend, and the iteration count.  The fast pass
+# covers small instances of the non-bio scenarios (the CI gate's
+# coverage); the full pass adds the nominal-scale cells including the
+# >=1M-edge powerlaw row.
+
+
+def _scenario_rows(fast: bool):
+    """(scenario, scale, backends) rows; backends[0] is the agreement
+    reference — dense where the (N, N) operator is feasible, blocked-CSR
+    sparse on the million-edge row (dense there would swamp CI hosts)."""
+    if fast:
+        return (
+            ("kpartite5", 0.35, ("dense", "sparse")),
+            ("kpartite_heterophilic", 0.35, ("dense", "sparse")),
+            ("powerlaw", 0.02, ("dense", "sparse")),
+        )
+    return (
+        ("kpartite5", 1.0, ("dense", "sparse", "kernel")),
+        ("kpartite_heterophilic", 1.0, ("dense", "sparse", "kernel")),
+        ("powerlaw", 1.0, ("sparse", "sparse_coo")),
+        ("streaming", 1.0, ("dense", "sparse")),
+    )
+
+
+def scenario_matrix_records(fast: bool = True) -> List[BenchRecord]:
+    """The ``scenario_matrix`` suite: named workloads × registry backends."""
+    import repro.scenarios as sc
+    from repro.engine import make_engine
+
+    max_entities = 16 if fast else 24
+    repeats = 3
+    records: List[BenchRecord] = []
+    for scenario, scale, backends in _scenario_rows(fast):
+        bundle = sc.generate(scenario, scale=scale, seed=0)
+        net = bundle.network
+        problem = sc.make_recovery_problem(
+            bundle, holdout_frac=0.1, max_entities=max_entities, seed=0
+        )
+        cfg = sc.default_lp_config(sigma=1e-4)
+        edges = net.num_edges
+        F_ref = None
+        for backend in backends:
+            engine = make_engine(backend, cfg)
+
+            def solve(engine=engine):
+                return engine.run(problem.masked_net, seeds=problem.Y)
+
+            res = solve()  # warmup: compile + first run
+            stats = time_callable(solve, warmup=0, repeats=repeats)
+            derived = derived_throughput(
+                stats, edges=edges, supersteps=res.supersteps
+            )
+            derived.update(problem.metrics(res.F))
+            derived["outer_iters"] = float(res.outer_iters)
+            if F_ref is None:
+                F_ref = res.F
+                derived["agree_ref"] = 1.0  # the reference itself
+            else:
+                diff = float(np.max(np.abs(res.F - F_ref)))
+                derived["agree_ref"] = (
+                    1.0 if diff <= AGREEMENT_TOL else 0.0
+                )
+                derived["max_abs_diff_vs_ref"] = diff
+            records.append(
+                BenchRecord(
+                    suite="scenario_matrix",
+                    name=f"{scenario}_{backend}",
+                    backend=backend,
+                    params={
+                        "scenario": scenario,
+                        "scale": scale,
+                        "types": net.num_types,
+                        "nodes": net.num_nodes,
+                        "edges": int(edges),
+                        "seeds": int(problem.Y.shape[1]),
+                        "reference": backends[0],
+                        "sigma": 1e-4,
+                    },
+                    stats=stats.to_dict(),
+                    derived=derived,
+                    strict=["outer_iters", "agree_ref", "recovery_auc"],
+                )
+            )
+    return records
+
+
 def register() -> None:
-    """Register the lp_matrix suite (import-time side effects kept out of
+    """Register the matrix suites (import-time side effects kept out of
     module import so schema/compare tests stay jax-free)."""
     from repro.bench.registry import register_suite
 
@@ -210,3 +302,8 @@ def register() -> None:
         "lp_matrix",
         description="LP core across every engine-registry backend",
     )(lp_matrix_records)
+    register_suite(
+        "scenario_matrix",
+        description="scenario registry × engine backends with planted-"
+        "truth recovery",
+    )(scenario_matrix_records)

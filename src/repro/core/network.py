@@ -108,9 +108,7 @@ class HeteroNetwork:
         return out
 
     def block_slices(self) -> List[slice]:
-        return [
-            slice(off, off + n) for off, n in zip(self.offsets, self.sizes)
-        ]
+        return [slice(off, off + n) for off, n in zip(self.offsets, self.sizes)]
 
     # ----------------------------------------------------------- transforms
     def normalize(self) -> "NormalizedNetwork":
@@ -198,8 +196,9 @@ class HeteroNetwork:
         i, j = min(pair), max(pair)
         R = {k: v.copy() for k, v in self.R.items()}
         R[(i, j)] = np.where(mask, 0.0, R[(i, j)])
-        return HeteroNetwork(P=[p.copy() for p in self.P], R=R,
-                             type_names=self.type_names)
+        return HeteroNetwork(
+            P=[p.copy() for p in self.P], R=R, type_names=self.type_names
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -266,9 +265,7 @@ class NormalizedNetwork:
         return out
 
     def block_slices(self) -> List[slice]:
-        return [
-            slice(off, off + n) for off, n in zip(self.offsets, self.sizes)
-        ]
+        return [slice(off, off + n) for off, n in zip(self.offsets, self.sizes)]
 
     # ------------------------------------------------------- dense assembly
     def assemble_dense(self) -> Tuple[np.ndarray, np.ndarray]:
@@ -344,9 +341,14 @@ class HeteroCOO:
         hs, hd, hw = _coo(H)
         ms, md, mw = _coo(M)
         return cls(
-            het_src=hs, het_dst=hd, het_w=hw,
-            hom_src=ms, hom_dst=md, hom_w=mw,
-            num_nodes=int(H.shape[0]), sizes=list(sizes),
+            het_src=hs,
+            het_dst=hd,
+            het_w=hw,
+            hom_src=ms,
+            hom_dst=md,
+            hom_w=mw,
+            num_nodes=int(H.shape[0]),
+            sizes=list(sizes),
         )
 
     @property
@@ -375,9 +377,14 @@ class HeteroCOO:
         hs, hd, hw = _pad(self.het_src, self.het_dst, self.het_w, het_mult)
         ms, md, mw = _pad(self.hom_src, self.hom_dst, self.hom_w, hom_mult)
         return HeteroCOO(
-            het_src=hs, het_dst=hd, het_w=hw,
-            hom_src=ms, hom_dst=md, hom_w=mw,
-            num_nodes=self.num_nodes, sizes=self.sizes,
+            het_src=hs,
+            het_dst=hd,
+            het_w=hw,
+            hom_src=ms,
+            hom_dst=md,
+            hom_w=mw,
+            num_nodes=self.num_nodes,
+            sizes=self.sizes,
         )
 
 

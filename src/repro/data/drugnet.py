@@ -4,12 +4,16 @@ The paper's accuracy experiments run on the Yamanishi-08 gold standard
 (four target families; GPCR: 223 drugs × 95 targets) extended with disease
 associations by Heter-LP [14].  That dataset is not redistributable inside
 this offline container, so we generate networks with the same *structure*:
+latent mechanism clusters shared by the three concept types, noisy
+intra-cluster similarity, and sparse planted associations.
 
-* latent "mechanism" clusters shared by the three concept types (a drug
-  binds targets of its mechanism and treats diseases of its mechanism);
-* similarity matrices = noisy intra-cluster affinity (plus identity);
-* association matrices = sparse Bernoulli draws, dense within matched
-  clusters and (rarely, noise) across clusters.
+This module is now a thin adapter over the repo's single generator idiom —
+the k-partite planted-structure generator in
+``repro.scenarios.generators`` — configured tri-partite (the
+``bio_tri`` scenario).  The adapter preserves the historical RNG streams
+bit-for-bit (the generator draws clusters, similarities, then sorted-pair
+associations in the same order this module always did), so every
+committed baseline and test built on ``make_drugnet`` is unchanged.
 
 Because interactions are *planted*, CV can verify that LP recovers held-out
 edges — the same protocol as the paper's Table 2, with ground truth known by
@@ -18,7 +22,7 @@ construction.  Statistics (sizes, density) default to the GPCR scale.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -39,12 +43,30 @@ class DrugNetSpec:
     sim_noise: float = 0.02
     seed: int = 0
 
+    def to_kpartite(self):
+        """The equivalent generic generator spec (``bio_tri`` shape)."""
+        from repro.scenarios.generators import KPartiteSpec
+
+        return KPartiteSpec(
+            sizes=(self.n_drug, self.n_disease, self.n_target),
+            n_clusters=self.n_clusters,
+            p_intra=self.p_intra,
+            p_noise=self.p_noise,
+            sim_intra=self.sim_intra,
+            sim_noise=self.sim_noise,
+            type_names=("drug", "disease", "target"),
+            seed=self.seed,
+        )
+
 
 @dataclasses.dataclass
 class DrugNet:
     network: HeteroNetwork
     clusters: Tuple[np.ndarray, np.ndarray, np.ndarray]
     spec: DrugNetSpec
+    #: planted positives per pair (noise edges excluded) — the scenario
+    #: subsystem's ground-truth convention, carried by the adapter
+    truth: Optional[Dict[Tuple[int, int], np.ndarray]] = None
 
     @property
     def pair_names(self) -> Dict[Tuple[int, int], str]:
@@ -55,47 +77,13 @@ class DrugNet:
         }
 
 
-def _similarity(
-    rng: np.random.Generator, clusters: np.ndarray, spec: DrugNetSpec
-) -> np.ndarray:
-    n = clusters.shape[0]
-    same = clusters[:, None] == clusters[None, :]
-    base = np.where(same, spec.sim_intra, 0.0)
-    noise = rng.random((n, n)) * spec.sim_noise
-    sim = base + noise
-    sim = (sim + sim.T) / 2.0
-    np.fill_diagonal(sim, 1.0)
-    return sim
-
-
-def _association(
-    rng: np.random.Generator,
-    ca: np.ndarray,
-    cb: np.ndarray,
-    spec: DrugNetSpec,
-) -> np.ndarray:
-    match = ca[:, None] == cb[None, :]
-    p = np.where(match, spec.p_intra, spec.p_noise)
-    return (rng.random((ca.shape[0], cb.shape[0])) < p).astype(np.float64)
-
-
 def make_drugnet(spec: DrugNetSpec = DrugNetSpec()) -> DrugNet:
-    rng = np.random.default_rng(spec.seed)
-    sizes = (spec.n_drug, spec.n_disease, spec.n_target)
-    clusters = tuple(
-        rng.integers(0, spec.n_clusters, size=n).astype(np.int32)
-        for n in sizes
+    from repro.scenarios.generators import planted_kpartite
+
+    pk = planted_kpartite(spec.to_kpartite())
+    return DrugNet(
+        network=pk.network, clusters=pk.clusters, spec=spec, truth=pk.truth
     )
-    P = [_similarity(rng, c, spec) for c in clusters]
-    R = {
-        (0, 1): _association(rng, clusters[0], clusters[1], spec),
-        (0, 2): _association(rng, clusters[0], clusters[2], spec),
-        (1, 2): _association(rng, clusters[1], clusters[2], spec),
-    }
-    net = HeteroNetwork(
-        P=P, R=R, type_names=("drug", "disease", "target")
-    )
-    return DrugNet(network=net, clusters=clusters, spec=spec)
 
 
 def make_scaling_network(

@@ -1,5 +1,13 @@
 """Graph dataset generators for the GNN arch pool (offline stand-ins with
-the assigned shapes: cora-like, reddit-like, products-like, molecules)."""
+the assigned shapes: cora-like, reddit-like, products-like, molecules).
+
+Scope note: this module generates *homogeneous* node-classification /
+regression datasets (EdgeList + features + labels) for the model zoo.
+Heterogeneous planted-cluster networks — including the tri-partite
+drug/disease/target case study — all come from the ONE k-partite
+generator idiom in ``repro.scenarios.generators`` (``data/drugnet.py``
+is an adapter over it); do not grow a second planted-structure
+generator here."""
 from __future__ import annotations
 
 import dataclasses

@@ -78,3 +78,67 @@ class ShardedEngine(LPEngine):
         F0: Optional[np.ndarray] = None,
     ) -> SolveResult:
         return self._solver.solve_prepared(op.payload, Y, F0=F0)
+
+    def _round_fn(self, op: Operator):
+        """Compiled one-round kernel + fused shards, cached per operator.
+
+        DHLP-2 operators reuse the solver's fused edge shards; DHLP-1
+        operators (split hetero/homo shards) build the fused triple on
+        first use — ``round`` is the fused DHLP-2 update for every
+        backend (DESIGN.md §11.1), independent of the solve schedule.
+        """
+        cache = getattr(self, "_round_cache", None)
+        if cache is not None and cache[0] is op:
+            return cache[1], cache[2]
+        import jax.numpy as jnp
+
+        from repro.parallel.lp_sharded import (
+            build_sharded_round,
+            prepare_sharded_operator,
+        )
+
+        cfg = self.config
+        mesh = self.mesh()
+        beta = 1.0 - cfg.alpha
+        prep = op.payload
+        if prep.alg == "dhlp2":
+            arrays = prep.arrays
+        else:
+            arrs = prepare_sharded_operator(
+                op.norm, cfg, mesh.shape[self.edge_axis]
+            )
+            arrays = (
+                jnp.asarray(arrs.src),
+                jnp.asarray(arrs.dst),
+                jnp.asarray(arrs.w),
+            )
+        fn = build_sharded_round(
+            mesh,
+            num_nodes=op.num_nodes,
+            beta2=beta * beta,
+            edge_axis=self.edge_axis,
+            seed_axis=self.seed_axis,
+            compression=self._solver.compression,
+        )
+        self._round_cache = (op, fn, arrays)
+        return fn, arrays
+
+    def round(self, op: Operator, F, Y):
+        import jax.numpy as jnp
+
+        fn, arrays = self._round_fn(op)
+        k_seeds = self.mesh().shape[self.seed_axis]
+        F = np.asarray(F, np.float32)
+        Y = np.asarray(Y, np.float32)
+        if F.ndim == 1:
+            F = F[:, None]
+        if Y.ndim == 1:
+            Y = Y[:, None]
+        s = F.shape[1]
+        pad = (-s) % k_seeds
+        if pad:
+            z = np.zeros((F.shape[0], pad), np.float32)
+            F = np.concatenate([F, z], axis=1)
+            Y = np.concatenate([Y, z], axis=1)
+        out = fn(*arrays, jnp.asarray(F), jnp.asarray(Y))
+        return np.asarray(out, np.float64)[:, :s]

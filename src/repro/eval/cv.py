@@ -8,7 +8,7 @@ all true-negative entries of that matrix.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -23,10 +23,22 @@ class FoldResult:
 
 
 def kfold_masks(
-    R: np.ndarray, k: int = 10, seed: int = 0
+    R: np.ndarray,
+    k: int = 10,
+    seed: int = 0,
+    positives: Optional[np.ndarray] = None,
 ) -> Iterator[np.ndarray]:
-    """Yield k boolean masks over R, each hiding ~1/k of the positives."""
-    pos = np.argwhere(R > 0)
+    """Yield k boolean masks over R, each hiding ~1/k of the positives.
+
+    ``positives`` overrides the positive set (default: every nonzero
+    entry).  Scenario bundles pass their *planted* truth here so noise
+    edges are never treated as recoverable signal.
+    """
+    if positives is None:
+        positives = R > 0
+    elif np.any(positives & (R == 0)):
+        raise ValueError("positives must be present edges (R > 0)")
+    pos = np.argwhere(positives)
     rng = np.random.default_rng(seed)
     perm = rng.permutation(len(pos))
     folds = np.array_split(perm, k)
@@ -43,23 +55,34 @@ def cross_validate(
     solver_fn,
     k: int = 10,
     seed: int = 0,
+    positives: Optional[np.ndarray] = None,
 ) -> List[FoldResult]:
     """Run k-fold CV on one association matrix.
 
     ``solver_fn(masked_net) -> scores`` must return the predicted score
-    matrix for ``pair`` (same shape as ``net.R[pair]``).
+    matrix for ``pair`` (same shape as ``net.R[pair]``).  With
+    ``positives`` (a boolean subset of the present edges — e.g. a
+    scenario's planted truth), folds hide only those entries and the
+    negative set excludes non-positive present edges (noise), so the
+    protocol runs against ground truth on any T-type scenario.
     """
     i, j = min(pair), max(pair)
     R = net.R[(i, j)]
+    if positives is None:
+        positives = R > 0
     results: List[FoldResult] = []
-    for fold, mask in enumerate(kfold_masks(R, k=k, seed=seed)):
+    for fold, mask in enumerate(
+        kfold_masks(R, k=k, seed=seed, positives=positives)
+    ):
         masked = net.with_masked_fold((i, j), mask)
         scores = solver_fn(masked)
         if scores.shape != R.shape:
             raise ValueError(
                 f"solver returned {scores.shape}, expected {R.shape}"
             )
-        # evaluation set: held-out positives vs all true negatives
+        # evaluation set: held-out positives vs all true negatives.
+        # positives ⊆ (R > 0) (kfold_masks enforces it), so present
+        # noise edges are excluded from the negative side automatically.
         eval_mask = mask | (R == 0)
         labels = mask[eval_mask]
         s = scores[eval_mask]

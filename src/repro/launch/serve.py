@@ -26,9 +26,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--sigma", type=float, default=1e-3)
     ap.add_argument(
         "--engine",
-        choices=["dense", "sparse", "sparse_coo", "kernel", "auto"],
+        choices=["dense", "sparse", "sparse_coo", "kernel", "sharded",
+                 "auto"],
         default="dense",
-        help="engine-registry backend (sharded is not servable)",
+        help="engine-registry backend (sharded uses the host's devices)",
     )
     ap.add_argument(
         "--refresh-rounds", type=int, default=0,

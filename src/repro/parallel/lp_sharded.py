@@ -206,6 +206,47 @@ def build_sharded_dhlp2(
     return jax.jit(mapped)
 
 
+def build_sharded_round(
+    mesh: Mesh,
+    *,
+    num_nodes: int,
+    beta2: float,
+    edge_axis: str = "model",
+    seed_axis: str = "data",
+    compression: str = "none",
+):
+    """One fused fixed-seed DHLP-2 round on fused edge shards.
+
+    The engine ``round`` contract (DESIGN.md §11.1): ``β²Y + A_eff @ F``
+    with the same edge-sharded aggregation + psum as one superstep of the
+    full solver — serve-side incremental hint refresh on a pod runs this
+    per demoted column batch.
+    """
+
+    def shard_body(src, dst, w, F, Y):
+        src, dst, w = src[0], dst[0], w[0]
+        F = F.astype(jnp.float32)
+        Y = Y.astype(jnp.float32)
+        local = segment_sum(w[:, None] * F[src], dst, num_nodes)
+        agg = compressed_psum(local, edge_axis, compression=compression)
+        return beta2 * Y + agg
+
+    mapped = shard_map_compat(
+        shard_body,
+        mesh=mesh,
+        in_specs=(
+            P(edge_axis, None),
+            P(edge_axis, None),
+            P(edge_axis, None),
+            P(None, seed_axis),
+            P(None, seed_axis),
+        ),
+        out_specs=P(None, seed_axis),
+        check=False,
+    )
+    return jax.jit(mapped)
+
+
 def build_sharded_dhlp1(
     mesh: Mesh,
     *,

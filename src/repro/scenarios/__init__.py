@@ -1,0 +1,72 @@
+"""Scenario & workload subsystem (DESIGN.md §12).
+
+Named generators of heterogeneous-network workloads: each produces a
+:class:`ScenarioBundle` — network + planted truth + optional delta
+stream + optional serve query trace — behind a string-keyed registry,
+so benches, eval, serving, and the ``repro.launch.scenario`` CLI all
+name workloads the same way the engine registry names backends.
+"""
+from repro.scenarios.arrivals import (
+    ARRIVAL_PROCESSES,
+    arrival_times,
+    build_trace,
+    zipf_entities,
+)
+from repro.scenarios.base import (
+    QueryTrace,
+    ScenarioBundle,
+    ScenarioInfo,
+    TimedDelta,
+    available_scenarios,
+    generate,
+    get_scenario,
+    list_rows,
+    register_scenario,
+    scaled_sizes,
+)
+from repro.scenarios.evaluate import (
+    RecoveryProblem,
+    backend_solver_fn,
+    default_lp_config,
+    make_recovery_problem,
+    recovery_auc,
+    scenario_cross_validate,
+    solve_recovery,
+)
+from repro.scenarios.generators import (
+    KPartiteSpec,
+    PlantedKPartite,
+    planted_kpartite,
+    sizes_for_edges,
+)
+
+# importing the library registers the built-in scenarios
+from repro.scenarios import library as _library  # noqa: F401,E402
+
+__all__ = [
+    "ARRIVAL_PROCESSES",
+    "KPartiteSpec",
+    "PlantedKPartite",
+    "QueryTrace",
+    "RecoveryProblem",
+    "ScenarioBundle",
+    "ScenarioInfo",
+    "TimedDelta",
+    "arrival_times",
+    "available_scenarios",
+    "backend_solver_fn",
+    "build_trace",
+    "default_lp_config",
+    "generate",
+    "get_scenario",
+    "list_rows",
+    "make_recovery_problem",
+    "planted_kpartite",
+    "recovery_auc",
+    "register_scenario",
+    "scaled_sizes",
+    "scenario_cross_validate",
+    "sizes_for_edges",
+    "solve_recovery",
+    "zipf_entities",
+]

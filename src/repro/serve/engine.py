@@ -37,8 +37,10 @@ class ServeConfig:
     """Engine + scheduler + cache knobs."""
 
     lp: LPConfig = LPConfig(alg="dhlp2", seed_mode="fixed")
-    # any `repro.engine` registry backend incl. "auto"; "sharded" is
-    # excluded (its mesh is a deployment decision, not a per-query knob).
+    # any `repro.engine` registry backend incl. "auto".  "sharded" serves
+    # on the host's full device set (auto never selects it — running a
+    # pod-backed deployment is an explicit choice); its solve AND round
+    # paths both run sharded, so incremental hint refresh stays on-mesh.
     # None defers to lp.backend, then "dense"; setting BOTH this and
     # lp.backend to different keys is a conflict, not a silent precedence.
     engine: Optional[str] = None
@@ -91,11 +93,6 @@ class ServeConfig:
                     f"engine {resolved!r} has no momentum loop "
                     f"(LPConfig.momentum={self.lp.momentum})"
                 )
-        if resolved == "sharded":
-            raise ValueError(
-                "serving does not drive the sharded backend; pick "
-                "dense/sparse/sparse_coo/kernel/auto"
-            )
         if self.refresh_rounds < 0:
             raise ValueError("refresh_rounds must be >= 0")
         if self.refresh_rounds and self.lp.alg != "dhlp2":

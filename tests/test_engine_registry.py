@@ -144,7 +144,8 @@ class TestEngineContract:
 
     def test_round_moves_toward_fixed_point(self, bio_norm, seeds):
         cfg = LPConfig(alg="dhlp2", sigma=1e-4, seed_mode="fixed")
-        for backend in ("dense", "sparse", "sparse_coo", "kernel"):
+        for backend in ("dense", "sparse", "sparse_coo", "kernel",
+                        "sharded"):
             engine = make_engine(backend, cfg)
             op = engine.prepare(bio_norm)
             Fstar = engine.solve(op, seeds).F
@@ -155,6 +156,19 @@ class TestEngineContract:
             d0 = np.max(np.abs(np.asarray(seeds, np.float64) - Fstar))
             d1 = np.max(np.abs(engine.round(op, seeds, seeds) - Fstar))
             assert d1 < d0, backend
+
+    def test_sharded_round_matches_dense_round(self, bio_norm, seeds):
+        """The sharded round (serve's on-mesh incremental refresh unit)
+        computes the same fused update as the dense reference — for a
+        DHLP-1 operator too, where the fused shards are built lazily."""
+        for alg in ("dhlp2", "dhlp1"):
+            cfg = LPConfig(alg=alg, sigma=1e-4, seed_mode="fixed")
+            dense = make_engine("dense", cfg)
+            sharded = make_engine("sharded", cfg)
+            F = np.asarray(seeds, np.float64) * 0.5
+            ref = dense.round(dense.prepare(bio_norm), F, seeds)
+            got = sharded.round(sharded.prepare(bio_norm), F, seeds)
+            assert np.max(np.abs(got - ref)) < 1e-4, alg
 
     def test_sharded_rejects_oversized_mesh(self, bio_norm):
         import jax

@@ -479,3 +479,34 @@ class TestServeConfigValidation:
         hit = engine.query(QuerySpec(entity=0, target_type=2, top_k=5))
         assert cold.source == "cold" and hit.source == "cache"
         np.testing.assert_array_equal(cold.candidates, hit.candidates)
+
+    def test_sharded_engine_serves_and_refreshes(self):
+        """With the sharded ``round`` path in place (ROADMAP follow-up),
+        serving — including post-delta incremental hint refresh, which
+        runs ``engine.round`` on-mesh — works on backend='sharded'."""
+        net = small_net()
+        engine = LPServeEngine(
+            net,
+            serve_cfg(
+                engine="sharded",
+                refresh_rounds=2,
+                lp=LPConfig(alg="dhlp2", seed_mode="fixed", sigma=1e-4),
+            ),
+        )
+        cold = engine.query(QuerySpec(entity=1, target_type=2, top_k=5))
+        hit = engine.query(QuerySpec(entity=1, target_type=2, top_k=5))
+        assert cold.source == "cold" and hit.source == "cache"
+        engine.apply_delta(GraphDelta(assoc=[((0, 2), 1, 3, 1.0)]))
+        warm = engine.query(QuerySpec(entity=1, target_type=2, top_k=5))
+        assert warm.source == "warm"
+        assert warm.rounds <= cold.rounds
+        # the sharded answer is the dense answer (same fixed point)
+        dense = LPServeEngine(
+            net.apply_delta(GraphDelta(assoc=[((0, 2), 1, 3, 1.0)])),
+            serve_cfg(
+                engine="dense",
+                lp=LPConfig(alg="dhlp2", seed_mode="fixed", sigma=1e-4),
+            ),
+        ).query(QuerySpec(entity=1, target_type=2, top_k=5))
+        assert warm.candidates.tolist() == dense.candidates.tolist()
+        np.testing.assert_array_equal(cold.candidates, hit.candidates)
