@@ -5,12 +5,12 @@ harness (``repro.bench``) and writes the machine-readable report.
     PYTHONPATH=src python benchmarks/run.py --full       # paper scale -> BENCH_full.json
     PYTHONPATH=src python benchmarks/run.py --only lp_matrix,table7_sigma
 
-Artifacts: ``BENCH_<label>.json`` at the repo root (what CI uploads and
-``repro.bench.compare`` gates on) plus a timestamped per-run copy under
-``results/``.  Legacy ``name,us_per_call,derived`` CSV lines still go to
-stdout for eyeballing.  Any suite error makes the exit code nonzero — no
-swallowed failures.  The multi-pod roofline table is produced separately
-by ``benchmarks/roofline.py`` from the dry-run artifacts.
+This is now a thin wrapper over ``repro.bench.driver.run_bench`` — the
+same pass ``python -m repro run --bench`` and RunSpec ``bench`` sections
+execute (DESIGN.md §10/§13).  Artifacts: ``BENCH_<label>.json`` at the
+repo root (what CI uploads and ``repro.bench.compare`` gates on) plus a
+timestamped per-run copy under ``results/``.  Any suite error makes the
+exit code nonzero — no swallowed failures.
 """
 from __future__ import annotations
 
@@ -45,69 +45,42 @@ def main(argv=None) -> int:
     ap.add_argument("--list", action="store_true",
                     help="list registered suites and exit")
     args, _ = ap.parse_known_args(argv)
-    fast = not args.full
 
-    import jax
-
-    if args.full and jax.device_count() < 8:
-        # the device count was locked from the PROCESS argv at import
-        # (sys.argv peek above) — a programmatic main(['--full']) or an
-        # abbreviated flag cannot raise it after jax initialized, and the
-        # sharded8 cells would silently vanish from the full report
-        print(
-            "run.py: --full needs 8 devices but jax initialized with "
-            f"{jax.device_count()} — invoke as `python benchmarks/run.py "
-            "--full` (literal flag) or set XLA_FLAGS yourself",
-            file=sys.stderr,
-        )
-        return 2
-
-    from repro.bench import BenchReport, all_suites
-    from repro.bench.registry import run_suites
-    import repro.bench.matrix as bench_matrix
-
-    # suite registration happens at import time
-    import benchmarks.fig34_parallelism  # noqa: F401
-    import benchmarks.kernels_bench  # noqa: F401
-    import benchmarks.lp_on_graph  # noqa: F401
-    import benchmarks.serve_bench  # noqa: F401
-    import benchmarks.table2_cv  # noqa: F401
-    import benchmarks.table34_deleted  # noqa: F401
-    import benchmarks.table56_scaling  # noqa: F401
-    import benchmarks.table7_sigma  # noqa: F401
-    import benchmarks.roofline as bench_roofline
-
-    # registers lp_matrix AND scenario_matrix — the fast pass carries
-    # small cells of the non-bio scenarios (kpartite5, heterophilic,
-    # powerlaw) so BENCH_ci.json and the perf-smoke gate cover them;
-    # --full adds the nominal-scale rows incl. the >=1M-edge powerlaw cell
-    bench_matrix.register()
-    bench_roofline.register()
+    from repro.bench.driver import (
+        BenchSetupError,
+        import_suite_modules,
+        run_bench,
+    )
 
     if args.list:
+        from repro.bench import all_suites
+
+        import_suite_modules()
         for s in all_suites():
             print(f"{s.name}: {s.description}")
         return 0
 
-    label = args.label or ("ci" if fast else "full")
-    report = BenchReport(label)
     only = args.only.split(",") if args.only else None
-
-    print("name,us_per_call,derived", flush=True)
-    failures = run_suites(
-        report, only=only, fast=fast,
-        echo=lambda line: print(line, flush=True),
-    )
-
-    if not args.no_write:
-        for path in report.write():
-            print(f"wrote {path}", file=sys.stderr)
+    try:
+        outcome = run_bench(
+            fast=not args.full,
+            only=only,
+            label=args.label,
+            write=not args.no_write,
+            echo=lambda line: print(line, flush=True),
+        )
+    except BenchSetupError as e:
+        # the device count was locked from the PROCESS argv at import
+        # (sys.argv peek above) — a programmatic main(['--full']) or an
+        # abbreviated flag cannot raise it after jax initialized
+        print(f"run.py: {e}", file=sys.stderr)
+        return 2
     print(
-        f"suites={len(report.suites)} records={len(report.records)} "
-        f"failures={failures}",
+        f"suites={len(outcome.suites)} records={outcome.records} "
+        f"failures={outcome.failures}",
         file=sys.stderr,
     )
-    return 1 if failures else 0
+    return 1 if outcome.failures else 0
 
 
 if __name__ == "__main__":

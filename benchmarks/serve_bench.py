@@ -37,11 +37,12 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.api import NetworkSpec, RunSpec, ServeSpec, Session, SolveSpec
 from repro.bench import BenchRecord, register_suite, stats_from_samples
 from repro.bench.report import legacy_csv_line
-from repro.core import GraphDelta, LPConfig
-from repro.data.drugnet import DrugNetSpec, make_drugnet
-from repro.serve import LPServeEngine, QuerySpec, ServeConfig
+from repro.core import GraphDelta
+from repro.serve import QuerySpec
+from repro.serve.replay import replay_trace
 from repro.serve.types import percentiles
 
 
@@ -69,19 +70,38 @@ def _phase(engine, entities, top_k) -> Dict:
     return out
 
 
-def run(args) -> Dict[str, Dict]:
-    dn = make_drugnet(DrugNetSpec(
-        n_drug=args.drugs, n_disease=args.diseases, n_target=args.targets,
-        seed=args.seed,
-    ))
-    net = dn.network
-    cfg = ServeConfig(
-        lp=LPConfig(alg=args.alg, sigma=args.sigma, seed_mode="fixed"),
-        engine=args.engine,
-        max_batch=args.max_batch,
-        max_wait_s=2e-3,
+def _session(args, network: NetworkSpec) -> Session:
+    """One resolved spec per bench invocation: the serve engines below
+    share the session's prepared LP engine (DESIGN.md §13)."""
+    return Session(
+        RunSpec(
+            network=network,
+            solve=SolveSpec(
+                alg=args.alg,
+                sigma=args.sigma,
+                seed_mode="fixed",
+                backend=args.engine,
+            ),
+            serve=ServeSpec(max_batch=args.max_batch, max_wait_ms=2.0),
+        )
     )
-    engine = LPServeEngine(net, cfg)
+
+
+def run(args) -> Dict[str, Dict]:
+    session = _session(
+        args,
+        NetworkSpec(
+            kind="drugnet",
+            seed=args.seed,
+            params={
+                "n_drug": args.drugs,
+                "n_disease": args.diseases,
+                "n_target": args.targets,
+            },
+        ),
+    )
+    net = session.network
+    engine = session.serve_engine()
     rng = np.random.default_rng(args.seed)
     n_drug = net.sizes[0]
     q = args.queries
@@ -125,62 +145,13 @@ def run(args) -> Dict[str, Dict]:
     return report
 
 
-def _replay(engine, trace, deltas, *, top_k: int, time_scale: float) -> Dict:
-    """Submit ``trace`` through the micro-batcher at its own pace.
-
-    ``time_scale > 1`` compresses the clock (a 4s horizon replays in
-    4/scale seconds — same arrival *pattern*, proportionally higher
-    offered rate).  Timed deltas land between the submissions they
-    precede, exactly as a live feed would interleave them.
-    """
-    deltas = sorted(deltas, key=lambda d: d.t)
-    di = 0
-    futs = []
-    engine.start()
-    t0 = time.monotonic()
-    for i in range(len(trace)):
-        target = float(trace.t[i]) / time_scale
-        while di < len(deltas) and deltas[di].t <= float(trace.t[i]):
-            wait = deltas[di].t / time_scale - (time.monotonic() - t0)
-            if wait > 0:
-                time.sleep(wait)
-            engine.apply_delta(deltas[di].delta)
-            di += 1
-        wait = target - (time.monotonic() - t0)
-        if wait > 0:
-            time.sleep(wait)
-        futs.append(
-            engine.submit(
-                QuerySpec(
-                    entity=int(trace.entity[i]),
-                    target_type=int(trace.target_type[i]),
-                    top_k=top_k,
-                )
-            )
-        )
-    results = [f.result(timeout=600) for f in futs]
-    wall = time.monotonic() - t0
-    engine.stop()
-    lats = [r.latency_s for r in results]
-    sources = [r.source for r in results]
-    out = {
-        "queries": len(results),
-        "offered_qps": len(trace) / (trace.horizon_s / time_scale),
-        "qps": len(results) / wall,
-        "wall_s": wall,
-        "deltas_applied": di,
-        "mean_rounds": float(np.mean([r.rounds for r in results])),
-        "sources": {s: sources.count(s) for s in set(sources)},
-        "batches": engine.batcher.stats.batches,
-        "mean_batch_size": engine.batcher.stats.mean_batch_size,
-        "latencies": lats,
-    }
-    out.update(percentiles(lats))
-    return out
-
-
 def run_trace(args) -> Dict[str, Dict]:
-    """Replay mode: one report section per requested arrival process."""
+    """Replay mode: one report section per requested arrival process.
+
+    The replay loop itself is the shared :func:`repro.serve.replay.
+    replay_trace` — the same player ``Session.serve()`` runs for RunSpec
+    ``serve`` sections.
+    """
     import inspect
 
     import repro.scenarios as sc
@@ -199,22 +170,25 @@ def run_trace(args) -> Dict[str, Dict]:
         )
         if k in accepted
     }
-    bundle = sc.generate(
-        args.trace, scale=args.scale, seed=args.seed, **extra
+    session = _session(
+        args,
+        NetworkSpec(
+            kind="scenario",
+            name=args.trace,
+            scale=args.scale,
+            seed=args.seed,
+            params=extra,
+            cache=False if args.no_cache else None,
+        ),
     )
-    net = bundle.network
-    cfg = ServeConfig(
-        lp=LPConfig(alg=args.alg, sigma=args.sigma, seed_mode="fixed"),
-        engine=args.engine,
-        max_batch=args.max_batch,
-        max_wait_s=2e-3,
-    )
+    bundle = session.bundle
     processes = [p.strip() for p in args.processes.split(",") if p.strip()]
     report: Dict[str, Dict] = {}
     for process in processes:
-        # fresh engine per process: each replay starts cold and applies
-        # the scenario's delta stream from version 0
-        engine = LPServeEngine(net, cfg)
+        # fresh serve engine per process (each replay starts cold and
+        # applies the delta stream from version 0) over the session's
+        # one prepared LP engine
+        engine = session.serve_engine()
         trace = sc.build_trace(
             bundle,
             process,
@@ -234,7 +208,7 @@ def run_trace(args) -> Dict[str, Dict]:
             top_k=args.top_k,
         ))
         engine.columns.clear()
-        report[process] = _replay(
+        report[process] = replay_trace(
             engine,
             trace,
             bundle.deltas if args.apply_deltas else (),
@@ -312,6 +286,8 @@ def main() -> None:
     ap.add_argument("--no-deltas", dest="apply_deltas",
                     action="store_false",
                     help="skip the scenario's timed delta stream")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="bypass the scenario disk cache for --trace")
     args = ap.parse_args()
 
     if args.trace:

@@ -1,10 +1,10 @@
-"""Tour of the scenario & workload subsystem.
+"""Tour of the scenario & workload subsystem through the unified API.
 
-Lists the registered scenarios, generates a heterophilic k-partite
-network (planted CROSS-cluster associations — well outside the paper's
-tri-partite case study), verifies two engine backends recover its held
-out planted edges, and replays a bursty query trace for the streaming
-scenario through the serve stack, deltas included.
+Lists the registered scenarios, scores two engine backends on a
+heterophilic k-partite network's planted truth (one RunSpec per backend,
+sharing a single generated bundle), and replays a bursty query trace for
+the streaming scenario through the serve stack, deltas included — each
+step a declarative spec resolved by a Session (DESIGN.md §13).
 
   PYTHONPATH=src python examples/scenario_workloads.py
 """
@@ -13,8 +13,7 @@ from __future__ import annotations
 import numpy as np
 
 import repro.scenarios as sc
-from repro.core import LPConfig
-from repro.serve import LPServeEngine, QuerySpec, ServeConfig
+from repro.api import EvalSpec, NetworkSpec, RunSpec, ServeSpec, Session, SolveSpec
 
 
 def main() -> None:
@@ -22,62 +21,56 @@ def main() -> None:
     for row in sc.list_rows():
         print(f"  {row['name']:<22} {row['description']}")
 
-    # --- planted-truth recovery on a 4-type heterophilic net
-    bundle = sc.generate("kpartite_heterophilic", scale=0.4, seed=0)
+    # --- planted-truth recovery on a 4-type heterophilic net: one spec
+    # per backend, one generated bundle shared across the sweep
+    network = NetworkSpec(kind="scenario", name="kpartite_heterophilic", scale=0.4)
+    bundle = sc.generate(network.name, scale=network.scale, seed=network.seed)
     net = bundle.network
     print(
         f"\nkpartite_heterophilic @0.4: T={net.num_types} types, "
         f"{net.num_nodes} nodes, {net.num_edges} edges"
     )
-    problem = sc.make_recovery_problem(
-        bundle, holdout_frac=0.15, max_entities=16, seed=0
-    )
     F_ref = None
     for backend in ("dense", "sparse"):
-        res = sc.solve_recovery(problem, backend)
-        m = problem.metrics(res.F)
+        spec = RunSpec(
+            network=network,
+            solve=SolveSpec(sigma=1e-4, seed_mode="fixed", backend=backend),
+            eval=EvalSpec(protocol="recovery", holdout_frac=0.15, max_entities=16),
+        )
+        art = Session(spec, bundle=bundle).evaluate()
         agree = (
             ""
             if F_ref is None
-            else f"  agree_dense={np.max(np.abs(res.F - F_ref)) < 5e-3}"
+            else f"  agree_dense={np.max(np.abs(art.F - F_ref)) < 5e-3}"
         )
-        F_ref = res.F if F_ref is None else F_ref
+        F_ref = art.F if F_ref is None else F_ref
         print(
             f"  {backend:>6}: held-out planted edges AUC "
-            f"{m['recovery_auc']:.3f} in {res.outer_iters} rounds{agree}"
+            f"{art.metrics['recovery_auc']:.3f} in "
+            f"{int(art.metrics['outer_iters'])} rounds{agree}"
         )
 
-    # --- trace replay: the streaming workload against the serve engine
-    # (the builder takes the horizon so its delta stream is timed WITHIN
-    # the trace we replay — tail deltas must not outlive the last query)
-    stream = sc.generate(
-        "streaming", scale=0.6, seed=0, rate_qps=30.0, horizon_s=1.5
+    # --- trace replay: the streaming workload against the serve engine.
+    # The scenario's timed delta stream lands mid-trace; the Session
+    # reuses the engine it prepared for the (implicit) solve stage.
+    spec = RunSpec(
+        network=NetworkSpec(
+            kind="scenario",
+            name="streaming",
+            scale=0.6,
+            params={"rate_qps": 30.0, "horizon_s": 1.5},
+        ),
+        solve=SolveSpec(sigma=1e-4, seed_mode="fixed"),
+        serve=ServeSpec(
+            trace="bursty", rate_qps=30.0, horizon_s=1.5, top_k=5
+        ),
     )
-    trace = sc.build_trace(stream, "bursty", rate_qps=30, horizon_s=1.5)
-    engine = LPServeEngine(
-        stream.network,
-        ServeConfig(lp=LPConfig(alg="dhlp2", sigma=1e-4, seed_mode="fixed")),
-    )
-    applied, sources = 0, []
-    for i in range(len(trace)):
-        while (
-            applied < len(stream.deltas)
-            and stream.deltas[applied].t <= float(trace.t[i])
-        ):
-            engine.apply_delta(stream.deltas[applied].delta)
-            applied += 1
-        r = engine.query(
-            QuerySpec(
-                entity=int(trace.entity[i]),
-                target_type=int(trace.target_type[i]),
-                top_k=5,
-            )
-        )
-        sources.append(r.source)
-    counts = {s: sources.count(s) for s in sorted(set(sources))}
+    art = Session(spec).serve()
+    r = art.report
+    counts = {s: r["sources"][s] for s in sorted(r["sources"])}
     print(
-        f"\nstreaming replay ({trace.process}): {len(trace)} queries, "
-        f"{applied} deltas applied mid-trace, sources={counts}"
+        f"\nstreaming replay ({spec.serve.trace}): {r['queries']} queries, "
+        f"{r['deltas_applied']} deltas applied mid-trace, sources={counts}"
     )
 
 

@@ -9,18 +9,23 @@ full re-solve.
 """
 from __future__ import annotations
 
-from repro.core import GraphDelta, LPConfig
-from repro.data.drugnet import DrugNetSpec, make_drugnet
-from repro.serve import LPServeEngine, QuerySpec, ServeConfig
+from repro.api import NetworkSpec, RunSpec, Session, SolveSpec
+from repro.core import GraphDelta
+from repro.serve import QuerySpec
 
 
 def main() -> None:
-    dn = make_drugnet(DrugNetSpec(n_drug=60, n_disease=40, n_target=30,
-                                  seed=0))
-    engine = LPServeEngine(
-        dn.network,
-        ServeConfig(lp=LPConfig(alg="dhlp2", sigma=1e-4, seed_mode="fixed")),
+    # the serve engine comes out of a declarative spec: the Session
+    # resolves the backend and hands the engine its prepared operator
+    spec = RunSpec(
+        network=NetworkSpec(
+            kind="drugnet",
+            seed=0,
+            params={"n_drug": 60, "n_disease": 40, "n_target": 30},
+        ),
+        solve=SolveSpec(alg="dhlp2", sigma=1e-4, seed_mode="fixed"),
     )
+    engine = Session(spec).serve_engine()
 
     # cold: full batched solve for this drug's seed column
     res = engine.query(QuerySpec(entity=0, target_type=2, top_k=5))

@@ -1,0 +1,50 @@
+"""Unified declarative API: RunSpec → Session → Artifacts (DESIGN.md §13).
+
+One serializable job description over everything the repo can run:
+
+>>> from repro.api import RunSpec, Session
+>>> spec = RunSpec.from_file("examples/specs/quickstart_run.json")
+>>> artifacts = Session(spec).run()      # solve → eval → serve → bench
+
+The spec tree (``repro.api.spec``) is import-light and strictly
+validated; the :class:`Session` resolves it against the engine/scenario
+registries once, shares one prepared engine across stages, and writes
+typed artifacts under ``results/<run_id>/``.  The ``python -m repro run``
+driver is a thin CLI over exactly this module.
+"""
+
+from repro.api.artifacts import (
+    Artifact,
+    BenchArtifact,
+    EvalArtifact,
+    ServeArtifact,
+    SolveArtifact,
+    jsonable,
+)
+from repro.api.session import Session
+from repro.api.spec import (
+    BenchSpec,
+    EvalSpec,
+    NetworkSpec,
+    RunSpec,
+    ServeSpec,
+    SolveSpec,
+    SpecError,
+)
+
+__all__ = [
+    "Artifact",
+    "BenchArtifact",
+    "BenchSpec",
+    "EvalArtifact",
+    "EvalSpec",
+    "NetworkSpec",
+    "RunSpec",
+    "ServeArtifact",
+    "ServeSpec",
+    "Session",
+    "SolveArtifact",
+    "SolveSpec",
+    "SpecError",
+    "jsonable",
+]

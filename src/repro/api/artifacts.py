@@ -1,0 +1,190 @@
+"""Typed run artifacts written under ``results/<run_id>/`` (DESIGN.md §13).
+
+Each :class:`~repro.api.session.Session` stage returns one artifact:
+``solve()`` → :class:`SolveArtifact` (rankings + solver outputs),
+``evaluate()`` → :class:`EvalArtifact` (protocol metrics), ``serve()`` →
+:class:`ServeArtifact` (workload report), ``bench()`` →
+:class:`BenchArtifact` (BENCH record summary).  Artifacts carry their
+heavy payloads (score matrices, LPOutputs) in memory and write a
+JSON summary plus ``.npz`` arrays via :meth:`write`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, ClassVar, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+def jsonable(obj: Any) -> Any:
+    """Recursively coerce numpy scalars/arrays into JSON-native values."""
+    if isinstance(obj, dict):
+        return {str(k): jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return jsonable(obj.tolist())
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    return obj
+
+
+def _write_json(path: str, payload: Dict[str, Any]) -> str:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(jsonable(payload), f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+@dataclasses.dataclass
+class Artifact:
+    """Base: provenance (run id + sections) and wall time."""
+
+    kind: ClassVar[str] = "?"
+    run_id: str
+    seconds: float
+
+    def summary(self) -> Dict[str, Any]:
+        """The JSON-able report body (subclasses extend)."""
+        return {
+            "kind": self.kind,
+            "run_id": self.run_id,
+            "seconds": round(self.seconds, 4),
+        }
+
+    def write(self, run_dir: str) -> List[str]:
+        """Write the artifact under ``run_dir``; returns written paths."""
+        return [_write_json(os.path.join(run_dir, f"{self.kind}.json"), self.summary())]
+
+
+@dataclasses.dataclass
+class SolveArtifact(Artifact):
+    """A converged propagation plus the paper's step-G ranking."""
+
+    kind: ClassVar[str] = "solve"
+    backend: str = "?"
+    alg: str = "dhlp2"
+    converged: bool = False
+    outer_iters: int = 0
+    inner_iters: int = 0
+    supersteps: int = 0
+    network: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: the reported ranking: pair, entity, top-k candidate ids + scores
+    ranking: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: in-memory payloads (not serialized into the JSON summary)
+    F: Optional[np.ndarray] = None
+    outputs: Optional[object] = None  # repro.core.ranking.LPOutputs
+
+    def summary(self) -> Dict[str, Any]:
+        out = super().summary()
+        out.update(
+            {
+                "backend": self.backend,
+                "alg": self.alg,
+                "converged": self.converged,
+                "outer_iters": self.outer_iters,
+                "inner_iters": self.inner_iters,
+                "supersteps": self.supersteps,
+                "network": self.network,
+                "ranking": self.ranking,
+            }
+        )
+        return out
+
+    def write(self, run_dir: str) -> List[str]:
+        paths = super().write(run_dir)
+        if self.outputs is not None:
+            arrays: Dict[str, np.ndarray] = {}
+            for (i, j), m in self.outputs.interactions.items():
+                arrays[f"R_{i}_{j}"] = np.asarray(m)
+            for t, s in enumerate(self.outputs.similarities):
+                arrays[f"P_{t}"] = np.asarray(s)
+            npz = os.path.join(run_dir, "solve_outputs.npz")
+            np.savez_compressed(npz, **arrays)
+            paths.append(npz)
+        return paths
+
+
+@dataclasses.dataclass
+class EvalArtifact(Artifact):
+    """Recovery / k-fold CV metrics against planted ground truth."""
+
+    kind: ClassVar[str] = "eval"
+    protocol: str = "recovery"
+    backend: str = "?"
+    pair: Tuple[int, int] = (0, 0)
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: recovery protocol's converged labels (in memory only — the
+    #: scenario CLI's cross-backend agreement check reads it)
+    F: Optional[np.ndarray] = None
+
+    def summary(self) -> Dict[str, Any]:
+        out = super().summary()
+        out.update(
+            {
+                "protocol": self.protocol,
+                "backend": self.backend,
+                "pair": list(self.pair),
+                "params": self.params,
+                "metrics": self.metrics,
+            }
+        )
+        return out
+
+
+@dataclasses.dataclass
+class ServeArtifact(Artifact):
+    """An online-workload report (trace replay or synthetic zipf)."""
+
+    kind: ClassVar[str] = "serve"
+    mode: str = "zipf"  # "zipf" | "trace"
+    engine: str = "?"
+    report: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: one representative query result for provenance checks
+    sample: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def summary(self) -> Dict[str, Any]:
+        out = super().summary()
+        out.update(
+            {
+                "mode": self.mode,
+                "engine": self.engine,
+                "report": self.report,
+                "sample": self.sample,
+            }
+        )
+        return out
+
+
+@dataclasses.dataclass
+class BenchArtifact(Artifact):
+    """Summary of a registered-suite benchmark pass (``repro.bench``)."""
+
+    kind: ClassVar[str] = "bench"
+    label: str = "ci"
+    suites: List[str] = dataclasses.field(default_factory=list)
+    records: int = 0
+    failures: int = 0
+    report_paths: List[str] = dataclasses.field(default_factory=list)
+
+    def summary(self) -> Dict[str, Any]:
+        out = super().summary()
+        out.update(
+            {
+                "label": self.label,
+                "suites": self.suites,
+                "records": self.records,
+                "failures": self.failures,
+                "report_paths": self.report_paths,
+            }
+        )
+        return out

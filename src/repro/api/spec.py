@@ -1,0 +1,474 @@
+"""Declarative run specification (DESIGN.md §13).
+
+One serializable job description composing *network × algorithm ×
+backend × eval × serve × bench*: a :class:`RunSpec` is a small dataclass
+tree with strict validation (unknown keys and conflicting fields are
+errors, not silent defaults) and a lossless JSON round-trip
+(``RunSpec.from_json(spec.to_json()) == spec``).
+
+The tree is deliberately import-light — no jax, no numpy — so specs can
+be parsed, validated, and diffed without touching an accelerator
+runtime.  Registry-dependent checks (is ``backend`` a registered engine
+key? is ``trace`` a known arrival process?) happen when a
+:class:`~repro.api.session.Session` resolves the spec.
+
+Sections:
+
+* :class:`NetworkSpec` — what graph: a named scenario, the drugnet case
+  study, or an ``.npz`` file;
+* :class:`SolveSpec`   — how to propagate: alg / backend / tolerance /
+  momentum, plus the ranking the solve artifact reports;
+* :class:`EvalSpec`    — optional scoring protocol (recovery or k-fold
+  CV against planted truth);
+* :class:`ServeSpec`   — optional online workload (trace replay or
+  synthetic zipf) played against the serve stack;
+* :class:`BenchSpec`   — optional registered-suite benchmark pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import re
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+_ALGS = ("dhlp1", "dhlp2")
+_MODES = ("batched", "sequential")
+_SEED_MODES = (None, "fixed", "drift")
+_NETWORK_KINDS = ("scenario", "drugnet", "file")
+_EVAL_PROTOCOLS = ("recovery", "cv")
+_RUN_ID_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
+
+
+class SpecError(ValueError):
+    """A spec failed validation (unknown key, bad value, conflict)."""
+
+
+def _require_mapping(d: Any, path: str) -> Mapping[str, Any]:
+    if not isinstance(d, Mapping):
+        raise SpecError(f"{path}: expected a mapping, got {type(d).__name__}")
+    return d
+
+
+def _check_keys(cls, d: Mapping[str, Any], path: str) -> None:
+    """Strict unknown-key rejection — a typo'd knob must not no-op."""
+    allowed = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(d) - allowed)
+    if unknown:
+        raise SpecError(
+            f"{path}: unknown key(s) {unknown}; allowed: {sorted(allowed)}"
+        )
+
+
+def _as_pair(v: Any, path: str) -> Optional[Tuple[int, int]]:
+    if v is None:
+        return None
+    if not isinstance(v, (list, tuple)) or len(v) != 2:
+        raise SpecError(f"{path}: expected a [i, j] pair, got {v!r}")
+    i, j = v
+    if not (isinstance(i, int) and isinstance(j, int)) or i < 0 or j < 0:
+        raise SpecError(f"{path}: pair entries must be ints >= 0, got {v!r}")
+    return (i, j)
+
+
+def _positive(value, name: str, *, strict: bool = True) -> None:
+    bad = value <= 0 if strict else value < 0
+    if bad:
+        op = ">" if strict else ">="
+        raise SpecError(f"{name} must be {op} 0, got {value}")
+
+
+# --------------------------------------------------------------------------
+# Sections
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class NetworkSpec:
+    """What graph the run operates on.
+
+    ``kind="scenario"`` names a registered workload (``name`` required;
+    ``scale``/``seed``/``params`` forwarded to the builder, ``cache``
+    overrides the scenario disk cache).  ``kind="drugnet"`` builds the
+    paper's case-study network (``params`` = ``DrugNetSpec`` overrides).
+    ``kind="file"`` loads a saved network from ``path`` (no ground
+    truth, so ``eval`` sections reject it).
+    """
+
+    kind: str = "scenario"
+    name: Optional[str] = None
+    scale: float = 1.0
+    seed: int = 0
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    path: Optional[str] = None
+    cache: Optional[bool] = None  # None = scenario-cache policy default
+
+    def __post_init__(self) -> None:
+        if self.kind not in _NETWORK_KINDS:
+            raise SpecError(
+                f"network.kind must be one of {_NETWORK_KINDS}, "
+                f"got {self.kind!r}"
+            )
+        _positive(self.scale, "network.scale")
+        if not isinstance(self.params, dict):
+            raise SpecError("network.params must be a mapping")
+        if self.kind == "scenario":
+            if not self.name:
+                raise SpecError("network.kind='scenario' requires a name")
+            if self.path is not None:
+                raise SpecError(
+                    "network.path conflicts with kind='scenario' (path is "
+                    "for kind='file')"
+                )
+        else:
+            if self.name is not None:
+                raise SpecError(
+                    f"network.name={self.name!r} conflicts with "
+                    f"kind={self.kind!r} (name selects a scenario)"
+                )
+            if self.cache is not None:
+                raise SpecError("network.cache applies only to kind='scenario'")
+            if self.scale != 1.0:
+                raise SpecError(
+                    "network.scale applies only to kind='scenario' "
+                    "(size drugnet via params, files are fixed)"
+                )
+        if self.kind == "file":
+            if not self.path:
+                raise SpecError("network.kind='file' requires a path")
+            if self.params:
+                raise SpecError(
+                    "network.params conflicts with kind='file' (the file "
+                    "is self-contained)"
+                )
+        elif self.kind == "drugnet" and self.path is not None:
+            raise SpecError("network.path is for kind='file'")
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str = "network") -> "NetworkSpec":
+        d = _require_mapping(d, path)
+        _check_keys(cls, d, path)
+        return cls(**dict(d))
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveSpec:
+    """How to propagate, and which ranking the solve artifact reports."""
+
+    alg: str = "dhlp2"
+    alpha: float = 0.5
+    sigma: float = 1e-3
+    mode: str = "batched"
+    seed_mode: Optional[str] = None  # None = per-pseudocode default
+    backend: Optional[str] = None  # engine-registry key; None = auto policy
+    devices: Optional[int] = None  # sharded only
+    momentum: float = 0.0
+    max_iter: int = 1000
+    # the ranking reported by the solve artifact (paper step G)
+    top_k: int = 20
+    entity: int = 0
+    rank_pair: Optional[Tuple[int, int]] = None  # None = the eval pair
+
+    def __post_init__(self) -> None:
+        if self.alg not in _ALGS:
+            raise SpecError(f"solve.alg must be one of {_ALGS}, got {self.alg!r}")
+        if self.mode not in _MODES:
+            raise SpecError(f"solve.mode must be one of {_MODES}, got {self.mode!r}")
+        if self.seed_mode not in _SEED_MODES:
+            raise SpecError(
+                f"solve.seed_mode must be one of {_SEED_MODES}, "
+                f"got {self.seed_mode!r}"
+            )
+        if not 0.0 < self.alpha < 1.0:
+            raise SpecError(f"solve.alpha must be in (0, 1), got {self.alpha}")
+        _positive(self.sigma, "solve.sigma")
+        _positive(self.max_iter, "solve.max_iter")
+        _positive(self.top_k, "solve.top_k")
+        _positive(self.momentum, "solve.momentum", strict=False)
+        _positive(self.entity, "solve.entity", strict=False)
+        if self.devices is not None:
+            _positive(self.devices, "solve.devices")
+            if self.backend != "sharded":
+                raise SpecError(
+                    f"solve.devices={self.devices} requires "
+                    f"backend='sharded' (got {self.backend!r})"
+                )
+        object.__setattr__(
+            self, "rank_pair", _as_pair(self.rank_pair, "solve.rank_pair")
+        )
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str = "solve") -> "SolveSpec":
+        d = _require_mapping(d, path)
+        _check_keys(cls, d, path)
+        return cls(**dict(d))
+
+    def to_lp_config(self, *, seed_mode: Optional[str] = None, backend=None):
+        """The equivalent :class:`~repro.core.solver.LPConfig` (lazy
+        import — this module stays runtime-free)."""
+        from repro.core.solver import LPConfig
+
+        return LPConfig(
+            alg=self.alg,
+            alpha=self.alpha,
+            sigma=self.sigma,
+            mode=self.mode,
+            seed_mode=seed_mode or self.seed_mode,
+            momentum=self.momentum,
+            max_iter=self.max_iter,
+            backend=backend if backend is not None else self.backend,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalSpec:
+    """Scoring protocol against the network's planted ground truth."""
+
+    protocol: str = "recovery"
+    folds: int = 5  # cv
+    holdout_frac: float = 0.1  # recovery
+    max_entities: int = 32  # recovery
+    seed: int = 0
+    pair: Optional[Tuple[int, int]] = None  # None = the bundle's eval pair
+
+    def __post_init__(self) -> None:
+        if self.protocol not in _EVAL_PROTOCOLS:
+            raise SpecError(
+                f"eval.protocol must be one of {_EVAL_PROTOCOLS}, "
+                f"got {self.protocol!r}"
+            )
+        if self.folds < 2:
+            raise SpecError(f"eval.folds must be >= 2, got {self.folds}")
+        if not 0.0 < self.holdout_frac < 1.0:
+            raise SpecError(
+                f"eval.holdout_frac must be in (0, 1), got {self.holdout_frac}"
+            )
+        _positive(self.max_entities, "eval.max_entities")
+        object.__setattr__(self, "pair", _as_pair(self.pair, "eval.pair"))
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str = "eval") -> "EvalSpec":
+        d = _require_mapping(d, path)
+        _check_keys(cls, d, path)
+        return cls(**dict(d))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """Online workload played against the serve stack.
+
+    ``trace`` names an arrival process (poisson | bursty | diurnal) for
+    scenario trace replay; ``None`` plays the synthetic zipf workload
+    the legacy serve CLI used.  ``engine`` is redundant with
+    ``solve.backend`` — setting both to different keys is a conflict
+    (the session runs ONE engine across solve → eval → serve).
+    """
+
+    engine: Optional[str] = None
+    trace: Optional[str] = None
+    # synthetic-workload knobs (trace=None)
+    requests: int = 200
+    zipf: float = 1.3
+    deltas: int = 0
+    # trace-replay knobs
+    rate_qps: float = 40.0
+    horizon_s: float = 3.0
+    time_scale: float = 1.0
+    apply_deltas: bool = True
+    # engine knobs
+    top_k: int = 20
+    cache_columns: int = 4096
+    warm_start: bool = True
+    refresh_rounds: int = 0
+    max_batch: int = 64
+    max_wait_ms: float = 2.0
+    queue_depth: int = 1024
+
+    def __post_init__(self) -> None:
+        if self.trace is not None and (
+            not isinstance(self.trace, str) or not self.trace
+        ):
+            raise SpecError(
+                f"serve.trace must be an arrival-process name, "
+                f"got {self.trace!r}"
+            )
+        _positive(self.requests, "serve.requests")
+        if self.zipf <= 1.0:
+            raise SpecError(f"serve.zipf must be > 1, got {self.zipf}")
+        _positive(self.deltas, "serve.deltas", strict=False)
+        _positive(self.rate_qps, "serve.rate_qps")
+        _positive(self.horizon_s, "serve.horizon_s")
+        _positive(self.time_scale, "serve.time_scale")
+        _positive(self.top_k, "serve.top_k")
+        _positive(self.cache_columns, "serve.cache_columns")
+        _positive(self.refresh_rounds, "serve.refresh_rounds", strict=False)
+        _positive(self.max_batch, "serve.max_batch")
+        _positive(self.max_wait_ms, "serve.max_wait_ms", strict=False)
+        _positive(self.queue_depth, "serve.queue_depth")
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str = "serve") -> "ServeSpec":
+        d = _require_mapping(d, path)
+        _check_keys(cls, d, path)
+        return cls(**dict(d))
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchSpec:
+    """A registered-suite benchmark pass through ``repro.bench``."""
+
+    suites: Optional[Tuple[str, ...]] = None  # None = every registered suite
+    fast: bool = True
+    label: Optional[str] = None  # None = "ci" (fast) / "full"
+
+    def __post_init__(self) -> None:
+        if self.suites is not None:
+            if not isinstance(self.suites, (list, tuple)) or not all(
+                isinstance(s, str) and s for s in self.suites
+            ):
+                raise SpecError(
+                    f"bench.suites must be suite names, got {self.suites!r}"
+                )
+            object.__setattr__(self, "suites", tuple(self.suites))
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str = "bench") -> "BenchSpec":
+        d = _require_mapping(d, path)
+        _check_keys(cls, d, path)
+        return cls(**dict(d))
+
+    def resolved_label(self) -> str:
+        return self.label or ("ci" if self.fast else "full")
+
+
+# --------------------------------------------------------------------------
+# The composed run
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """One declarative job: network × solve × (eval? serve? bench?)."""
+
+    network: NetworkSpec
+    #: None = default solve parameters; the solve STAGE runs when this
+    #: section is explicitly present, or when no other stage is configured
+    solve: Optional[SolveSpec] = None
+    eval: Optional[EvalSpec] = None
+    serve: Optional[ServeSpec] = None
+    bench: Optional[BenchSpec] = None
+    run_id: Optional[str] = None  # None = deterministic content-derived id
+
+    def __post_init__(self) -> None:
+        if self.run_id is not None and not _RUN_ID_RE.match(self.run_id):
+            raise SpecError(
+                f"run_id {self.run_id!r} is not filesystem-safe "
+                "([A-Za-z0-9._-], no leading punctuation)"
+            )
+        solve = self.resolved_solve()
+        if self.serve is not None:
+            if (
+                self.serve.engine is not None
+                and solve.backend is not None
+                and self.serve.engine != solve.backend
+            ):
+                raise SpecError(
+                    f"serve.engine={self.serve.engine!r} conflicts with "
+                    f"solve.backend={solve.backend!r}; the session "
+                    "runs one engine — set one key (or both to the same)"
+                )
+            if solve.seed_mode == "drift":
+                raise SpecError(
+                    "serve requires solve.seed_mode='fixed' (warm starts "
+                    "need the F0-independent fixed point, DESIGN.md §9)"
+                )
+        if self.eval is not None and self.network.kind == "file":
+            raise SpecError(
+                "eval sections need planted ground truth; "
+                "network.kind='file' carries none"
+            )
+
+    # ----------------------------------------------------------- round-trip
+    @classmethod
+    def from_dict(cls, d: Any) -> "RunSpec":
+        d = _require_mapping(d, "runspec")
+        _check_keys(cls, d, "runspec")
+        if "network" not in d:
+            raise SpecError("runspec: a 'network' section is required")
+        return cls(
+            network=NetworkSpec.from_dict(d["network"]),
+            solve=(
+                SolveSpec.from_dict(d["solve"])
+                if d.get("solve") is not None
+                else None
+            ),
+            eval=(EvalSpec.from_dict(d["eval"]) if d.get("eval") is not None else None),
+            serve=(
+                ServeSpec.from_dict(d["serve"])
+                if d.get("serve") is not None
+                else None
+            ),
+            bench=(
+                BenchSpec.from_dict(d["bench"])
+                if d.get("bench") is not None
+                else None
+            ),
+            run_id=d.get("run_id"),
+        )
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, s: str) -> "RunSpec":
+        try:
+            d = json.loads(s)
+        except json.JSONDecodeError as e:
+            raise SpecError(f"runspec: invalid JSON ({e})") from e
+        return cls.from_dict(d)
+
+    def to_json(self, *, indent: Optional[int] = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_file(cls, path: str) -> "RunSpec":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    # ------------------------------------------------------------ identity
+    def content_hash(self) -> str:
+        """Stable digest of the spec content (run_id excluded)."""
+        d = self.to_dict()
+        d.pop("run_id", None)
+        blob = json.dumps(d, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()[:10]
+
+    def resolved_solve(self) -> SolveSpec:
+        """The solve parameters eval/serve stages run under (defaults
+        when no ``solve`` section was written)."""
+        return self.solve if self.solve is not None else SolveSpec()
+
+    def resolved_run_id(self) -> str:
+        """Explicit ``run_id``, else a deterministic content-derived slug
+        — the same spec always lands in the same ``results/<run_id>/``."""
+        if self.run_id:
+            return self.run_id
+        solve = self.resolved_solve()
+        net = self.network.name or self.network.kind
+        backend = solve.backend or "auto"
+        return f"{net}-{solve.alg}-{backend}-{self.content_hash()}"
+
+    def sections(self) -> Tuple[str, ...]:
+        """The configured run stages, in execution order.
+
+        ``solve`` runs when its section is explicitly present — or when
+        nothing else is, so a bare ``{"network": ...}`` spec is a solve.
+        """
+        out = []
+        others = [self.eval, self.serve, self.bench]
+        if self.solve is not None or not any(s is not None for s in others):
+            out.append("solve")
+        if self.eval is not None:
+            out.append("eval")
+        if self.serve is not None:
+            out.append("serve")
+        if self.bench is not None:
+            out.append("bench")
+        return tuple(out)

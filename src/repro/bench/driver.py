@@ -1,0 +1,114 @@
+"""Shared bench-pass driver: one implementation behind every entry point.
+
+``benchmarks/run.py`` (the legacy CLI), ``python -m repro run`` with a
+``bench`` section, and ``Session.bench()`` all execute a benchmark pass
+through :func:`run_bench` — same suite registration, same report
+writing, same failure semantics — so the perf-tracking subsystem
+(DESIGN.md §10) has exactly one driver path to trust.
+
+Suite modules live under ``benchmarks/`` at the repo root (they are
+workload definitions, not library code); :func:`import_suite_modules`
+makes the repo root importable when the caller has not already done so.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+from typing import Callable, List, Optional
+
+
+class BenchSetupError(RuntimeError):
+    """The pass cannot run as requested (e.g. too few devices)."""
+
+
+@dataclasses.dataclass
+class BenchOutcome:
+    """What a pass produced: suites run, records written, failures."""
+
+    label: str
+    suites: List[str]
+    records: int
+    failures: int
+    paths: List[str]
+
+
+def import_suite_modules() -> None:
+    """Import every ``benchmarks/*`` suite module (registration is an
+    import-time side effect) plus the two in-package matrix suites."""
+    import repro.bench.matrix as bench_matrix
+
+    try:
+        import benchmarks.fig34_parallelism  # noqa: F401
+    except ImportError:
+        # invoked from outside the repo root: benchmarks/ sits three
+        # levels above this file (src/repro/bench/driver.py)
+        repo = os.path.dirname(
+            os.path.dirname(
+                os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+            )
+        )
+        if repo not in sys.path:
+            sys.path.insert(0, repo)
+        import benchmarks.fig34_parallelism  # noqa: F401
+    import benchmarks.kernels_bench  # noqa: F401
+    import benchmarks.lp_on_graph  # noqa: F401
+    import benchmarks.roofline as bench_roofline
+    import benchmarks.serve_bench  # noqa: F401
+    import benchmarks.table2_cv  # noqa: F401
+    import benchmarks.table34_deleted  # noqa: F401
+    import benchmarks.table56_scaling  # noqa: F401
+    import benchmarks.table7_sigma  # noqa: F401
+
+    bench_matrix.register()
+    bench_roofline.register()
+
+
+def run_bench(
+    *,
+    fast: bool = True,
+    only: Optional[List[str]] = None,
+    label: Optional[str] = None,
+    write: bool = True,
+    echo: Optional[Callable[[str], None]] = None,
+) -> BenchOutcome:
+    """Run the registered suites; write ``BENCH_<label>.json`` + results/.
+
+    Raises :class:`BenchSetupError` when the full pass lacks the 8
+    devices its sharded8 cells need (the device count is locked at jax
+    init — see ``benchmarks/run.py`` for the XLA_FLAGS peek).
+    """
+    import jax
+
+    if not fast and jax.device_count() < 8:
+        raise BenchSetupError(
+            "a full bench pass needs 8 devices but jax initialized with "
+            f"{jax.device_count()} — set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=8 before any jax "
+            "import (the CLI drivers peek argv and do this for you)"
+        )
+
+    from repro.bench import BenchReport
+    from repro.bench.registry import run_suites
+
+    import_suite_modules()
+
+    resolved = label or ("ci" if fast else "full")
+    report = BenchReport(resolved)
+    if echo:
+        echo("name,us_per_call,derived")
+    failures = run_suites(report, only=only, fast=fast, echo=echo)
+    paths: List[str] = []
+    if write:
+        paths = report.write()
+        if echo:
+            for p in paths:
+                echo(f"wrote {p}")
+    return BenchOutcome(
+        label=resolved,
+        suites=report.suites,
+        records=len(report.records),
+        failures=failures,
+        paths=paths,
+    )

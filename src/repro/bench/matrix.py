@@ -219,11 +219,13 @@ def _scenario_rows(fast: bool):
     sparse on the million-edge row (dense there would swamp CI hosts)."""
     if fast:
         return (
+            ("bipartite", 0.35, ("dense", "sparse")),
             ("kpartite5", 0.35, ("dense", "sparse")),
             ("kpartite_heterophilic", 0.35, ("dense", "sparse")),
             ("powerlaw", 0.02, ("dense", "sparse")),
         )
     return (
+        ("bipartite", 1.0, ("dense", "sparse")),
         ("kpartite5", 1.0, ("dense", "sparse", "kernel")),
         ("kpartite_heterophilic", 1.0, ("dense", "sparse", "kernel")),
         ("powerlaw", 1.0, ("sparse", "sparse_coo")),
@@ -232,24 +234,39 @@ def _scenario_rows(fast: bool):
 
 
 def scenario_matrix_records(fast: bool = True) -> List[BenchRecord]:
-    """The ``scenario_matrix`` suite: named workloads × registry backends."""
+    """The ``scenario_matrix`` suite: named workloads × registry backends.
+
+    Each cell is one RunSpec resolved by a Session (DESIGN.md §13) — the
+    bundle is generated once per row (disk-cached at heavyweight sizes)
+    and injected, the backend resolves through the session, and the
+    timed closure runs the session's eval engine so prepare() caching
+    matches what ``python -m repro run`` would do.
+    """
     import repro.scenarios as sc
-    from repro.engine import make_engine
+    from repro.api import EvalSpec, NetworkSpec, RunSpec, Session, SolveSpec
 
     max_entities = 16 if fast else 24
     repeats = 3
     records: List[BenchRecord] = []
     for scenario, scale, backends in _scenario_rows(fast):
+        net_spec = NetworkSpec(kind="scenario", name=scenario, scale=scale, seed=0)
         bundle = sc.generate(scenario, scale=scale, seed=0)
         net = bundle.network
         problem = sc.make_recovery_problem(
             bundle, holdout_frac=0.1, max_entities=max_entities, seed=0
         )
-        cfg = sc.default_lp_config(sigma=1e-4)
         edges = net.num_edges
         F_ref = None
         for backend in backends:
-            engine = make_engine(backend, cfg)
+            session = Session(
+                RunSpec(
+                    network=net_spec,
+                    solve=SolveSpec(sigma=1e-4, seed_mode="fixed", backend=backend),
+                    eval=EvalSpec(max_entities=max_entities),
+                ),
+                bundle=bundle,
+            )
+            engine = session.eval_engine
 
             def solve(engine=engine):
                 return engine.run(problem.masked_net, seeds=problem.Y)

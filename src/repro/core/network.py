@@ -110,6 +110,48 @@ class HeteroNetwork:
     def block_slices(self) -> List[slice]:
         return [slice(off, off + n) for off, n in zip(self.offsets, self.sizes)]
 
+    # -------------------------------------------------------------- storage
+    def save_npz(self, path: str) -> str:
+        """Write the network to one ``.npz`` (``NetworkSpec(kind='file')``).
+
+        Layout: ``P_<t>`` per similarity block, ``R_<i>_<j>`` per
+        association block, optional ``type_names``.  Returns the path
+        actually written — numpy appends ``.npz`` when missing, and a
+        return value that :meth:`load_npz` cannot open would be a trap.
+        """
+        arrays: Dict[str, np.ndarray] = {
+            f"P_{t}": p for t, p in enumerate(self.P)
+        }
+        for (i, j), r in self.R.items():
+            arrays[f"R_{i}_{j}"] = r
+        if self.type_names is not None:
+            arrays["type_names"] = np.asarray(list(self.type_names))
+        np.savez_compressed(path, **arrays)
+        return path if path.endswith(".npz") else path + ".npz"
+
+    @classmethod
+    def load_npz(cls, path: str) -> "HeteroNetwork":
+        """Inverse of :meth:`save_npz`."""
+        with np.load(path, allow_pickle=False) as data:
+            p_keys = sorted(
+                (k for k in data.files if k.startswith("P_")),
+                key=lambda k: int(k.split("_")[1]),
+            )
+            if not p_keys:
+                raise ValueError(f"{path}: no P_<t> similarity blocks found")
+            P = [data[k] for k in p_keys]
+            R = {}
+            for k in data.files:
+                if k.startswith("R_"):
+                    _, i, j = k.split("_")
+                    R[(int(i), int(j))] = data[k]
+            names = (
+                tuple(str(s) for s in data["type_names"])
+                if "type_names" in data.files
+                else None
+            )
+        return cls(P=P, R=R, type_names=names)
+
     # ----------------------------------------------------------- transforms
     def normalize(self) -> "NormalizedNetwork":
         """Paper §3.1: normalize all P_i and R_ij so LP converges."""

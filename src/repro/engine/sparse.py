@@ -16,6 +16,7 @@ comparison — the bench matrix times both layouts on every pass.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import List, Optional, Tuple
 
 import jax
@@ -353,9 +354,22 @@ class KernelCSREngine(SparseCSREngine):
 
 @register_backend("sparse_coo")
 class SparseCOOEngine(LPEngine):
-    """Legacy COO gather/segment-sum engine behind the registry."""
+    """Legacy COO gather/segment-sum engine behind the registry.
+
+    DEPRECATED: blocked-CSR (``sparse``) has dominated it on two
+    consecutive bench passes (14–26x on the CPU matrix); it stays
+    registered for A/B comparison only, warns on selection, and the
+    ``auto`` policy never resolves to it (DESIGN.md §11).
+    """
 
     def __init__(self, config=None, *, pad_mult: int = 256):
+        warnings.warn(
+            "backend 'sparse_coo' is deprecated — blocked-CSR ('sparse') "
+            "dominates it on every measured cell; it remains registered "
+            "for A/B benchmarking only and will be removed",
+            DeprecationWarning,
+            stacklevel=3,
+        )
         super().__init__(config if config is not None else LPConfig())
         self.pad_mult = pad_mult
 

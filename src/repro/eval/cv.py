@@ -4,6 +4,12 @@ Positives = the known interaction entries of one association matrix.  Each
 fold hides 1/k of the positives (they are zeroed in the input network); the
 solver's predicted scores for the held-out positives are compared against
 all true-negative entries of that matrix.
+
+This module is the protocol; the declarative front-end is a RunSpec
+``eval`` section with ``protocol="cv"`` — ``Session.evaluate()``
+(DESIGN.md §13) drives :func:`cross_validate` through
+``scenarios.evaluate.scenario_cross_validate`` with one engine reused
+across every fold.
 """
 from __future__ import annotations
 

@@ -1,221 +1,24 @@
-"""Scenario driver — list/generate/solve named workloads (DESIGN.md §12).
+"""DEPRECATED entry point — delegates to the unified driver.
 
-The scenario registry is the workload-side twin of the engine-backend
-registry: this CLI crosses the two.
+``python -m repro.launch.scenario`` listed/generated/solved named
+workloads.  The solve/CV cores now run as RunSpecs through the Session
+API (DESIGN.md §13); this module forwards its legacy flag surface to the
+``repro scenario`` shim and warns.
 
-  PYTHONPATH=src python -m repro.launch.scenario --list
-  PYTHONPATH=src python -m repro.launch.scenario --info powerlaw --scale 0.05
-  PYTHONPATH=src python -m repro.launch.scenario --solve kpartite_heterophilic \
-      --backends dense,sparse --scale 0.4
-  PYTHONPATH=src python -m repro.launch.scenario --solve powerlaw --scale 1.0 \
-      --backends sparse,kernel          # the >=1M-edge cell
-  PYTHONPATH=src python -m repro.launch.scenario --cv kpartite5 --folds 4
-  PYTHONPATH=src python -m repro.launch.scenario --trace streaming \
-      --process bursty
+  PYTHONPATH=src python -m repro run --network scenario:powerlaw \
+      --scale 0.05 --eval recovery --backend sparse
+  PYTHONPATH=src python -m repro scenario --list
 """
+
 from __future__ import annotations
 
-import argparse
-import json
-import time
+import sys
 
-import numpy as np
-
-# one home for the cross-backend agreement rule: the CLI and the
-# CI-gated scenario_matrix suite must never drift apart
-from repro.bench.matrix import AGREEMENT_TOL
-
-
-def build_parser() -> argparse.ArgumentParser:
-    ap = argparse.ArgumentParser(description=__doc__)
-    mode = ap.add_mutually_exclusive_group(required=True)
-    mode.add_argument("--list", action="store_true",
-                      help="list registered scenarios")
-    mode.add_argument("--info", metavar="NAME",
-                      help="generate NAME and print its statistics")
-    mode.add_argument("--solve", metavar="NAME",
-                      help="solve NAME on one or more backends and score "
-                           "planted-edge recovery")
-    mode.add_argument("--cv", metavar="NAME",
-                      help="k-fold CV against NAME's planted truth")
-    mode.add_argument("--trace", metavar="NAME",
-                      help="generate a query trace for NAME and print "
-                           "its arrival statistics")
-    ap.add_argument("--scale", type=float, default=1.0,
-                    help="size multiplier passed to the builder")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--backends", default="auto",
-                    help="comma-separated engine-registry keys")
-    ap.add_argument("--devices", type=int, default=None,
-                    help="edge-shard count for the sharded backend")
-    ap.add_argument("--sigma", type=float, default=1e-4)
-    ap.add_argument("--holdout-frac", type=float, default=0.1)
-    ap.add_argument("--max-entities", type=int, default=32)
-    ap.add_argument("--folds", type=int, default=5)
-    ap.add_argument("--process", default="poisson",
-                    help="arrival process for --trace")
-    ap.add_argument("--rate-qps", type=float, default=50.0)
-    ap.add_argument("--horizon-s", type=float, default=4.0)
-    ap.add_argument("--json", default=None, help="write the report here")
-    return ap
-
-
-def _emit(report: dict, path) -> None:
-    if path:
-        with open(path, "w") as f:
-            json.dump(report, f, indent=2, default=str)
-        print(f"report written to {path}")
-
-
-def cmd_list() -> dict:
-    import repro.scenarios as sc
-
-    rows = sc.list_rows()
-    width = max(len(r["name"]) for r in rows)
-    for r in rows:
-        tags = f" [{','.join(r['tags'])}]" if r["tags"] else ""
-        print(f"{r['name']:<{width}}  {r['description']}{tags}")
-    print(f"\n{len(rows)} scenarios registered")
-    return {"scenarios": rows}
-
-
-def cmd_info(args) -> dict:
-    import repro.scenarios as sc
-
-    t0 = time.time()
-    bundle = sc.generate(args.info, scale=args.scale, seed=args.seed)
-    desc = bundle.describe()
-    desc.pop("arriving_truth", None)
-    desc["generate_s"] = round(time.time() - t0, 3)
-    for k, v in desc.items():
-        print(f"{k:>20}: {v}")
-    return desc
-
-
-def cmd_solve(args) -> dict:
-    """Solve on every requested backend; report recovery AUC + agreement.
-
-    The first backend is the reference for the cross-backend agreement
-    check (pass ``dense`` first where the dense operator is feasible).
-    """
-    import repro.scenarios as sc
-    from repro.engine import resolve_backend
-
-    bundle = sc.generate(args.solve, scale=args.scale, seed=args.seed)
-    net = bundle.network
-    print(
-        f"[scenario] {bundle.name}: T={net.num_types} types, "
-        f"{net.num_nodes} nodes, {net.num_edges} edges"
-    )
-    problem = sc.make_recovery_problem(
-        bundle,
-        holdout_frac=args.holdout_frac,
-        max_entities=args.max_entities,
-        seed=args.seed,
-    )
-    cfg = sc.default_lp_config(sigma=args.sigma)
-    backends = [b.strip() for b in args.backends.split(",") if b.strip()]
-    report = {"scenario": bundle.name, "scale": args.scale,
-              "nodes": net.num_nodes, "edges": net.num_edges,
-              "eval_pair": list(problem.pair), "cells": []}
-    F_ref, ref_name = None, None
-    for key in backends:
-        backend = resolve_backend(key, num_nodes=net.num_nodes, config=cfg)
-        kw = (
-            {"devices": args.devices}
-            if backend == "sharded" and args.devices
-            else {}
-        )
-        t0 = time.time()
-        res = sc.solve_recovery(problem, backend, lp=cfg, **kw)
-        dt = time.time() - t0
-        cell = problem.metrics(res.F)
-        cell.update({
-            "backend": backend, "requested": key,
-            "outer_iters": res.outer_iters, "seconds": round(dt, 3),
-        })
-        if F_ref is None:
-            F_ref, ref_name = res.F, backend
-        else:
-            diff = float(np.max(np.abs(res.F - F_ref)))
-            cell["max_abs_diff_vs_ref"] = diff
-            cell["agree_ref"] = bool(diff <= AGREEMENT_TOL)
-        report["cells"].append(cell)
-        agree = (
-            "" if "agree_ref" not in cell
-            else f"  agree_vs_{ref_name}={cell['agree_ref']}"
-        )
-        print(
-            f"[scenario] {backend:>10}: auc={cell['recovery_auc']:.4f} "
-            f"aupr={cell['recovery_aupr']:.4f} "
-            f"iters={res.outer_iters} {dt:.2f}s{agree}"
-        )
-    return report
-
-
-def cmd_cv(args) -> dict:
-    import repro.scenarios as sc
-    from repro.eval.cv import summarize
-
-    bundle = sc.generate(args.cv, scale=args.scale, seed=args.seed)
-    backend = args.backends.split(",")[0].strip()
-    t0 = time.time()
-    results = sc.scenario_cross_validate(
-        bundle,
-        backend=backend,
-        k=args.folds,
-        seed=args.seed,
-        lp=sc.default_lp_config(sigma=args.sigma),
-    )
-    summary = summarize(results)
-    summary["seconds"] = round(time.time() - t0, 3)
-    print(
-        f"[scenario] {bundle.name} {args.folds}-fold CV on planted truth "
-        f"({backend}): auc={summary['auc']:.4f} aupr={summary['aupr']:.4f} "
-        f"best_acc={summary['best_acc']:.4f}"
-    )
-    return {"scenario": bundle.name, "backend": backend,
-            "folds": args.folds, **summary}
-
-
-def cmd_trace(args) -> dict:
-    import repro.scenarios as sc
-
-    bundle = sc.generate(args.trace, scale=args.scale, seed=args.seed)
-    trace = sc.build_trace(
-        bundle, args.process, rate_qps=args.rate_qps,
-        horizon_s=args.horizon_s, seed=args.seed,
-    )
-    gaps = np.diff(trace.t) if len(trace) > 1 else np.zeros(1)
-    uniq = len(np.unique(trace.entity))
-    stats = {
-        "scenario": bundle.name,
-        "process": trace.process,
-        "queries": len(trace),
-        "offered_qps": round(len(trace) / trace.horizon_s, 2),
-        "unique_entities": uniq,
-        "gap_p50_ms": round(float(np.percentile(gaps, 50)) * 1e3, 3),
-        "gap_p99_ms": round(float(np.percentile(gaps, 99)) * 1e3, 3),
-        "deltas": len(bundle.deltas),
-    }
-    for k, v in stats.items():
-        print(f"{k:>16}: {v}")
-    return stats
+from repro.launch.cli import scenario_main
 
 
 def main() -> None:
-    args = build_parser().parse_args()
-    if args.list:
-        report = cmd_list()
-    elif args.info:
-        report = cmd_info(args)
-    elif args.solve:
-        report = cmd_solve(args)
-    elif args.cv:
-        report = cmd_cv(args)
-    else:
-        report = cmd_trace(args)
-    _emit(report, args.json)
+    sys.exit(scenario_main(sys.argv[1:]))
 
 
 if __name__ == "__main__":

@@ -1,147 +1,25 @@
-"""Online serving driver — long-lived query engine over the drug network.
+"""DEPRECATED entry point — delegates to the unified driver.
 
-Where ``repro.launch.solve`` is one-shot (build, solve, print, exit), this
-driver stands up the ``repro/serve`` stack — micro-batching scheduler,
-column LRU with warm starts, incremental GraphDelta updates — and plays a
-synthetic query workload against it, reporting QPS and latency
-percentiles.
+``python -m repro.launch.serve`` stood up the online query engine and
+played a synthetic zipf workload against it.  That workflow is now a
+RunSpec with a ``serve`` section executed by ``python -m repro run``
+(DESIGN.md §13); this module forwards its legacy flag surface to the
+``repro serve`` shim and warns.
 
-  PYTHONPATH=src python -m repro.launch.serve --requests 200
-  PYTHONPATH=src python -m repro.launch.serve --requests 2000 \
-      --engine sparse --zipf 1.2 --deltas 3 --max-batch 128
+  PYTHONPATH=src python -m repro run --serve --requests 200
+  PYTHONPATH=src python -m repro run --serve --requests 2000 \
+      --backend sparse --zipf 1.2 --deltas 3 --max-batch 128
 """
+
 from __future__ import annotations
 
-import argparse
-import collections
-import time
+import sys
 
-import numpy as np
-
-
-def build_parser() -> argparse.ArgumentParser:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--alg", choices=["dhlp1", "dhlp2"], default="dhlp2")
-    ap.add_argument("--alpha", type=float, default=0.5)
-    ap.add_argument("--sigma", type=float, default=1e-3)
-    ap.add_argument(
-        "--engine",
-        choices=["dense", "sparse", "sparse_coo", "kernel", "sharded",
-                 "auto"],
-        default="dense",
-        help="engine-registry backend (sharded uses the host's devices)",
-    )
-    ap.add_argument(
-        "--refresh-rounds", type=int, default=0,
-        help="fused LP rounds to advance stale hints after each delta",
-    )
-    ap.add_argument("--drugs", type=int, default=223)
-    ap.add_argument("--diseases", type=int, default=150)
-    ap.add_argument("--targets", type=int, default=95)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--top-k", type=int, default=20)
-    ap.add_argument("--requests", type=int, default=200,
-                    help="number of queries to play")
-    ap.add_argument("--zipf", type=float, default=1.3,
-                    help="popularity skew; higher = more repeat queries")
-    ap.add_argument("--deltas", type=int, default=0,
-                    help="graph edits interleaved through the workload")
-    ap.add_argument("--max-batch", type=int, default=64)
-    ap.add_argument("--max-wait-ms", type=float, default=2.0)
-    ap.add_argument("--queue-depth", type=int, default=1024)
-    ap.add_argument("--cache-columns", type=int, default=4096)
-    ap.add_argument("--no-warm-start", action="store_true")
-    return ap
+from repro.launch.cli import serve_main
 
 
 def main() -> None:
-    ap = build_parser()
-    args = ap.parse_args()
-    if args.requests < 1:
-        ap.error("--requests must be >= 1")
-    if args.zipf <= 1.0:
-        ap.error("--zipf must be > 1 (numpy zipf exponent)")
-
-    from repro.core import GraphDelta, LPConfig
-    from repro.data.drugnet import DrugNetSpec, make_drugnet
-    from repro.serve import LPServeEngine, QuerySpec, ServeConfig
-    from repro.serve.types import percentiles
-
-    dn = make_drugnet(DrugNetSpec(
-        n_drug=args.drugs, n_disease=args.diseases, n_target=args.targets,
-        seed=args.seed,
-    ))
-    net = dn.network
-    print(f"[serve] network: {net.sizes} nodes/type, {net.num_edges} edges")
-
-    cfg = ServeConfig(
-        lp=LPConfig(alg=args.alg, alpha=args.alpha, sigma=args.sigma,
-                    seed_mode="fixed"),
-        engine=args.engine,
-        cache_columns=args.cache_columns,
-        warm_start=not args.no_warm_start,
-        refresh_rounds=args.refresh_rounds,
-        max_batch=args.max_batch,
-        max_wait_s=args.max_wait_ms / 1e3,
-        queue_depth=args.queue_depth,
-    )
-    engine = LPServeEngine(net, cfg)
-    engine.start()
-
-    # workload: zipf-popular drugs querying their target candidates,
-    # drug→target being the paper's headline repositioning direction
-    rng = np.random.default_rng(args.seed)
-    n_drug = net.sizes[0]
-    ranks = rng.permutation(n_drug)
-    draws = np.minimum(rng.zipf(args.zipf, size=args.requests), n_drug) - 1
-    entities = ranks[draws]
-    delta_at = (
-        set(np.linspace(0, args.requests, args.deltas + 2, dtype=int)[1:-1])
-        if args.deltas
-        else set()
-    )
-
-    futures = []
-    t0 = time.monotonic()
-    for i, ent in enumerate(entities):
-        if i in delta_at:
-            # a fresh drug-target association lands online
-            d = int(rng.integers(n_drug))
-            t = int(rng.integers(net.sizes[2]))
-            v = engine.apply_delta(GraphDelta(assoc=[((0, 2), d, t, 1.0)]))
-            print(f"[serve] delta @req {i}: +assoc drug {d} → target {t} "
-                  f"(version {v})")
-        futures.append(engine.submit(
-            QuerySpec(entity=int(ent), target_type=2, top_k=args.top_k)
-        ))
-    results = [f.result(timeout=600) for f in futures]
-    wall = time.monotonic() - t0
-    engine.stop()
-
-    lats = [r.latency_s for r in results]
-    pcts = percentiles(lats)
-    by_source = collections.Counter(r.source for r in results)
-    rounds_by = collections.defaultdict(list)
-    for r in results:
-        rounds_by[r.source].append(r.rounds)
-    print(f"[serve] {len(results)} queries in {wall:.2f}s "
-          f"→ {len(results) / wall:.1f} QPS")
-    print(f"[serve] latency p50={pcts['p50'] * 1e3:.2f}ms "
-          f"p95={pcts['p95'] * 1e3:.2f}ms p99={pcts['p99'] * 1e3:.2f}ms")
-    for src in ("cache", "warm", "cold"):
-        if by_source[src]:
-            mr = float(np.mean(rounds_by[src]))
-            print(f"[serve]   {src:5s}: {by_source[src]:5d} queries, "
-                  f"mean {mr:.1f} LP rounds")
-    st = engine.batcher.stats
-    cs = engine.columns.stats
-    print(f"[serve] batches={st.batches} mean_batch={st.mean_batch_size:.1f} "
-          f"rejected={st.rejected}")
-    print(f"[serve] cache: hit_rate={cs.hit_rate:.2%} "
-          f"evictions={cs.evictions} demoted={cs.invalidations}")
-    r0 = results[0]
-    print(f"[serve] sample: drug {r0.spec.entity} top-{len(r0.candidates)} "
-          f"targets {r0.candidates.tolist()}")
+    sys.exit(serve_main(sys.argv[1:]))
 
 
 if __name__ == "__main__":

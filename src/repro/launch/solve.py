@@ -1,99 +1,25 @@
-"""LP serving driver — the paper's end-to-end workflow (Fig. 2 steps A-G).
+"""DEPRECATED entry point — delegates to the unified driver.
 
-Builds (or generates) the heterogeneous drug/disease/target network,
-normalizes it, runs DHLP-1 or DHLP-2 to σ-convergence on the selected
-engine backend, and emits the three outputs: predicted interaction
-matrices, updated similarity matrices, and per-entity ranked candidates.
+``python -m repro.launch.solve`` built the case-study network, ran
+DHLP-1/2 to σ-convergence, and printed the three outputs.  That workflow
+is now one declarative RunSpec executed by ``python -m repro run``
+(DESIGN.md §13); this module forwards its legacy flag surface to the
+``repro solve`` shim (same flags, same prints, byte-identical rankings)
+and warns.
 
-  PYTHONPATH=src python -m repro.launch.solve --alg dhlp2 --sigma 1e-3 \
-      --drugs 223 --diseases 150 --targets 95 --top-k 20
-  PYTHONPATH=src python -m repro.launch.solve --backend sharded --devices 2
+  PYTHONPATH=src python -m repro run --alg dhlp2 --sigma 1e-3 --top-k 20
+  PYTHONPATH=src python -m repro run --backend sharded --devices 2
 """
+
 from __future__ import annotations
 
-import argparse
-import json
-import time
+import sys
 
-import numpy as np
+from repro.launch.cli import solve_main
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--alg", choices=["dhlp1", "dhlp2"], default="dhlp2")
-    ap.add_argument("--alpha", type=float, default=0.5)
-    ap.add_argument("--sigma", type=float, default=1e-3)
-    ap.add_argument("--mode", choices=["batched", "sequential"],
-                    default="batched")
-    ap.add_argument("--backend", "--engine", dest="backend", default="dense",
-                    help="engine-registry backend "
-                         "(dense/sparse/sparse_coo/kernel/sharded/auto)")
-    ap.add_argument("--devices", type=int, default=None,
-                    help="edge-shard count for --backend sharded")
-    ap.add_argument("--drugs", type=int, default=223)
-    ap.add_argument("--diseases", type=int, default=150)
-    ap.add_argument("--targets", type=int, default=95)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--top-k", type=int, default=20)
-    ap.add_argument("--entity", type=int, default=0,
-                    help="drug id whose target ranking is printed")
-    ap.add_argument("--out", default=None, help="write outputs npz here")
-    args = ap.parse_args()
-
-    from repro.core import LPConfig, extract_outputs
-    from repro.data.drugnet import DrugNetSpec, make_drugnet
-    from repro.engine import UnknownBackendError, make_engine, resolve_backend
-
-    dn = make_drugnet(DrugNetSpec(
-        n_drug=args.drugs, n_disease=args.diseases, n_target=args.targets,
-        seed=args.seed,
-    ))
-    net = dn.network
-    norm = net.normalize()
-    print(f"[solve] network: {net.sizes} nodes/type, {net.num_edges} edges")
-
-    cfg = LPConfig(
-        alg=args.alg, alpha=args.alpha, sigma=args.sigma, mode=args.mode,
-    )
-    try:
-        backend = resolve_backend(
-            args.backend, num_nodes=net.num_nodes, config=cfg
-        )
-    except UnknownBackendError as e:
-        ap.error(str(e))
-    kw = {"devices": args.devices} if backend == "sharded" else {}
-    engine = make_engine(backend, cfg, **kw)
-    print(f"[solve] backend: {backend}")
-    t0 = time.time()
-    res = engine.run(norm)
-    dt = time.time() - t0
-    print(
-        f"[solve] {args.alg} converged={res.converged} "
-        f"outer={res.outer_iters} inner={res.inner_iters} "
-        f"supersteps={res.supersteps} in {dt:.2f}s"
-    )
-
-    out = extract_outputs(res.F, norm)
-    names = dn.pair_names
-    for pair, name in names.items():
-        m = out.interactions[pair]
-        print(f"[solve] {name}: {m.shape}, mean score {m.mean():.4g}")
-
-    top = out.ranked_candidates((0, 2), args.entity, args.top_k)
-    print(f"[solve] top-{args.top_k} targets for drug {args.entity}: "
-          f"{top.tolist()}")
-
-    if args.out:
-        np.savez_compressed(
-            args.out,
-            drug_disease=out.interactions[(0, 1)],
-            drug_target=out.interactions[(0, 2)],
-            disease_target=out.interactions[(1, 2)],
-            sim_drug=out.similarities[0],
-            sim_disease=out.similarities[1],
-            sim_target=out.similarities[2],
-        )
-        print(f"[solve] outputs written to {args.out}")
+    sys.exit(solve_main(sys.argv[1:]))
 
 
 if __name__ == "__main__":

@@ -13,11 +13,14 @@ from repro.scenarios.arrivals import (
     zipf_entities,
 )
 from repro.scenarios.base import (
+    CACHE_MIN_EDGES,
     QueryTrace,
     ScenarioBundle,
     ScenarioInfo,
     TimedDelta,
     available_scenarios,
+    cache_dir,
+    cache_path,
     generate,
     get_scenario,
     list_rows,
@@ -45,6 +48,7 @@ from repro.scenarios import library as _library  # noqa: F401,E402
 
 __all__ = [
     "ARRIVAL_PROCESSES",
+    "CACHE_MIN_EDGES",
     "KPartiteSpec",
     "PlantedKPartite",
     "QueryTrace",
@@ -56,6 +60,8 @@ __all__ = [
     "available_scenarios",
     "backend_solver_fn",
     "build_trace",
+    "cache_dir",
+    "cache_path",
     "default_lp_config",
     "generate",
     "get_scenario",

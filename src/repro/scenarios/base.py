@@ -22,6 +22,10 @@ full-scale cell.  ``repro.launch.scenario`` lists/generates/solves them;
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import os
+import pickle
+import tempfile
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -153,13 +157,95 @@ def get_scenario(name: str) -> ScenarioInfo:
     return _REGISTRY[name]
 
 
+# --------------------------------------------------------------------------
+# Generation + disk cache
+# --------------------------------------------------------------------------
+# Heavyweight bundles (the 1.2M-edge powerlaw cell costs ~40 s and
+# ~600 MB peak to generate, per process) are pickled once per machine
+# under results/scenario_cache/ and reloaded on repeat generation.
+# Small bundles are not worth the disk churn — only networks at or
+# above this edge count are written.
+CACHE_MIN_EDGES = 200_000
+# bump when generator semantics change: stale cache entries must miss
+_CACHE_SALT = "v1"
+
+
+def cache_dir() -> str:
+    return os.environ.get(
+        "REPRO_SCENARIO_CACHE_DIR",
+        os.path.join("results", "scenario_cache"),
+    )
+
+
+def _cache_key(name: str, scale: float, seed: int, kw: Dict[str, Any]) -> str:
+    """Digest of scenario name + every builder parameter (+ salt)."""
+    parts = [
+        _CACHE_SALT,
+        name,
+        repr(float(scale)),
+        repr(int(seed)),
+        repr(sorted(kw.items())),
+    ]
+    return hashlib.sha256("|".join(parts).encode()).hexdigest()[:16]
+
+
+def cache_path(name: str, scale: float, seed: int, kw: Dict[str, Any]) -> str:
+    return os.path.join(cache_dir(), f"{name}-{_cache_key(name, scale, seed, kw)}.pkl")
+
+
+def _cache_enabled() -> bool:
+    return os.environ.get("REPRO_SCENARIO_CACHE", "1") != "0"
+
+
 def generate(
-    name: str, *, scale: float = 1.0, seed: int = 0, **kw
+    name: str,
+    *,
+    scale: float = 1.0,
+    seed: int = 0,
+    cache: Optional[bool] = None,
+    **kw,
 ) -> ScenarioBundle:
-    """Instantiate a registered scenario at ``scale``."""
+    """Instantiate a registered scenario at ``scale``.
+
+    ``cache=None`` applies the policy: reuse/write the per-machine disk
+    cache (keyed by scenario name + params + seed) for bundles with at
+    least :data:`CACHE_MIN_EDGES` edges, unless ``REPRO_SCENARIO_CACHE=0``.
+    ``cache=False`` bypasses it entirely (the CLIs' ``--no-cache``);
+    ``cache=True`` forces a write regardless of size.
+    """
     if scale <= 0:
         raise ValueError(f"scale must be > 0, got {scale}")
-    return get_scenario(name).fn(scale=scale, seed=seed, **kw)
+    use_cache = _cache_enabled() if cache is None else cache
+    path = cache_path(name, scale, seed, kw) if use_cache else None
+    if path is not None and os.path.exists(path):
+        try:
+            with open(path, "rb") as f:
+                bundle = pickle.load(f)
+            if isinstance(bundle, ScenarioBundle) and bundle.name == name:
+                return bundle
+        except Exception:
+            # a torn/stale entry must never break generation — fall through
+            pass
+    bundle = get_scenario(name).fn(scale=scale, seed=seed, **kw)
+    if path is not None and (
+        cache is True or bundle.network.num_edges >= CACHE_MIN_EDGES
+    ):
+        _atomic_pickle(bundle, path)
+    return bundle
+
+
+def _atomic_pickle(bundle: ScenarioBundle, path: str) -> None:
+    """Write-then-rename so concurrent generators never read a torn file."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            pickle.dump(bundle, f, protocol=pickle.HIGHEST_PROTOCOL)
+        os.replace(tmp, path)
+    except Exception:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
 
 
 def scaled_sizes(

@@ -166,13 +166,15 @@ def backend_solver_fn(
     backend: str = "auto",
     *,
     lp: Optional[LPConfig] = None,
+    engine=None,
     **engine_kw,
 ):
     """A ``cross_validate``-compatible solver over a registry backend.
 
     Seeds every node of the pair's source type and returns the
     ``(n_i, n_j)`` predicted score block — the full-matrix protocol the
-    small scenarios use for k-fold CV.
+    small scenarios use for k-fold CV.  Pass a prebuilt ``engine`` to
+    reuse one instance across every fold (the Session API does).
     """
     from repro.engine import make_engine
 
@@ -180,9 +182,11 @@ def backend_solver_fn(
     cfg = lp or default_lp_config()
 
     def solver(masked_net: HeteroNetwork) -> np.ndarray:
-        engine = make_engine(
-            backend, cfg, num_nodes=masked_net.num_nodes, **engine_kw
-        )
+        nonlocal engine
+        if engine is None:
+            engine = make_engine(
+                backend, cfg, num_nodes=masked_net.num_nodes, **engine_kw
+            )
         off_i, off_j = masked_net.offsets[i], masked_net.offsets[j]
         n_i, n_j = masked_net.sizes[i], masked_net.sizes[j]
         Y = seeds_for_nodes(
@@ -202,6 +206,7 @@ def scenario_cross_validate(
     k: int = 5,
     seed: int = 0,
     lp: Optional[LPConfig] = None,
+    engine=None,
 ) -> List[FoldResult]:
     """The Table 2 k-fold protocol against the scenario's planted truth."""
     pair = bundle.eval_pair if pair is None else (min(pair), max(pair))
@@ -209,7 +214,7 @@ def scenario_cross_validate(
     return cross_validate(
         bundle.network,
         pair,
-        backend_solver_fn(bundle, pair, backend, lp=lp),
+        backend_solver_fn(bundle, pair, backend, lp=lp, engine=engine),
         k=k,
         seed=seed,
         positives=positives,

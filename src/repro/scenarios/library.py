@@ -94,6 +94,28 @@ def bio_tri(scale: float = 1.0, seed: int = 0, **kw) -> ScenarioBundle:
 
 
 @register_scenario(
+    "bipartite",
+    description="2-type net, one association pair (smallest schema)",
+    tags=("bipartite", "homophilic"),
+)
+def bipartite(scale: float = 1.0, seed: int = 0, **kw) -> ScenarioBundle:
+    """The minimal heterogeneous schema the generators support: two node
+    types joined by a single association block — e.g. plain drug–target
+    prediction with per-type similarity but no third information source.
+    Exercises the T=2 edge of every protocol (hetero_scale = 1/(T−1) = 1,
+    the strictly-literal paper update)."""
+    spec = KPartiteSpec(
+        sizes=scaled_sizes((160, 110), scale),
+        pairs=((0, 1),),
+        n_clusters=8,
+        type_names=("drug", "target"),
+        seed=seed,
+        **kw,
+    )
+    return _bundle_from_planted("bipartite", planted_kpartite(spec), (0, 1))
+
+
+@register_scenario(
     "kpartite5",
     description="5-type mechanism net on a non-complete pair schema",
     tags=("kpartite", "homophilic"),

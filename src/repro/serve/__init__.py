@@ -1,8 +1,8 @@
 """Online LP query-serving subsystem (DESIGN.md §9).
 
-The one-shot solvers (``repro.launch.solve``) build a network, solve every
-seed, and exit.  This package turns the same engines into a long-lived
-query service:
+A one-shot solve (a RunSpec without a ``serve`` section) builds a
+network, solves every seed, and exits.  This package turns the same
+engines into a long-lived query service:
 
 * :class:`~repro.serve.scheduler.MicroBatcher` — coalesces pending queries
   into one batched solve per tick (bounded queue = backpressure).
@@ -15,6 +15,7 @@ query service:
 """
 from repro.serve.cache import CacheStats, ColumnCache, NetworkState
 from repro.serve.engine import LPServeEngine, ServeConfig
+from repro.serve.replay import play_zipf, replay_trace
 from repro.serve.scheduler import MicroBatcher, SchedulerStats
 from repro.serve.types import QueryResult, QuerySpec
 
@@ -28,4 +29,6 @@ __all__ = [
     "QuerySpec",
     "SchedulerStats",
     "ServeConfig",
+    "play_zipf",
+    "replay_trace",
 ]

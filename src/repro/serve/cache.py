@@ -51,11 +51,21 @@ class NetworkState:
     sizes: List[int]
 
     @classmethod
-    def from_network(cls, net: HeteroNetwork, version: int) -> "NetworkState":
+    def from_network(
+        cls, net: HeteroNetwork, version: int, norm=None
+    ) -> "NetworkState":
+        """``norm`` (when the caller already normalized ``net``) keeps the
+        normalized-network identity shared — engine ``prepare()`` caches
+        are keyed on it (DESIGN.md §11/§13)."""
+        if norm is not None and norm.num_nodes != net.num_nodes:
+            raise ValueError(
+                f"norm has {norm.num_nodes} nodes, network has "
+                f"{net.num_nodes} — not a view of this network"
+            )
         return cls(
             version=version,
             net=net,
-            norm=net.normalize(),
+            norm=net.normalize() if norm is None else norm,
             type_of=net.type_of_node(),
             offsets=net.offsets,
             sizes=net.sizes,

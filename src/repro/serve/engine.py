@@ -114,14 +114,39 @@ class ServeConfig:
 class LPServeEngine:
     """Query front-end over a (mutable, versioned) heterogeneous network."""
 
-    def __init__(self, net: HeteroNetwork, config: ServeConfig = ServeConfig()):
+    def __init__(
+        self,
+        net: HeteroNetwork,
+        config: ServeConfig = ServeConfig(),
+        *,
+        engine=None,
+        norm=None,
+    ):
+        """``engine``/``norm`` let a :class:`repro.api.session.Session`
+        inject its already-prepared LP engine and normalized view, so the
+        serve path reuses the operator assembled for the solve stage
+        instead of re-preparing per entry point (DESIGN.md §13)."""
         self.config = config
-        self._state = NetworkState.from_network(net, version=0)
+        self._state = NetworkState.from_network(net, version=0, norm=norm)
         backend = resolve_backend(
             config.resolved_engine(), num_nodes=net.num_nodes,
             config=config.lp,
         )
-        self._engine = make_engine(backend, config.lp)
+        if engine is not None:
+            if engine.name != backend:
+                raise ValueError(
+                    f"injected engine backend {engine.name!r} conflicts "
+                    f"with ServeConfig's resolved engine {backend!r}"
+                )
+            if engine.config != config.lp:
+                raise ValueError(
+                    "injected engine's LPConfig differs from "
+                    "ServeConfig.lp — serving would answer from different "
+                    "math than the engine was prepared with"
+                )
+            self._engine = engine
+        else:
+            self._engine = make_engine(backend, config.lp)
         self.columns = ColumnCache(config.cache_columns)
         self.batcher = MicroBatcher(
             self._solve_batch,

@@ -1,0 +1,235 @@
+"""RunSpec tree: strict validation + lossless JSON round-trip.
+
+Import-light on purpose — these tests exercise ``repro.api.spec`` without
+touching jax, mirroring the guarantee that specs can be parsed and
+validated anywhere.
+"""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.api.spec import (
+    BenchSpec,
+    EvalSpec,
+    NetworkSpec,
+    RunSpec,
+    ServeSpec,
+    SolveSpec,
+    SpecError,
+)
+
+
+def full_spec() -> RunSpec:
+    return RunSpec(
+        network=NetworkSpec(
+            kind="scenario",
+            name="streaming",
+            scale=0.5,
+            seed=3,
+            params={"rate_qps": 25.0},
+        ),
+        solve=SolveSpec(
+            alg="dhlp2",
+            alpha=0.4,
+            sigma=1e-4,
+            seed_mode="fixed",
+            backend="sparse",
+            momentum=0.1,
+            top_k=7,
+            entity=2,
+            rank_pair=(0, 2),
+        ),
+        eval=EvalSpec(protocol="recovery", holdout_frac=0.2, max_entities=8),
+        serve=ServeSpec(trace="bursty", rate_qps=20.0, horizon_s=1.5),
+        bench=BenchSpec(suites=("lp_matrix",), fast=True, label="t"),
+        run_id="full-test",
+    )
+
+
+# ----------------------------------------------------------------- round trip
+def test_json_round_trip_equality():
+    spec = full_spec()
+    assert RunSpec.from_json(spec.to_json()) == spec
+
+
+def test_dict_round_trip_equality():
+    spec = full_spec()
+    assert RunSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_round_trip_through_actual_json_types():
+    # tuples become lists in JSON; from_dict must canonicalize back
+    blob = json.loads(full_spec().to_json())
+    assert isinstance(blob["solve"]["rank_pair"], list)
+    assert RunSpec.from_dict(blob) == full_spec()
+
+
+def test_minimal_spec_round_trip():
+    spec = RunSpec.from_dict({"network": {"kind": "drugnet"}})
+    assert RunSpec.from_json(spec.to_json()) == spec
+    assert spec.sections() == ("solve",)
+
+
+def test_invalid_json_is_spec_error():
+    with pytest.raises(SpecError, match="invalid JSON"):
+        RunSpec.from_json("{not json")
+
+
+# ------------------------------------------------------------- unknown keys
+def test_unknown_top_level_key_rejected():
+    with pytest.raises(SpecError, match="unknown key"):
+        RunSpec.from_dict({"network": {"kind": "drugnet"}, "sovle": {}})
+
+
+def test_unknown_network_key_rejected():
+    with pytest.raises(SpecError, match="network.*unknown key.*bogus"):
+        RunSpec.from_dict({"network": {"kind": "drugnet", "bogus": 1}})
+
+
+def test_unknown_serve_key_rejected():
+    with pytest.raises(SpecError, match="serve.*unknown key"):
+        RunSpec.from_dict(
+            {"network": {"kind": "drugnet"}, "serve": {"max_batchx": 4}}
+        )
+
+
+def test_network_section_required():
+    with pytest.raises(SpecError, match="network.*required"):
+        RunSpec.from_dict({})
+
+
+# ------------------------------------------------------- conditional fields
+def test_scenario_requires_name():
+    with pytest.raises(SpecError, match="requires a name"):
+        NetworkSpec(kind="scenario")
+
+
+def test_drugnet_rejects_name_and_path():
+    with pytest.raises(SpecError, match="name.*conflicts"):
+        NetworkSpec(kind="drugnet", name="bio_tri")
+    with pytest.raises(SpecError, match="path"):
+        NetworkSpec(kind="drugnet", path="x.npz")
+
+
+def test_file_requires_path_rejects_params_and_scale():
+    with pytest.raises(SpecError, match="requires a path"):
+        NetworkSpec(kind="file")
+    with pytest.raises(SpecError, match="params"):
+        NetworkSpec(kind="file", path="x.npz", params={"a": 1})
+    with pytest.raises(SpecError, match="scale"):
+        NetworkSpec(kind="file", path="x.npz", scale=0.5)
+
+
+def test_cache_only_for_scenarios():
+    with pytest.raises(SpecError, match="cache"):
+        NetworkSpec(kind="drugnet", cache=True)
+
+
+def test_bad_enums_rejected():
+    with pytest.raises(SpecError, match="alg"):
+        SolveSpec(alg="dhlp3")
+    with pytest.raises(SpecError, match="mode"):
+        SolveSpec(mode="stream")
+    with pytest.raises(SpecError, match="seed_mode"):
+        SolveSpec(seed_mode="locked")
+    with pytest.raises(SpecError, match="protocol"):
+        EvalSpec(protocol="loocv")
+    with pytest.raises(SpecError, match="kind"):
+        NetworkSpec(kind="random")
+
+
+def test_range_validation():
+    with pytest.raises(SpecError, match="alpha"):
+        SolveSpec(alpha=1.5)
+    with pytest.raises(SpecError, match="sigma"):
+        SolveSpec(sigma=0.0)
+    with pytest.raises(SpecError, match="holdout_frac"):
+        EvalSpec(holdout_frac=1.0)
+    with pytest.raises(SpecError, match="folds"):
+        EvalSpec(folds=1)
+    with pytest.raises(SpecError, match="zipf"):
+        ServeSpec(zipf=1.0)
+    with pytest.raises(SpecError, match="scale"):
+        NetworkSpec(kind="scenario", name="bio_tri", scale=0.0)
+
+
+def test_pair_shape_validation():
+    with pytest.raises(SpecError, match="rank_pair"):
+        SolveSpec(rank_pair=(0, 1, 2))
+    with pytest.raises(SpecError, match="pair"):
+        EvalSpec(pair=[0])
+
+
+# ------------------------------------------------------- conflicting fields
+def test_devices_require_sharded_backend():
+    with pytest.raises(SpecError, match="devices.*sharded"):
+        SolveSpec(backend="dense", devices=2)
+    assert SolveSpec(backend="sharded", devices=2).devices == 2
+
+
+def test_serve_engine_vs_solve_backend_conflict():
+    net = NetworkSpec(kind="drugnet")
+    with pytest.raises(SpecError, match="conflicts"):
+        RunSpec(
+            network=net,
+            solve=SolveSpec(backend="dense"),
+            serve=ServeSpec(engine="sparse"),
+        )
+    # agreeing keys and one-sided keys are fine
+    RunSpec(
+        network=net,
+        solve=SolveSpec(backend="sparse"),
+        serve=ServeSpec(engine="sparse"),
+    )
+    RunSpec(network=net, serve=ServeSpec(engine="sparse"))
+
+
+def test_serve_rejects_drift_seed_mode():
+    with pytest.raises(SpecError, match="fixed"):
+        RunSpec(
+            network=NetworkSpec(kind="drugnet"),
+            solve=SolveSpec(seed_mode="drift"),
+            serve=ServeSpec(),
+        )
+
+
+def test_eval_on_file_network_rejected():
+    with pytest.raises(SpecError, match="ground truth"):
+        RunSpec(
+            network=NetworkSpec(kind="file", path="net.npz"),
+            eval=EvalSpec(),
+        )
+
+
+# ---------------------------------------------------------------- identity
+def test_run_id_validation():
+    with pytest.raises(SpecError, match="filesystem-safe"):
+        RunSpec(network=NetworkSpec(kind="drugnet"), run_id="../etc")
+
+
+def test_resolved_run_id_is_deterministic_and_content_addressed():
+    a = RunSpec(network=NetworkSpec(kind="drugnet"))
+    b = RunSpec(network=NetworkSpec(kind="drugnet"))
+    c = RunSpec(network=NetworkSpec(kind="drugnet", seed=1))
+    assert a.resolved_run_id() == b.resolved_run_id()
+    assert a.resolved_run_id() != c.resolved_run_id()
+    assert full_spec().resolved_run_id() == "full-test"
+
+
+def test_sections_logic():
+    net = NetworkSpec(kind="drugnet")
+    assert RunSpec(network=net).sections() == ("solve",)
+    assert RunSpec(network=net, bench=BenchSpec()).sections() == ("bench",)
+    assert RunSpec(network=net, solve=SolveSpec(), bench=BenchSpec()).sections() == (
+        "solve",
+        "bench",
+    )
+    assert full_spec().sections() == ("solve", "eval", "serve", "bench")
+
+
+def test_bench_label_resolution():
+    assert BenchSpec().resolved_label() == "ci"
+    assert BenchSpec(fast=False).resolved_label() == "full"
+    assert BenchSpec(label="x").resolved_label() == "x"
