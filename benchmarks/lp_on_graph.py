@@ -28,9 +28,9 @@ def lp_classify(data, sigma=1e-4, alpha=0.9, backend="dense"):
     y = np.zeros((n, data.n_classes))
     for c in range(data.n_classes):
         y[(data.labels == c) & data.train_mask, c] = 1.0
-    # sparse cells run momentum-free so the CSR-vs-COO timing comparison
-    # is layout-vs-layout at identical round counts (COO has no momentum
-    # loop); dense keeps the accelerated configuration
+    # the sparse cell runs momentum-free so its timing is comparable to
+    # historical layout-vs-layout baselines at identical round counts;
+    # dense keeps the accelerated configuration
     cfg = LPConfig(
         alg="dhlp2", seed_mode="fixed", alpha=alpha, sigma=sigma,
         momentum=0.2 if backend == "dense" else 0.0,
@@ -86,14 +86,12 @@ def run(n_nodes=400, n_edges=2400, n_classes=5, d_feat=16,
                                    homophily=0.85, train_frac=0.1, seed=seed)
     test = ~data.train_mask
     rows = []
-    # dense + both sparse layouts: the blocked-CSR path must hold the COO
-    # path's accuracy AND not be slower — the layouts are A/B'd on every
-    # pass (timed on the second call so jit compilation is excluded; the
-    # dense cell keeps its historical compile-inclusive timing)
+    # dense + blocked-CSR (sparse cells timed on the second call so jit
+    # compilation is excluded; the dense cell keeps its historical
+    # compile-inclusive timing)
     lp_cells = [
         ("dhlp2_lp", "dense"),
         ("dhlp2_lp_csr", "sparse"),
-        ("dhlp2_lp_coo", "sparse_coo"),
     ]
     for method, backend in lp_cells:
         if backend != "dense":

@@ -108,13 +108,26 @@ def analyze(rec: Dict[str, Any]) -> Optional[Dict[str, Any]]:
 
 
 def load(path: str) -> List[Dict[str, Any]]:
+    """Read a dry-run census file in either format.
+
+    Accepts the legacy bare-record JSONL and the telemetry artifact
+    format (``telemetry/dryrun.jsonl``, DESIGN.md §14.1) — there a
+    leading ``meta`` line is skipped and each ``event`` line's ``attrs``
+    is the census record.
+    """
     rows = []
     with open(path) as f:
         for line in f:
             try:
-                rows.append(json.loads(line))
+                rec = json.loads(line)
             except json.JSONDecodeError:
                 continue
+            kind = rec.get("kind") if isinstance(rec, dict) else None
+            if kind == "meta":
+                continue
+            if kind == "event":
+                rec = rec.get("attrs", {})
+            rows.append(rec)
     return rows
 
 

@@ -37,9 +37,9 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.api import NetworkSpec, RunSpec, ServeSpec, Session, SolveSpec
+from repro.api import NetworkSpec, ObsSpec, RunSpec, ServeSpec, Session, SolveSpec
 from repro.bench import BenchRecord, register_suite, stats_from_samples
-from repro.bench.report import legacy_csv_line
+from repro.bench.report import legacy_csv_line, telemetry_digest
 from repro.core import GraphDelta
 from repro.serve import QuerySpec
 from repro.serve.replay import replay_trace
@@ -70,7 +70,7 @@ def _phase(engine, entities, top_k) -> Dict:
     return out
 
 
-def _session(args, network: NetworkSpec) -> Session:
+def _session(args, network: NetworkSpec, obs_level: str = "off") -> Session:
     """One resolved spec per bench invocation: the serve engines below
     share the session's prepared LP engine (DESIGN.md §13)."""
     return Session(
@@ -83,6 +83,7 @@ def _session(args, network: NetworkSpec) -> Session:
                 backend=args.engine,
             ),
             serve=ServeSpec(max_batch=args.max_batch, max_wait_ms=2.0),
+            obs=ObsSpec(level=obs_level) if obs_level != "off" else None,
         )
     )
 
@@ -218,6 +219,69 @@ def run_trace(args) -> Dict[str, Dict]:
     return report
 
 
+def run_obs_overhead(args) -> Dict:
+    """A/B the batched burst with telemetry off vs metrics.
+
+    The acceptance bar for the obs layer (DESIGN.md §14.2): metrics-level
+    recording must cost <= 5% replay QPS.  Both bursts run the identical
+    query stream through freshly-built engines of the same spec, so the
+    only difference is the telemetry sink.  A discarded first pass warms
+    every process-wide cache (jit/compile), and each level takes its
+    best-of-``repeats`` wall time so OS-scheduler noise on millisecond
+    bursts doesn't masquerade as recording overhead.
+    """
+    repeats = getattr(args, "obs_repeats", 5)
+
+    def burst(session) -> Dict:
+        # fresh serve engine per repeat: every pass starts from an empty
+        # column cache, so both levels do identical work
+        best: Dict = {}
+        for _ in range(repeats):
+            engine = session.serve_engine()
+            rng = np.random.default_rng(args.seed)
+            ents = rng.permutation(session.network.sizes[0])[: 2 * args.queries]
+            engine.query(QuerySpec(entity=int(ents[-1]), target_type=2,
+                                   top_k=args.top_k))
+            # enqueue everything, then drain synchronously: batching is
+            # deterministic (ceil(len/max_batch) ticks at either level),
+            # so the wall-time delta isolates the recording cost
+            futs = [
+                engine.submit(QuerySpec(entity=int(e), target_type=2,
+                                        top_k=args.top_k))
+                for e in ents
+            ]
+            t0 = time.monotonic()
+            engine.batcher.drain()
+            results = [f.result(timeout=600) for f in futs]
+            wall = time.monotonic() - t0
+            if not best or wall < best["wall_s"]:
+                best = {
+                    "queries": len(results),
+                    "wall_s": wall,
+                    "qps": len(results) / wall,
+                    "latencies": [r.latency_s for r in results],
+                }
+        return best
+
+    net_spec = NetworkSpec(
+        kind="drugnet",
+        seed=args.seed,
+        params={
+            "n_drug": args.drugs,
+            "n_disease": args.diseases,
+            "n_target": args.targets,
+        },
+    )
+    out: Dict = {}
+    burst(_session(args, net_spec))  # discarded: compile/warm everything
+    out["off"] = burst(_session(args, net_spec))
+    metrics_session = _session(args, net_spec, obs_level="metrics")
+    out["metrics"] = burst(metrics_session)
+    out["telemetry"] = metrics_session.telemetry
+    out["overhead_frac"] = 1.0 - out["metrics"]["qps"] / out["off"]["qps"]
+    return out
+
+
 @register_suite("serve",
                 description="online query engine QPS/latency phases")
 def records(fast: bool = True) -> List[BenchRecord]:
@@ -246,6 +310,22 @@ def records(fast: bool = True) -> List[BenchRecord]:
             stats=stats_from_samples(r["latencies"]).to_dict(),
             derived=derived,
         ))
+    # obs-overhead A/B: telemetry must stay cheap (non-strict — wall-clock
+    # noise on small bursts — but tracked across the trajectory)
+    ab = run_obs_overhead(args)
+    out.append(BenchRecord(
+        suite="serve", name="obs_overhead", backend=args.engine,
+        params={"drugs": args.drugs, "diseases": args.diseases,
+                "targets": args.targets,
+                "queries": ab["off"]["queries"], "top_k": args.top_k},
+        stats=stats_from_samples(ab["metrics"]["latencies"]).to_dict(),
+        derived={
+            "qps_off": ab["off"]["qps"],
+            "qps_metrics": ab["metrics"]["qps"],
+            "overhead_frac": ab["overhead_frac"],
+        },
+        telemetry=telemetry_digest(ab["telemetry"]),
+    ))
     return out
 
 
@@ -258,7 +338,7 @@ def main() -> None:
     ap.add_argument("--alg", choices=["dhlp1", "dhlp2"], default="dhlp2")
     ap.add_argument("--sigma", type=float, default=1e-4)
     ap.add_argument("--engine",
-                    choices=["dense", "sparse", "sparse_coo", "kernel",
+                    choices=["dense", "sparse", "kernel",
                              "sharded", "auto"],
                     default="dense")
     ap.add_argument("--drugs", type=int, default=223)

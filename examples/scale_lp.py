@@ -1,5 +1,4 @@
-"""Scalability demo: sequential sweep vs batched engine vs sparse engine,
-and the convergence/collective trade of bounded staleness.
+"""Scalability demo: sequential sweep vs batched engine vs sparse engine.
 
     PYTHONPATH=src python examples/scale_lp.py [--edges 100000]
 """
@@ -9,7 +8,6 @@ import time
 import numpy as np
 
 from repro.core import HeteroLP, LPConfig
-from repro.core.sparse import SparseHeteroLP
 from repro.data.drugnet import make_scaling_network
 
 
@@ -45,17 +43,8 @@ def main() -> None:
     print(f"batched multi-source:      {t_bat:.2f}s  "
           f"(gain {t_seq/max(t_bat,1e-9):.1f}x)")
 
-    # sparse COO engine (the legacy scalable representation)
-    sp = SparseHeteroLP(LPConfig(sigma=args.sigma))
-    sp.run(norm, seeds=seeds[:, :2])
-    t0 = time.time()
-    res = sp.run(norm, seeds=seeds)
-    t_coo = time.time() - t0
-    print(f"sparse COO engine:         {t_coo:.2f}s  "
-          f"(iters {res.outer_iters})")
-
     # blocked-CSR engine via the backend registry (DESIGN.md §11) — the
-    # default scalability path that replaced COO
+    # scalable sparse representation
     from repro.engine import make_engine
 
     csr = make_engine("sparse", LPConfig(sigma=args.sigma))
@@ -64,8 +53,8 @@ def main() -> None:
     res = csr.run(norm, seeds=seeds)
     t_csr = time.time() - t0
     print(f"blocked-CSR engine:        {t_csr:.2f}s  "
-          f"(iters {res.outer_iters}, gain vs COO "
-          f"{t_coo/max(t_csr,1e-9):.1f}x)")
+          f"(iters {res.outer_iters}, gain vs batched dense "
+          f"{t_bat/max(t_csr,1e-9):.1f}x)")
 
 
 if __name__ == "__main__":

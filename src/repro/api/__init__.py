@@ -16,6 +16,7 @@ driver is a thin CLI over exactly this module.
 from repro.api.artifacts import (
     Artifact,
     BenchArtifact,
+    DryrunArtifact,
     EvalArtifact,
     ServeArtifact,
     SolveArtifact,
@@ -24,8 +25,10 @@ from repro.api.artifacts import (
 from repro.api.session import Session
 from repro.api.spec import (
     BenchSpec,
+    DryrunSpec,
     EvalSpec,
     NetworkSpec,
+    ObsSpec,
     RunSpec,
     ServeSpec,
     SolveSpec,
@@ -36,9 +39,12 @@ __all__ = [
     "Artifact",
     "BenchArtifact",
     "BenchSpec",
+    "DryrunArtifact",
+    "DryrunSpec",
     "EvalArtifact",
     "EvalSpec",
     "NetworkSpec",
+    "ObsSpec",
     "RunSpec",
     "ServeArtifact",
     "ServeSpec",

@@ -4,9 +4,12 @@ Each :class:`~repro.api.session.Session` stage returns one artifact:
 ``solve()`` → :class:`SolveArtifact` (rankings + solver outputs),
 ``evaluate()`` → :class:`EvalArtifact` (protocol metrics), ``serve()`` →
 :class:`ServeArtifact` (workload report), ``bench()`` →
-:class:`BenchArtifact` (BENCH record summary).  Artifacts carry their
-heavy payloads (score matrices, LPOutputs) in memory and write a
-JSON summary plus ``.npz`` arrays via :meth:`write`.
+:class:`BenchArtifact` (BENCH record summary), ``dryrun()`` →
+:class:`DryrunArtifact` (per-cell compile census, emitted in the
+telemetry event format so ``benchmarks/roofline.py`` and ``repro obs``
+read the same artifact).  Artifacts carry their heavy payloads (score
+matrices, LPOutputs) in memory and write a JSON summary plus ``.npz``
+arrays via :meth:`write`.
 """
 
 from __future__ import annotations
@@ -163,6 +166,75 @@ class ServeArtifact(Artifact):
             }
         )
         return out
+
+
+@dataclasses.dataclass
+class DryrunArtifact(Artifact):
+    """A compile-sweep census: one record per (arch × shape × mesh) cell.
+
+    ``write`` emits ``dryrun.json`` (status roll-up) plus
+    ``telemetry/dryrun.jsonl`` — the cells as ``repro.obs`` event lines
+    (meta line first) so roofline analysis and ``repro obs --validate``
+    consume the census through one schema.  The JSONL is written whether
+    or not the run's telemetry level is on: the census IS the stage's
+    product, not an observation of it.
+    """
+
+    kind: ClassVar[str] = "dryrun"
+    mesh: str = "single"
+    #: raw ``run_cell`` records, in sweep order
+    cells: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    #: seconds-from-stage-start offset per cell (parallel to ``cells``)
+    offsets: List[float] = dataclasses.field(default_factory=list)
+
+    def summary(self) -> Dict[str, Any]:
+        statuses: Dict[str, int] = {}
+        for rec in self.cells:
+            status = rec.get("status", "?")
+            statuses[status] = statuses.get(status, 0) + 1
+        out = super().summary()
+        out.update(
+            {
+                "mesh": self.mesh,
+                "cells": len(self.cells),
+                "statuses": statuses,
+                "failures": [
+                    {
+                        "arch": rec.get("arch"),
+                        "shape": rec.get("shape"),
+                        "mesh": rec.get("mesh"),
+                        "error": rec.get("error"),
+                    }
+                    for rec in self.cells
+                    if rec.get("status") == "error"
+                ],
+            }
+        )
+        return out
+
+    def write(self, run_dir: str) -> List[str]:
+        from repro.obs.telemetry import SCHEMA
+
+        paths = super().write(run_dir)
+        tel_dir = os.path.join(run_dir, "telemetry")
+        os.makedirs(tel_dir, exist_ok=True)
+        path = os.path.join(tel_dir, "dryrun.jsonl")
+        with open(path, "w") as f:
+            meta = {"kind": "meta", "schema": SCHEMA, "run_id": self.run_id}
+            f.write(json.dumps(jsonable(meta), sort_keys=True) + "\n")
+            for i, rec in enumerate(self.cells):
+                t = self.offsets[i] if i < len(self.offsets) else float(i)
+                line = {
+                    "kind": "event",
+                    "id": i,
+                    "parent": None,
+                    "name": "dryrun.cell",
+                    "t": t,
+                    "attrs": rec,
+                }
+                f.write(json.dumps(jsonable(line), sort_keys=True) + "\n")
+        paths.append(path)
+        return paths
 
 
 @dataclasses.dataclass

@@ -28,12 +28,13 @@ import numpy as np
 from repro.api.artifacts import (
     Artifact,
     BenchArtifact,
+    DryrunArtifact,
     EvalArtifact,
     ServeArtifact,
     SolveArtifact,
     _write_json,
 )
-from repro.api.spec import EvalSpec, RunSpec, ServeSpec, SpecError
+from repro.api.spec import DryrunSpec, EvalSpec, RunSpec, ServeSpec, SpecError
 
 _UNSET = object()
 
@@ -59,6 +60,7 @@ class Session:
         self._backend: Optional[str] = None
         self._engine: Any = None
         self._eval_engine: Any = None
+        self._telemetry: Any = None
 
     # ------------------------------------------------------------- network
     @property
@@ -198,6 +200,21 @@ class Session:
             )
         return self._eval_engine
 
+    @property
+    def telemetry(self):
+        """The session-wide Telemetry (level from ``spec.obs``, else off).
+
+        Always a live object: stage code records unconditionally and the
+        off level suppresses at the sink (DESIGN.md §14.2's overhead
+        policy), so there is exactly one instrumentation code path.
+        """
+        if self._telemetry is None:
+            from repro.obs import Telemetry
+
+            level = self.spec.obs.level if self.spec.obs is not None else "off"
+            self._telemetry = Telemetry(level, run_id=self.run_id)
+        return self._telemetry
+
     def _network_desc(self) -> Dict[str, Any]:
         net = self.network
         ns = self.spec.network
@@ -223,8 +240,20 @@ class Session:
         from repro.core.ranking import extract_outputs
 
         solve = self.spec.resolved_solve()
+        tel = self.telemetry
         t0 = time.perf_counter()
-        res = self.engine.run(self.norm)
+        if tel.enabled:
+            from repro.obs.solve import observed_solve, supports_observed
+
+            if supports_observed(self.engine):
+                # host-driven round loop: per-superstep residual/active
+                # series for `repro obs` (same fixed point, DESIGN.md §14.3)
+                res = observed_solve(self.engine, self.norm, telemetry=tel)
+            else:
+                res = self.engine.run(self.norm)
+                tel.count("solve.supersteps", int(res.supersteps))
+        else:
+            res = self.engine.run(self.norm)
         seconds = time.perf_counter() - t0
         outputs = extract_outputs(res.F, self.norm)
         pair = self._rank_pair(solve.rank_pair)
@@ -324,7 +353,13 @@ class Session:
             max_wait_s=sv.max_wait_ms / 1e3,
             queue_depth=sv.queue_depth,
         )
-        return LPServeEngine(self.network, cfg, engine=self.engine, norm=self.norm)
+        return LPServeEngine(
+            self.network,
+            cfg,
+            engine=self.engine,
+            norm=self.norm,
+            telemetry=self.telemetry,
+        )
 
     def serve(self) -> ServeArtifact:
         from repro.serve.replay import play_zipf, replay_trace
@@ -359,19 +394,34 @@ class Session:
                 self.bundle.deltas if sv.apply_deltas else (),
                 top_k=sv.top_k,
                 time_scale=sv.time_scale,
+                telemetry=self.telemetry,
             )
             mode = "trace"
         else:
             pair = self._rank_pair(None)
+            src = sv.source_type if sv.source_type is not None else pair[0]
+            dst = sv.target_type if sv.target_type is not None else pair[1]
+            for knob, t in (("source_type", src), ("target_type", dst)):
+                if t >= self.network.num_types:
+                    raise SpecError(
+                        f"serve.{knob}={t} out of range: the network has "
+                        f"{self.network.num_types} node types"
+                    )
+            if src == dst:
+                raise SpecError(
+                    f"serve.source_type == serve.target_type == {src}; "
+                    "the zipf workload ranks a cross-type interaction"
+                )
             report = play_zipf(
                 engine,
-                source_type=pair[0],
-                target_type=pair[1],
+                source_type=src,
+                target_type=dst,
                 requests=sv.requests,
                 zipf=sv.zipf,
                 deltas=sv.deltas,
                 top_k=sv.top_k,
                 seed=self.spec.network.seed,
+                telemetry=self.telemetry,
             )
             mode = "zipf"
         seconds = time.perf_counter() - t0
@@ -412,6 +462,54 @@ class Session:
             report_paths=outcome.paths,
         )
 
+    # -------------------------------------------------------------- dryrun
+    def dryrun(self) -> DryrunArtifact:
+        """Compile-sweep the configured (arch × shape × mesh) cells.
+
+        The census lands in the telemetry artifact format (see
+        :class:`DryrunArtifact`); ``benchmarks/roofline.py`` reads it.
+        """
+        from repro.configs import all_cells, get_arch
+
+        dr = self.spec.dryrun if self.spec.dryrun is not None else DryrunSpec()
+        if dr.archs:
+            cells = []
+            for arch in dr.archs:
+                shapes = dr.shapes or tuple(get_arch(arch).shapes)
+                cells.extend((arch, s) for s in shapes)
+        else:
+            cells = all_cells(include_extra=dr.include_extra)
+        meshes = ["single", "multi"] if dr.mesh == "both" else [dr.mesh]
+
+        # imported lazily: the module pins XLA_FLAGS for the 512-device
+        # host mesh, which only this stage wants
+        from repro.launch.dryrun import run_cell
+
+        tel = self.telemetry
+        t0 = time.perf_counter()
+        recs: List[Dict[str, Any]] = []
+        offsets: List[float] = []
+        for arch, shape in cells:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape, mesh_kind)
+                recs.append(rec)
+                offsets.append(time.perf_counter() - t0)
+                tel.event(
+                    "dryrun.cell",
+                    arch=arch,
+                    shape=shape,
+                    mesh=mesh_kind,
+                    status=rec.get("status"),
+                    compile_s=rec.get("compile_s"),
+                )
+        return DryrunArtifact(
+            run_id=self.run_id,
+            seconds=time.perf_counter() - t0,
+            mesh=dr.mesh,
+            cells=recs,
+            offsets=offsets,
+        )
+
     # ----------------------------------------------------------------- run
     def run(
         self,
@@ -432,6 +530,7 @@ class Session:
             # bench honors the run-level write flag: --no-write must not
             # leave BENCH_<label>.json behind either
             "bench": lambda: self.bench(write=write),
+            "dryrun": self.dryrun,
         }
         names = list(sections) if sections else list(self.spec.sections())
         unknown = [n for n in names if n not in stages]
@@ -440,11 +539,35 @@ class Session:
         if write:
             os.makedirs(self.run_dir, exist_ok=True)
             _write_json(os.path.join(self.run_dir, "spec.json"), self.spec.to_dict())
+
+        tel = self.telemetry
+        tel_dir = os.path.join(self.run_dir, "telemetry")
+        if tel.profile_enabled:
+            from repro.obs.profiler import install_kernel_hook
+
+            install_kernel_hook(tel)
         artifacts: List[Artifact] = []
-        for name in names:
-            art = stages[name]()
-            artifacts.append(art)
-            if write:
-                for path in art.write(self.run_dir):
-                    echo(f"[{name}] wrote {path}")
+        try:
+            with tel.span("run", self.run_id, sections=list(names)):
+                for name in names:
+                    with tel.span("phase", name):
+                        if name in ("solve", "serve") and tel.profile_enabled:
+                            from repro.obs.profiler import profile_phase
+
+                            with profile_phase(tel, tel_dir, name):
+                                art = stages[name]()
+                        else:
+                            art = stages[name]()
+                    artifacts.append(art)
+                    if write:
+                        for path in art.write(self.run_dir):
+                            echo(f"[{name}] wrote {path}")
+        finally:
+            if tel.profile_enabled:
+                from repro.obs.profiler import uninstall_kernel_hook
+
+                uninstall_kernel_hook()
+        if write and tel.enabled:
+            for path in tel.flush(tel_dir):
+                echo(f"[obs] wrote {path}")
         return artifacts

@@ -22,7 +22,11 @@ Sections:
   CV against planted truth);
 * :class:`ServeSpec`   — optional online workload (trace replay or
   synthetic zipf) played against the serve stack;
-* :class:`BenchSpec`   — optional registered-suite benchmark pass.
+* :class:`BenchSpec`   — optional registered-suite benchmark pass;
+* :class:`ObsSpec`     — optional telemetry level (off / metrics / trace
+  / profile, DESIGN.md §14);
+* :class:`DryrunSpec`  — optional multi-pod compile sweep whose HLO
+  census lands in the telemetry artifact format.
 """
 
 from __future__ import annotations
@@ -38,6 +42,8 @@ _MODES = ("batched", "sequential")
 _SEED_MODES = (None, "fixed", "drift")
 _NETWORK_KINDS = ("scenario", "drugnet", "file")
 _EVAL_PROTOCOLS = ("recovery", "cv")
+_OBS_LEVELS = ("off", "metrics", "trace", "profile")
+_DRYRUN_MESHES = ("single", "multi", "both")
 _RUN_ID_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
 
 
@@ -265,10 +271,14 @@ class ServeSpec:
 
     engine: Optional[str] = None
     trace: Optional[str] = None
-    # synthetic-workload knobs (trace=None)
+    # synthetic-workload knobs (trace=None); source/target default to the
+    # bundle's eval pair — setting them points the zipf workload at any
+    # other (source, target) type pair
     requests: int = 200
     zipf: float = 1.3
     deltas: int = 0
+    source_type: Optional[int] = None
+    target_type: Optional[int] = None
     # trace-replay knobs
     rate_qps: float = 40.0
     horizon_s: float = 3.0
@@ -295,6 +305,21 @@ class ServeSpec:
         if self.zipf <= 1.0:
             raise SpecError(f"serve.zipf must be > 1, got {self.zipf}")
         _positive(self.deltas, "serve.deltas", strict=False)
+        for knob, value in (
+            ("source_type", self.source_type),
+            ("target_type", self.target_type),
+        ):
+            if value is not None:
+                if not isinstance(value, int) or isinstance(value, bool):
+                    raise SpecError(
+                        f"serve.{knob} must be a node-type index, got {value!r}"
+                    )
+                _positive(value, f"serve.{knob}", strict=False)
+                if self.trace is not None:
+                    raise SpecError(
+                        f"serve.{knob} applies to the zipf workload only "
+                        "(trace replays carry their own query targets)"
+                    )
         _positive(self.rate_qps, "serve.rate_qps")
         _positive(self.horizon_s, "serve.horizon_s")
         _positive(self.time_scale, "serve.time_scale")
@@ -340,20 +365,88 @@ class BenchSpec:
         return self.label or ("ci" if self.fast else "full")
 
 
+@dataclasses.dataclass(frozen=True)
+class ObsSpec:
+    """Telemetry level for the run (DESIGN.md §14).
+
+    ``metrics`` records counters/gauges/histograms + structural spans;
+    ``trace`` adds per-superstep and per-query spans; ``profile`` adds
+    the ``jax.profiler`` capture and kernel timing hooks.  Writing the
+    section at all defaults to ``metrics`` — an explicit ``off`` keeps
+    the spec round-trippable while disabling collection.
+    """
+
+    level: str = "metrics"
+
+    def __post_init__(self) -> None:
+        if self.level not in _OBS_LEVELS:
+            raise SpecError(
+                f"obs.level must be one of {_OBS_LEVELS}, got {self.level!r}"
+            )
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str = "obs") -> "ObsSpec":
+        d = _require_mapping(d, path)
+        _check_keys(cls, d, path)
+        return cls(**dict(d))
+
+
+@dataclasses.dataclass(frozen=True)
+class DryrunSpec:
+    """A multi-pod compile sweep (lower + compile every config cell).
+
+    ``archs=None`` sweeps every assigned (arch × shape) cell; naming
+    ``archs`` restricts the sweep (``shapes`` then applies to each named
+    arch).  The per-cell HLO census is emitted through the telemetry
+    artifact format (``telemetry/dryrun.jsonl``) that
+    ``benchmarks/roofline.py`` consumes.
+    """
+
+    archs: Optional[Tuple[str, ...]] = None
+    shapes: Optional[Tuple[str, ...]] = None
+    mesh: str = "single"
+    include_extra: bool = False
+
+    def __post_init__(self) -> None:
+        if self.mesh not in _DRYRUN_MESHES:
+            raise SpecError(
+                f"dryrun.mesh must be one of {_DRYRUN_MESHES}, got {self.mesh!r}"
+            )
+        for knob, value in (("archs", self.archs), ("shapes", self.shapes)):
+            if value is not None:
+                if not isinstance(value, (list, tuple)) or not all(
+                    isinstance(s, str) and s for s in value
+                ):
+                    raise SpecError(f"dryrun.{knob} must be names, got {value!r}")
+                object.__setattr__(self, knob, tuple(value))
+        if self.shapes is not None and self.archs is None:
+            raise SpecError("dryrun.shapes requires dryrun.archs")
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str = "dryrun") -> "DryrunSpec":
+        d = _require_mapping(d, path)
+        _check_keys(cls, d, path)
+        return cls(**dict(d))
+
+
 # --------------------------------------------------------------------------
 # The composed run
 # --------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class RunSpec:
-    """One declarative job: network × solve × (eval? serve? bench?)."""
+    """One declarative job: network × solve × (eval? serve? bench? …)."""
 
-    network: NetworkSpec
+    #: None is allowed ONLY for a dryrun-only spec — the compile sweep
+    #: exercises model configs, not a propagation network
+    network: Optional[NetworkSpec] = None
     #: None = default solve parameters; the solve STAGE runs when this
     #: section is explicitly present, or when no other stage is configured
     solve: Optional[SolveSpec] = None
     eval: Optional[EvalSpec] = None
     serve: Optional[ServeSpec] = None
     bench: Optional[BenchSpec] = None
+    obs: Optional[ObsSpec] = None
+    dryrun: Optional[DryrunSpec] = None
     run_id: Optional[str] = None  # None = deterministic content-derived id
 
     def __post_init__(self) -> None:
@@ -361,6 +454,11 @@ class RunSpec:
             raise SpecError(
                 f"run_id {self.run_id!r} is not filesystem-safe "
                 "([A-Za-z0-9._-], no leading punctuation)"
+            )
+        if self.network is None and self.sections() != ("dryrun",):
+            raise SpecError(
+                "runspec: a 'network' section is required (only a "
+                "dryrun-only spec runs without one)"
             )
         solve = self.resolved_solve()
         if self.serve is not None:
@@ -390,10 +488,17 @@ class RunSpec:
     def from_dict(cls, d: Any) -> "RunSpec":
         d = _require_mapping(d, "runspec")
         _check_keys(cls, d, "runspec")
-        if "network" not in d:
+        dryrun_only = d.get("dryrun") is not None and not any(
+            d.get(k) is not None for k in ("solve", "eval", "serve", "bench")
+        )
+        if "network" not in d and not dryrun_only:
             raise SpecError("runspec: a 'network' section is required")
         return cls(
-            network=NetworkSpec.from_dict(d["network"]),
+            network=(
+                NetworkSpec.from_dict(d["network"])
+                if d.get("network") is not None
+                else None
+            ),
             solve=(
                 SolveSpec.from_dict(d["solve"])
                 if d.get("solve") is not None
@@ -408,6 +513,12 @@ class RunSpec:
             bench=(
                 BenchSpec.from_dict(d["bench"])
                 if d.get("bench") is not None
+                else None
+            ),
+            obs=(ObsSpec.from_dict(d["obs"]) if d.get("obs") is not None else None),
+            dryrun=(
+                DryrunSpec.from_dict(d["dryrun"])
+                if d.get("dryrun") is not None
                 else None
             ),
             run_id=d.get("run_id"),
@@ -450,6 +561,8 @@ class RunSpec:
         — the same spec always lands in the same ``results/<run_id>/``."""
         if self.run_id:
             return self.run_id
+        if self.network is None:
+            return f"dryrun-{self.content_hash()}"
         solve = self.resolved_solve()
         net = self.network.name or self.network.kind
         backend = solve.backend or "auto"
@@ -460,9 +573,11 @@ class RunSpec:
 
         ``solve`` runs when its section is explicitly present — or when
         nothing else is, so a bare ``{"network": ...}`` spec is a solve.
+        (``obs`` is cross-cutting, not a stage; ``dryrun`` never implies
+        a solve.)
         """
         out = []
-        others = [self.eval, self.serve, self.bench]
+        others = [self.eval, self.serve, self.bench, self.dryrun]
         if self.solve is not None or not any(s is not None for s in others):
             out.append("solve")
         if self.eval is not None:
@@ -471,4 +586,6 @@ class RunSpec:
             out.append("serve")
         if self.bench is not None:
             out.append("bench")
+        if self.dryrun is not None:
+            out.append("dryrun")
         return tuple(out)

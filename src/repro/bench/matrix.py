@@ -43,7 +43,7 @@ class BackendSpec:
     """One column of the matrix; ``kind`` is an engine-registry key."""
 
     name: str
-    kind: str  # dense | sparse | sparse_coo | sharded | kernel
+    kind: str  # dense | sparse | sharded | kernel
     devices: int = 1
 
     def available(self, device_count: int) -> bool:
@@ -228,7 +228,7 @@ def _scenario_rows(fast: bool):
         ("bipartite", 1.0, ("dense", "sparse")),
         ("kpartite5", 1.0, ("dense", "sparse", "kernel")),
         ("kpartite_heterophilic", 1.0, ("dense", "sparse", "kernel")),
-        ("powerlaw", 1.0, ("sparse", "sparse_coo")),
+        ("powerlaw", 1.0, ("sparse",)),
         ("streaming", 1.0, ("dense", "sparse")),
     )
 

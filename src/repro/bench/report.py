@@ -150,6 +150,46 @@ class BenchReport:
         return paths
 
 
+def telemetry_digest(telemetry) -> Optional[Dict[str, object]]:
+    """Compress a :class:`repro.obs.Telemetry` (or a pre-built summary
+    dict) into the compact form embedded in BENCH records.
+
+    Keeps the scalar roll-ups (counters, phase durations, histogram
+    percentiles) and drops the raw series — BENCH files are diffed and
+    committed, so per-tick gauge series stay in the run's
+    ``telemetry/`` artifacts only (DESIGN.md §14.5).  Returns ``None``
+    for a disabled telemetry object so callers can assign the record
+    field unconditionally.
+    """
+    if telemetry is None:
+        return None
+    summary = telemetry if isinstance(telemetry, dict) else None
+    if summary is None:
+        if not getattr(telemetry, "enabled", False):
+            return None
+        summary = telemetry.summary()
+    digest: Dict[str, object] = {}
+    for key in ("level", "counters", "phases", "latency", "cache", "queue", "batch"):
+        if summary.get(key):
+            digest[key] = summary[key]
+    conv = summary.get("convergence")
+    if conv:
+        digest["convergence"] = {
+            k: conv.get(k)
+            for k in ("supersteps", "first_residual", "last_residual")
+        }
+    return digest or None
+
+
+def attach_telemetry(records, telemetry) -> List[BenchRecord]:
+    """Embed one shared telemetry digest into every record of a suite."""
+    digest = telemetry_digest(telemetry)
+    if digest is not None:
+        for r in records:
+            r.telemetry = dict(digest)
+    return list(records)
+
+
 def load_report(path: str, *, validate: bool = True) -> Dict[str, object]:
     with open(path) as f:
         doc = json.load(f)

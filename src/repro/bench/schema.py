@@ -37,7 +37,9 @@ class BenchRecord:
 
     ``derived`` holds metric-name → float (throughput AND correctness
     metrics); ``strict`` lists the subset of derived keys that must match
-    the baseline within the strict tolerance.
+    the baseline within the strict tolerance.  ``telemetry`` optionally
+    embeds an obs summary digest (DESIGN.md §14.5) — purely informational
+    and never compared by ``repro.bench.compare``.
     """
 
     suite: str
@@ -48,11 +50,14 @@ class BenchRecord:
     derived: Dict[str, float] = dataclasses.field(default_factory=dict)
     strict: List[str] = dataclasses.field(default_factory=list)
     error: Optional[str] = None
+    telemetry: Optional[Dict[str, object]] = None
 
     def to_dict(self) -> Dict[str, object]:
         d = dataclasses.asdict(self)
         if self.error is None:
             d.pop("error")
+        if self.telemetry is None:
+            d.pop("telemetry")
         return d
 
     @classmethod
@@ -67,6 +72,9 @@ class BenchRecord:
             derived=dict(d.get("derived", {})),
             strict=list(d.get("strict", [])),
             error=d.get("error"),
+            telemetry=(
+                dict(d["telemetry"]) if d.get("telemetry") is not None else None
+            ),
         )
 
 
@@ -129,6 +137,11 @@ def validate_record(d: Mapping[str, object]) -> None:
         )
     err = d.get("error")
     _require(err is None or isinstance(err, str), "record.error must be a string")
+    tel = d.get("telemetry")
+    _require(
+        tel is None or isinstance(tel, Mapping),
+        "record.telemetry must be a mapping when present",
+    )
     _require(
         bool(stats) or err is not None,
         "record must carry stats unless it is an error record",

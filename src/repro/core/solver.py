@@ -54,8 +54,8 @@ class LPConfig:
     dtype: jnp.dtype = jnp.float32
     fused: bool = True  # DHLP-2: pre-combine αβH + αM (beyond-paper)
     # Execution backend, a `repro.engine` registry key ("dense", "sparse",
-    # "sparse_coo", "sharded", "kernel", "auto").  None lets the caller
-    # decide (HeteroLP stays dense, serve/launch/bench pick via registry).
+    # "sharded", "kernel", "auto").  None lets the caller decide (HeteroLP
+    # stays dense, serve/launch/bench pick via registry).
     backend: Optional[str] = None
     # DEPRECATED — use backend="kernel".  Routes the dense fused round
     # through the Pallas lp_blockspmm kernel (interpret-mode on CPU; Mosaic

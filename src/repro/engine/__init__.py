@@ -10,9 +10,9 @@ string-keyed backend registry, so backend choice is one
 >>> result = engine.run(net)            # prepare + solve
 
 Registered backends: ``dense`` (XLA matmul), ``sparse`` (blocked-CSR
-width-bucket gather), ``sparse_coo`` (legacy COO segment-sum), ``sharded``
-(device-mesh shard_map), ``kernel`` (fused blocked-CSR Pallas round), and
-the ``auto`` selection policy (:func:`select_backend`).
+width-bucket gather), ``sharded`` (device-mesh shard_map), ``kernel``
+(fused blocked-CSR Pallas round), and the ``auto`` selection policy
+(:func:`select_backend`).
 """
 
 from repro.engine.base import (

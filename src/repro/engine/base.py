@@ -183,9 +183,6 @@ def select_backend(num_nodes: int, config: Optional[LPConfig] = None) -> str:
     Dense while the (N, N) operator is small (``AUTO_DENSE_MAX_NODES``),
     blocked-CSR sparse beyond.  ``sharded`` is never auto-selected — it
     needs an explicit device count/mesh, which is a deployment decision.
-    The deprecated ``sparse_coo`` layout is likewise never auto-selected:
-    blocked-CSR dominates it on every measured cell, so reaching it now
-    takes an explicit (and warning) opt-in.
     """
     if num_nodes <= AUTO_DENSE_MAX_NODES:
         return "dense"

@@ -1,22 +1,18 @@
-"""Sparse backends: blocked-CSR (default scalability path) + legacy COO.
+"""Sparse backends: blocked-CSR, the repo's scalability path.
 
 ``sparse`` aggregates per blocked-CSR width bucket — a gather + einsum
 over each ``(rows, width)`` rectangle, concatenated and inverse-permuted
 back to node order.  No scatter: every shape is static and regular, which
-is what replaced the COO gather/segment-sum path as the default
-(DESIGN.md §11).  ``kernel`` is the same engine with each bucket's round
-routed through the fused ``csr_round`` Pallas kernel
-(``β²·Y + A_bucket @ F`` in one VMEM-resident pass).
-
-``sparse_coo`` keeps the COO/segment-sum engine
-(:class:`~repro.core.sparse.SparseHeteroLP`) registered for A/B
-comparison — the bench matrix times both layouts on every pass.
+is what replaced the retired COO gather/segment-sum layout as the default
+(DESIGN.md §11; the ``sparse_coo`` backend was deleted after blocked-CSR
+dominated it on consecutive bench passes).  ``kernel`` is the same engine
+with each bucket's round routed through the fused ``csr_round`` Pallas
+kernel (``β²·Y + A_bucket @ F`` in one VMEM-resident pass).
 """
 
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import List, Optional, Tuple
 
 import jax
@@ -29,9 +25,7 @@ from repro.core.blocked_csr import (
 )
 from repro.core.network import NormalizedNetwork
 from repro.core.solver import LPConfig, SolveResult, chunk_columns
-from repro.core.sparse import SparseHeteroLP
 from repro.engine.base import LPEngine, Operator, register_backend
-from repro.graph.segment import scatter_spmm
 from repro.kernels.segment_reduce import csr_round_op
 
 # device-side bucket: (rows, nbr, wgt) with nbr/wgt (R, width)
@@ -350,53 +344,3 @@ class KernelCSREngine(SparseCSREngine):
 
     supports_algs = ("dhlp2",)
     use_kernel = True
-
-
-@register_backend("sparse_coo")
-class SparseCOOEngine(LPEngine):
-    """Legacy COO gather/segment-sum engine behind the registry.
-
-    DEPRECATED: blocked-CSR (``sparse``) has dominated it on two
-    consecutive bench passes (14–26x on the CPU matrix); it stays
-    registered for A/B comparison only, warns on selection, and the
-    ``auto`` policy never resolves to it (DESIGN.md §11).
-    """
-
-    def __init__(self, config=None, *, pad_mult: int = 256):
-        warnings.warn(
-            "backend 'sparse_coo' is deprecated — blocked-CSR ('sparse') "
-            "dominates it on every measured cell; it remains registered "
-            "for A/B benchmarking only and will be removed",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-        super().__init__(config if config is not None else LPConfig())
-        self.pad_mult = pad_mult
-
-    def _build(self, norm: NormalizedNetwork) -> Operator:
-        solver = SparseHeteroLP(self.config)
-        solver._operator(norm, self.pad_mult)  # upload now
-        return Operator(
-            backend=self.name,
-            norm=norm,
-            num_nodes=norm.num_nodes,
-            payload=solver,
-        )
-
-    def solve(
-        self,
-        op: Operator,
-        Y: np.ndarray,
-        F0: Optional[np.ndarray] = None,
-    ) -> SolveResult:
-        return op.payload.run(op.norm, seeds=Y, pad_mult=self.pad_mult, F0=F0)
-
-    def round(self, op: Operator, F, Y):
-        cfg = self.config
-        coo = op.payload._operator(op.norm, self.pad_mult)
-        src, dst, w = coo.fused_arrays(cfg.alpha)
-        beta2 = (1.0 - cfg.alpha) ** 2
-        Fd = jnp.asarray(F, jnp.float32)
-        Yd = jnp.asarray(Y, jnp.float32)
-        out = beta2 * Yd + scatter_spmm(src, dst, w, Fd, op.num_nodes)
-        return np.asarray(out, dtype=np.float64)

@@ -6,6 +6,7 @@ import jax
 from repro.kernels.common import default_interpret
 from repro.kernels.segment_reduce.kernel import csr_aggregate, csr_round
 from repro.kernels.segment_reduce.ref import csr_aggregate_ref, csr_round_ref
+from repro.obs.profiler import kernel_clock, kernel_time
 
 # The resident F panel must fit VMEM alongside tiles: N·bs·4B ≲ 8MB.
 _MAX_RESIDENT_NODES = 16384
@@ -24,11 +25,13 @@ def csr_aggregate_op(
     n = F.shape[0]
     if use_kernel is None:
         use_kernel = 128 <= n <= _MAX_RESIDENT_NODES
+    t0 = kernel_clock()
     if not use_kernel:
-        return csr_aggregate_ref(nbr, wgt, F)
-    return csr_aggregate(
+        return kernel_time("csr_aggregate.ref", t0, csr_aggregate_ref(nbr, wgt, F))
+    out = csr_aggregate(
         nbr, wgt, F, bn=bn, bs=bs, bd=bd, interpret=default_interpret()
     )
+    return kernel_time("csr_aggregate.kernel", t0, out)
 
 
 def csr_round_op(
@@ -52,9 +55,11 @@ def csr_round_op(
     n = F.shape[0]
     if use_kernel is None:
         use_kernel = 128 <= n <= _MAX_RESIDENT_NODES
+    t0 = kernel_clock()
     if not use_kernel:
-        return csr_round_ref(nbr, wgt, F, base, c)
-    return csr_round(
+        return kernel_time("csr_round.ref", t0, csr_round_ref(nbr, wgt, F, base, c))
+    out = csr_round(
         nbr, wgt, F, base, c=c, bn=bn, bs=bs, bd=bd,
         interpret=default_interpret(),
     )
+    return kernel_time("csr_round.kernel", t0, out)

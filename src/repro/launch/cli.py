@@ -7,6 +7,7 @@ online serving, benchmark passes — executes through a declarative
 thin argparse layer over that API:
 
 * ``run``       — the driver: a spec file, or flags that build one;
+* ``obs``       — render/validate a run's telemetry (DESIGN.md §14);
 * ``solve``     — DEPRECATED shim for the old ``repro.launch.solve``;
 * ``serve``     — DEPRECATED shim for the old ``repro.launch.serve``;
 * ``scenario``  — DEPRECATED shim for the old ``repro.launch.scenario``;
@@ -149,6 +150,27 @@ def _run_parser() -> argparse.ArgumentParser:
     ap.add_argument("--time-scale", type=float, default=None)
     ap.add_argument("--refresh-rounds", type=int, default=None)
     ap.add_argument("--max-batch", type=int, default=None)
+    ap.add_argument(
+        "--source-type",
+        type=int,
+        default=None,
+        help="zipf workload: query entities of this type (default: eval pair)",
+    )
+    ap.add_argument(
+        "--target-type",
+        type=int,
+        default=None,
+        help="zipf workload: rank candidates of this type (default: eval pair)",
+    )
+    # ---- obs
+    ap.add_argument(
+        "--obs",
+        nargs="?",
+        const="metrics",
+        default=None,
+        choices=("off", "metrics", "trace", "profile"),
+        help="telemetry level; bare --obs means 'metrics' (DESIGN.md §14)",
+    )
     # ---- bench
     ap.add_argument(
         "--bench",
@@ -250,6 +272,8 @@ def _build_spec_dict(args) -> Dict:
         ("time_scale", "time_scale"),
         ("refresh_rounds", "refresh_rounds"),
         ("max_batch", "max_batch"),
+        ("source_type", "source_type"),
+        ("target_type", "target_type"),
     ):
         v = getattr(args, flag)
         if v is not None:
@@ -284,6 +308,8 @@ def _build_spec_dict(args) -> Dict:
         out["serve"] = srv
     if bench:
         out["bench"] = bench
+    if args.obs:
+        out["obs"] = {"level": args.obs}
     if args.run_id:
         out["run_id"] = args.run_id
     return out
@@ -324,6 +350,13 @@ def _describe(art) -> List[str]:
         return [
             f"[bench] label={art.label} suites={len(art.suites)} "
             f"records={art.records} failures={art.failures}"
+        ]
+    if k == "dryrun":
+        s = art.summary()
+        statuses = " ".join(f"{k}:{v}" for k, v in sorted(s["statuses"].items()))
+        return [
+            f"[dryrun] {s['cells']} cells on mesh={art.mesh}: {statuses} "
+            f"({art.seconds:.1f}s)"
         ]
     return [f"[{k}] done in {art.seconds:.2f}s"]
 
@@ -400,7 +433,7 @@ def solve_main(argv: Optional[List[str]] = None) -> int:
         dest="backend",
         default="dense",
         help="engine-registry backend "
-        "(dense/sparse/sparse_coo/kernel/sharded/auto)",
+        "(dense/sparse/kernel/sharded/auto)",
     )
     ap.add_argument(
         "--devices",
@@ -498,7 +531,7 @@ def serve_parser() -> argparse.ArgumentParser:
     ap.add_argument("--sigma", type=float, default=1e-3)
     ap.add_argument(
         "--engine",
-        choices=["dense", "sparse", "sparse_coo", "kernel", "sharded", "auto"],
+        choices=["dense", "sparse", "kernel", "sharded", "auto"],
         default="dense",
         help="engine-registry backend (sharded uses the host's devices)",
     )
@@ -924,10 +957,81 @@ def bench_main(argv: Optional[List[str]] = None) -> int:
 
 
 # --------------------------------------------------------------------------
+# repro obs
+# --------------------------------------------------------------------------
+def obs_main(argv: Optional[List[str]] = None) -> int:
+    """Render (and optionally validate) a run's telemetry artifacts."""
+    import os
+
+    ap = argparse.ArgumentParser(
+        prog="repro obs",
+        description="summarize results/<run_id>/telemetry/ (DESIGN.md §14.5)",
+    )
+    ap.add_argument(
+        "run_id",
+        help="run id under --results-root, or a path to a run/telemetry dir",
+    )
+    ap.add_argument("--results-root", default="results")
+    ap.add_argument(
+        "--validate",
+        action="store_true",
+        help="schema-check every telemetry line before rendering",
+    )
+    ap.add_argument(
+        "--json",
+        action="store_true",
+        help="print the summary digest as JSON instead of text",
+    )
+    args = ap.parse_args(argv)
+
+    candidates = [
+        os.path.join(args.results_root, args.run_id, "telemetry"),
+        os.path.join(args.run_id, "telemetry"),
+        args.run_id,
+    ]
+    tel_dir = next(
+        (
+            c
+            for c in candidates
+            if os.path.isfile(os.path.join(c, "events.jsonl"))
+        ),
+        None,
+    )
+    if tel_dir is None:
+        print(
+            f"repro obs: no telemetry found for {args.run_id!r} "
+            f"(looked in {candidates}); was the run executed with "
+            "obs.level != 'off'?",
+            file=sys.stderr,
+        )
+        return 2
+
+    from repro.obs.schema import TelemetryError, validate_dir
+    from repro.obs.summary import load_dir, render, summarize
+
+    if args.validate:
+        try:
+            counts = validate_dir(tel_dir)
+        except TelemetryError as e:
+            print(f"repro obs: INVALID telemetry: {e}", file=sys.stderr)
+            return 1
+        kinds = " ".join(f"{k}:{v}" for k, v in sorted(counts.items()))
+        print(f"[obs] schema ok: {kinds}")
+
+    summary = summarize(*load_dir(tel_dir))
+    if args.json:
+        print(json.dumps(summary, indent=2, sort_keys=True))
+    else:
+        print(render(summary))
+    return 0
+
+
+# --------------------------------------------------------------------------
 # dispatch
 # --------------------------------------------------------------------------
 _SUBCOMMANDS = {
     "run": run_main,
+    "obs": obs_main,
     "solve": solve_main,
     "serve": serve_main,
     "scenario": scenario_main,
@@ -941,9 +1045,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         names = " | ".join(_SUBCOMMANDS)
         print(f"usage: python -m repro {{{names}}} ...\n")
         print(
-            "`run` executes a declarative RunSpec (DESIGN.md §13); the "
-            "other\nsubcommands are deprecation shims for the retired "
-            "standalone CLIs."
+            "`run` executes a declarative RunSpec (DESIGN.md §13); `obs` "
+            "renders a\nrun's telemetry (§14); the other subcommands are "
+            "deprecation shims for\nthe retired standalone CLIs."
         )
         return 0
     cmd, rest = argv[0], argv[1:]

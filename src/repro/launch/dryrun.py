@@ -16,20 +16,28 @@ For each cell this script:
   4. records memory_analysis / cost_analysis / a collective-bytes census
      of the HLO into a JSONL file that benchmarks/roofline.py consumes.
 
-Usage:
+The sweep is a RunSpec stage now (``{"dryrun": {...}}`` →
+``Session.dryrun``, DESIGN.md §13/§14): the census lands under
+``results/<run_id>/telemetry/dryrun.jsonl`` in the telemetry artifact
+format.  ``main`` below is a deprecation shim over that path — it keeps
+the old flags and mirrors the JSONL to ``--out`` for existing roofline
+invocations.
+
+Usage (deprecated shim):
   python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k \
       --mesh single --out results/dryrun.jsonl
   python -m repro.launch.dryrun --all --mesh both
+
+Spec-driven equivalent:
+  python -m repro run --spec '{"dryrun": {"archs": ["stablelm-1.6b"]}}'
 """
 import argparse
-import json
 import re
 import time
 import traceback
 from typing import Any, Dict
 
 import jax
-import numpy as np
 
 
 _COLLECTIVES = (
@@ -205,6 +213,11 @@ def run_cell(arch: str, shape: str, mesh_kind: str) -> Dict[str, Any]:
 
 
 def main() -> None:
+    """Deprecated CLI shim: builds the equivalent dryrun-only RunSpec and
+    runs it through :class:`repro.api.session.Session`."""
+    import shutil
+    import warnings
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
@@ -214,54 +227,44 @@ def main() -> None:
                     help="run every assigned (arch × shape) cell")
     ap.add_argument("--include-extra", action="store_true",
                     help="also run the dhlp-bio LP cells")
-    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--out", default="results/dryrun.jsonl",
+                    help="mirror the census JSONL here (legacy path)")
     ap.add_argument("--skip-done", action="store_true",
-                    help="skip cells already recorded as ok in --out")
+                    help="(deprecated) ignored — the spec-driven sweep "
+                         "always runs every configured cell")
+    ap.add_argument("--results-root", default="results")
     args = ap.parse_args()
 
-    from repro.configs import all_cells, get_arch
+    warnings.warn(
+        "python -m repro.launch.dryrun is a shim; use a RunSpec with a "
+        "'dryrun' section (python -m repro run) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    if args.skip_done:
+        print("[dryrun] --skip-done is deprecated and ignored")
+    if not args.all and not args.arch:
+        ap.error("--arch required unless --all")
 
-    if args.all:
-        cells = all_cells(include_extra=args.include_extra)
-    else:
-        if not args.arch:
-            ap.error("--arch required unless --all")
-        shapes = (
-            [args.shape] if args.shape else get_arch(args.arch).shapes
+    from repro.api import DryrunSpec, RunSpec, Session
+
+    spec = RunSpec(
+        dryrun=DryrunSpec(
+            archs=(args.arch,) if args.arch else None,
+            shapes=(args.shape,) if args.shape else None,
+            mesh=args.mesh,
+            include_extra=args.include_extra,
         )
-        cells = [(args.arch, s) for s in shapes]
-
-    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
-
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-    done = set()
-    if args.skip_done and os.path.exists(args.out):
-        with open(args.out) as f:
-            for line in f:
-                try:
-                    r = json.loads(line)
-                except json.JSONDecodeError:
-                    continue
-                if r.get("status") in ("ok", "skipped"):
-                    done.add((r["arch"], r["shape"], r["mesh"]))
-
-    for arch, shape in cells:
-        for mesh_kind in meshes:
-            key = (arch, shape, mesh_kind)
-            if key in done:
-                print(f"[dryrun] {arch} × {shape} × {mesh_kind}: cached")
-                continue
-            print(f"[dryrun] {arch} × {shape} × {mesh_kind} ...", flush=True)
-            rec = run_cell(arch, shape, mesh_kind)
-            with open(args.out, "a") as f:
-                f.write(json.dumps(rec) + "\n")
-            status = rec["status"]
-            extra = (
-                f"compile={rec.get('compile_s')}s"
-                if status == "ok" else rec.get("error", rec.get("skip_reason", ""))
-            )
-            print(f"[dryrun] {arch} × {shape} × {mesh_kind}: {status} {extra}",
-                  flush=True)
+    )
+    session = Session(spec, results_root=args.results_root)
+    artifacts = session.run()
+    census = os.path.join(session.run_dir, "telemetry", "dryrun.jsonl")
+    if args.out and os.path.exists(census):
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        shutil.copyfile(census, args.out)
+        print(f"[dryrun] census mirrored to {args.out}")
+    summary = next(a for a in artifacts if a.kind == "dryrun").summary()
+    print(f"[dryrun] {summary['cells']} cells: {summary['statuses']}")
 
 
 if __name__ == "__main__":

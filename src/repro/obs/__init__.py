@@ -1,0 +1,45 @@
+"""Observability subsystem: telemetry, metrics, profiler hooks (DESIGN.md §14).
+
+The cross-cutting layer a :class:`~repro.api.session.Session` threads
+through solve/serve/bench/dryrun when the spec carries an ``obs``
+section:
+
+* :mod:`repro.obs.telemetry` — structured spans/events + the level gate;
+* :mod:`repro.obs.metrics`   — counters, gauges, log-bucket histograms;
+* :mod:`repro.obs.schema`    — JSONL schema validation (CI + ``--validate``);
+* :mod:`repro.obs.solve`     — the observed per-superstep solve loop;
+* :mod:`repro.obs.profiler`  — ``jax.profiler`` phases + kernel timing;
+* :mod:`repro.obs.summary`   — digest + text rendering for ``repro obs``.
+
+Import-light on purpose: importing :mod:`repro.obs` must not pull jax
+(the profiler imports it lazily), so the CLI can validate telemetry
+artifacts without touching an accelerator runtime.
+"""
+
+from repro.obs.metrics import (
+    DEFAULT_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    bucket_index,
+)
+from repro.obs.schema import TelemetryError, validate_dir, validate_file, validate_line
+from repro.obs.telemetry import LEVELS, SCHEMA, Span, Telemetry
+
+__all__ = [
+    "DEFAULT_BUCKETS",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "LEVELS",
+    "MetricsRegistry",
+    "SCHEMA",
+    "Span",
+    "Telemetry",
+    "TelemetryError",
+    "bucket_index",
+    "validate_dir",
+    "validate_file",
+    "validate_line",
+]

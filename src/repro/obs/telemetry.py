@@ -1,0 +1,286 @@
+"""Structured telemetry: spans, events, and the metrics facade (DESIGN.md §14).
+
+One :class:`Telemetry` object rides through a
+:class:`~repro.api.session.Session` and is threaded (as an optional
+keyword) into the serve stack and the observed-solve loop.  Design
+constraints, in priority order:
+
+* **off is free** — every recording entry point starts with one branch;
+  when ``level == "off"`` the only state change is a host-side
+  ``suppressed`` counter increment (no allocation, no lock, no clock
+  read, and never a callback into jitted code);
+* **spans carry explicit parent ids** — the taxonomy is
+  ``run > phase > superstep`` for solves and ``run > batch > query`` for
+  serving.  Parentage is tracked per-thread (the micro-batcher closes
+  batch spans on its own thread) with an *ambient* fallback: a span
+  opened on a thread with an empty stack parents to the innermost open
+  ``run``/``phase`` span, so background-thread batches nest under the
+  serve phase;
+* **deterministic ids** — one process-wide increment under a lock; the
+  clock is injectable so tests assert exact timings.
+
+Levels: ``off`` < ``metrics`` (counters/gauges/histograms + structural
+spans) < ``trace`` (adds per-superstep / per-query spans) < ``profile``
+(adds ``jax.profiler`` + kernel timing hooks, see
+:mod:`repro.obs.profiler`).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.obs.metrics import MetricsRegistry
+
+SCHEMA = "repro.obs/v1"
+LEVELS = ("off", "metrics", "trace", "profile")
+
+#: span kinds that update the ambient parent for spans opened on other
+#: threads (coarse structural spans only — a batch span must not become
+#: the ambient parent of an unrelated phase)
+_AMBIENT_KINDS = ("run", "phase")
+
+
+class _NullSpan:
+    """Reusable no-op span: the disabled path allocates nothing."""
+
+    __slots__ = ()
+    id = None
+    parent = None
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        return None
+
+    def set(self, **attrs) -> None:
+        return None
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class Span:
+    """One timed, parented region; records itself on ``__exit__``."""
+
+    __slots__ = ("_tel", "id", "parent", "kind", "name", "attrs", "t0", "_prev")
+
+    def __init__(
+        self,
+        tel: "Telemetry",
+        span_id: int,
+        parent: Optional[int],
+        kind: str,
+        name: str,
+        attrs: Dict[str, Any],
+    ):
+        self._tel = tel
+        self.id = span_id
+        self.parent = parent
+        self.kind = kind
+        self.name = name
+        self.attrs = attrs
+        self.t0: Optional[float] = None
+        self._prev: Optional[int] = None
+
+    def set(self, **attrs) -> None:
+        self.attrs.update(attrs)
+
+    def __enter__(self) -> "Span":
+        tel = self._tel
+        tel._stack().append(self.id)
+        if self.kind in _AMBIENT_KINDS:
+            self._prev = tel._ambient
+            tel._ambient = self.id
+        self.t0 = tel.clock()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        tel = self._tel
+        t1 = tel.clock()
+        stack = tel._stack()
+        if stack and stack[-1] == self.id:
+            stack.pop()
+        if self.kind in _AMBIENT_KINDS:
+            tel._ambient = self._prev
+        record: Dict[str, Any] = {
+            "kind": "span",
+            "id": self.id,
+            "parent": self.parent,
+            "span": self.kind,
+            "name": self.name,
+            "t0": self.t0,
+            "dur_s": t1 - (self.t0 if self.t0 is not None else t1),
+        }
+        if exc_type is not None:
+            record["status"] = "error"
+            record["error"] = f"{exc_type.__name__}: {exc}"
+        if self.attrs:
+            record["attrs"] = self.attrs
+        tel._append(record)
+
+
+class Telemetry:
+    """The per-run telemetry hub: spans + events + metrics registry."""
+
+    def __init__(
+        self,
+        level: str = "off",
+        *,
+        run_id: Optional[str] = None,
+        clock=None,
+    ):
+        if level not in LEVELS:
+            raise ValueError(f"obs level must be one of {LEVELS}, got {level!r}")
+        self.level = level
+        self.run_id = run_id
+        self.clock = time.monotonic if clock is None else clock
+        #: disabled-path activity counter — the ONLY state the off level
+        #: touches, and the overhead-guard tests' zero-event witness
+        self.suppressed = 0
+        self._lock = threading.Lock()
+        self._next_id = 0
+        self._events: List[Dict[str, Any]] = []
+        self._local = threading.local()
+        self._ambient: Optional[int] = None
+        self.metrics = MetricsRegistry(clock=self.clock)
+
+    # ---------------------------------------------------------------- levels
+    @property
+    def enabled(self) -> bool:
+        return self.level != "off"
+
+    @property
+    def trace_enabled(self) -> bool:
+        return self.level in ("trace", "profile")
+
+    @property
+    def profile_enabled(self) -> bool:
+        return self.level == "profile"
+
+    # ----------------------------------------------------------------- spans
+    def _stack(self) -> List[int]:
+        stack = getattr(self._local, "stack", None)
+        if stack is None:
+            stack = self._local.stack = []
+        return stack
+
+    def _current_parent(self) -> Optional[int]:
+        stack = self._stack()
+        if stack:
+            return stack[-1]
+        return self._ambient
+
+    def _alloc_id(self) -> int:
+        with self._lock:
+            i = self._next_id
+            self._next_id += 1
+        return i
+
+    def _append(self, record: Dict[str, Any]) -> None:
+        with self._lock:
+            self._events.append(record)
+
+    def span(self, kind: str, name: Optional[str] = None, **attrs):
+        """Open a structural span (recorded at every enabled level)."""
+        if not self.enabled:
+            self.suppressed += 1
+            return _NULL_SPAN
+        return Span(
+            self, self._alloc_id(), self._current_parent(), kind, name or kind, attrs
+        )
+
+    def trace_span(self, kind: str, name: Optional[str] = None, **attrs):
+        """A fine-grained span (superstep/batch/query): trace level only."""
+        if not self.trace_enabled:
+            if not self.enabled:
+                self.suppressed += 1
+            return _NULL_SPAN
+        return self.span(kind, name, **attrs)
+
+    def event(self, name: str, **attrs) -> None:
+        """A point event under the current parent (any enabled level)."""
+        if not self.enabled:
+            self.suppressed += 1
+            return
+        record: Dict[str, Any] = {
+            "kind": "event",
+            "id": self._alloc_id(),
+            "parent": self._current_parent(),
+            "name": name,
+            "t": self.clock(),
+        }
+        if attrs:
+            record["attrs"] = attrs
+        self._append(record)
+
+    # --------------------------------------------------------------- metrics
+    def count(self, name: str, n: int = 1) -> None:
+        if not self.enabled:
+            self.suppressed += 1
+            return
+        self.metrics.counter(name).inc(n)
+
+    def gauge(self, name: str, value: float) -> None:
+        if not self.enabled:
+            self.suppressed += 1
+            return
+        self.metrics.gauge(name).set(value)
+
+    def observe(self, name: str, value: float) -> None:
+        if not self.enabled:
+            self.suppressed += 1
+            return
+        self.metrics.histogram(name).observe(value)
+
+    # ------------------------------------------------------------ inspection
+    def events(self) -> List[Dict[str, Any]]:
+        """Snapshot of the recorded span/event records (closed spans only)."""
+        with self._lock:
+            return list(self._events)
+
+    def meta(self) -> Dict[str, Any]:
+        return {
+            "kind": "meta",
+            "schema": SCHEMA,
+            "run_id": self.run_id,
+            "level": self.level,
+        }
+
+    def summary(self) -> Dict[str, Any]:
+        from repro.obs.summary import summarize
+
+        return summarize(self.meta(), self.events(), self.metrics.to_lines())
+
+    # ----------------------------------------------------------------- flush
+    def flush(self, dir_path: str) -> List[str]:
+        """Write ``events.jsonl`` / ``metrics.jsonl`` / ``summary.json``.
+
+        Each JSONL file leads with a ``meta`` line carrying the schema
+        version; returns the written paths ([] when disabled).
+        """
+        if not self.enabled:
+            return []
+        os.makedirs(dir_path, exist_ok=True)
+        meta = self.meta()
+        paths = []
+        events_path = os.path.join(dir_path, "events.jsonl")
+        with open(events_path, "w") as f:
+            for record in [meta] + self.events():
+                f.write(json.dumps(record, sort_keys=True) + "\n")
+        paths.append(events_path)
+        metrics_path = os.path.join(dir_path, "metrics.jsonl")
+        with open(metrics_path, "w") as f:
+            for record in [meta] + self.metrics.to_lines():
+                f.write(json.dumps(record, sort_keys=True) + "\n")
+        paths.append(metrics_path)
+        summary_path = os.path.join(dir_path, "summary.json")
+        with open(summary_path, "w") as f:
+            json.dump(self.summary(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        paths.append(summary_path)
+        return paths

@@ -88,13 +88,16 @@ class ColumnCache:
     version — not servable, but the warm-start seed for the next solve.
     """
 
-    def __init__(self, capacity: int = 4096):
+    def __init__(self, capacity: int = 4096, *, telemetry=None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
         self._lru: "OrderedDict[Tuple[int, int], np.ndarray]" = OrderedDict()
         self._stale: Dict[int, np.ndarray] = {}
         self.stats = CacheStats()
+        # mirrors the CacheStats increments into serve.cache.* counters
+        # (DESIGN.md §14.2); None = uninstrumented standalone use
+        self._tel = telemetry
 
     def __len__(self) -> int:
         return len(self._lru)
@@ -104,9 +107,13 @@ class ColumnCache:
         col = self._lru.get(key)
         if col is None:
             self.stats.misses += 1
+            if self._tel is not None:
+                self._tel.count("serve.cache.misses")
             return None
         self._lru.move_to_end(key)
         self.stats.hits += 1
+        if self._tel is not None:
+            self._tel.count("serve.cache.hits")
         return col
 
     def put(self, version: int, node: int, col: np.ndarray) -> None:
@@ -117,6 +124,8 @@ class ColumnCache:
         while len(self._lru) > self.capacity:
             self._lru.popitem(last=False)
             self.stats.evictions += 1
+            if self._tel is not None:
+                self._tel.count("serve.cache.evictions")
 
     # ---------------------------------------------------------- warm starts
     def stale_hint(self, node: int) -> Optional[np.ndarray]:
@@ -168,6 +177,8 @@ class ColumnCache:
             self.stats.invalidations += 1
             demoted += 1
         self.stats.warm_hints = len(self._stale)
+        if self._tel is not None and demoted:
+            self._tel.count("serve.cache.invalidations", demoted)
         return demoted
 
     def clear(self) -> None:

@@ -121,11 +121,14 @@ class LPServeEngine:
         *,
         engine=None,
         norm=None,
+        telemetry=None,
     ):
         """``engine``/``norm`` let a :class:`repro.api.session.Session`
         inject its already-prepared LP engine and normalized view, so the
         serve path reuses the operator assembled for the solve stage
-        instead of re-preparing per entry point (DESIGN.md §13)."""
+        instead of re-preparing per entry point (DESIGN.md §13).
+        ``telemetry`` threads one :class:`repro.obs.Telemetry` into the
+        batcher and column cache (DESIGN.md §14)."""
         self.config = config
         self._state = NetworkState.from_network(net, version=0, norm=norm)
         backend = resolve_backend(
@@ -147,12 +150,13 @@ class LPServeEngine:
             self._engine = engine
         else:
             self._engine = make_engine(backend, config.lp)
-        self.columns = ColumnCache(config.cache_columns)
+        self.columns = ColumnCache(config.cache_columns, telemetry=telemetry)
         self.batcher = MicroBatcher(
             self._solve_batch,
             max_batch=config.max_batch,
             max_wait_s=config.max_wait_s,
             queue_depth=config.queue_depth,
+            telemetry=telemetry,
         )
         # one solve/update at a time: the solvers' operator caches and the
         # column LRU are not concurrency-safe on their own

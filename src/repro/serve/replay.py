@@ -37,7 +37,9 @@ def _sample(result) -> Dict:
     }
 
 
-def replay_trace(engine, trace, deltas, *, top_k: int, time_scale: float) -> Dict:
+def replay_trace(
+    engine, trace, deltas, *, top_k: int, time_scale: float, telemetry=None
+) -> Dict:
     """Submit ``trace`` through the micro-batcher at its own pace.
 
     ``time_scale > 1`` compresses the clock (a 4s horizon replays in
@@ -56,6 +58,8 @@ def replay_trace(engine, trace, deltas, *, top_k: int, time_scale: float) -> Dic
             if wait > 0:
                 time.sleep(wait)
             engine.apply_delta(deltas[di].delta)
+            if telemetry is not None:
+                telemetry.event("serve.delta", at=float(deltas[di].t))
             di += 1
         wait = target - (time.monotonic() - t0)
         if wait > 0:
@@ -73,6 +77,9 @@ def replay_trace(engine, trace, deltas, *, top_k: int, time_scale: float) -> Dic
     wall = time.monotonic() - t0
     engine.stop()
     lats = [r.latency_s for r in results]
+    if telemetry is not None:
+        for lat in lats:
+            telemetry.observe("serve.latency_s", lat)
     sources = [r.source for r in results]
     out = {
         "queries": len(results),
@@ -102,6 +109,7 @@ def play_zipf(
     top_k: int,
     seed: int,
     echo=None,
+    telemetry=None,
 ) -> Dict:
     """Zipf-popular entities of ``source_type`` querying ``target_type``
     candidates, with ``deltas`` random associations landing online at
@@ -136,6 +144,8 @@ def play_zipf(
             a, b = (u, v) if source_type < target_type else (v, u)
             version = engine.apply_delta(GraphDelta(assoc=[(pair, a, b, 1.0)]))
             events.append({"at": int(i), "u": u, "v": v, "version": int(version)})
+            if telemetry is not None:
+                telemetry.event("serve.delta", at=int(i), version=int(version))
             if echo:
                 echo(
                     f"[serve] delta @req {i}: +assoc type{source_type} {u} "
@@ -151,6 +161,9 @@ def play_zipf(
     engine.stop()
 
     lats = [r.latency_s for r in results]
+    if telemetry is not None:
+        for lat in lats:
+            telemetry.observe("serve.latency_s", lat)
     by_source = collections.Counter(r.source for r in results)
     rounds_by = collections.defaultdict(list)
     for r in results:

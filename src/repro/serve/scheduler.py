@@ -9,8 +9,17 @@ run ONE batched solve, scatter results back to per-request futures.
 Backpressure is the bounded queue: when ``queue_depth`` requests are
 already pending, ``submit`` either blocks (default) or raises
 ``queue.Full`` — the caller sheds load instead of the engine dying.
+
+With a ``telemetry`` handle attached (DESIGN.md §14) each tick records
+queue depth, batch size/occupancy gauges and batch/completed/failed
+counters; at trace level the tick itself becomes a ``batch`` span with
+per-query events.  The batcher usually runs on its background thread, so
+those spans parent to the Session's *ambient* phase span, not a stack
+frame of this thread.
 """
 from __future__ import annotations
+
+import contextlib
 
 import dataclasses
 import queue
@@ -48,10 +57,12 @@ class MicroBatcher:
         max_batch: int = 64,
         max_wait_s: float = 0.005,
         queue_depth: int = 1024,
+        telemetry=None,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self._solve_batch = solve_batch
+        self._tel = telemetry
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self._queue: "queue.Queue[Tuple[QuerySpec, Future, float]]" = (
@@ -78,6 +89,8 @@ class MicroBatcher:
             self._queue.put((spec, fut, time.monotonic()), block, timeout)
         except queue.Full:
             self.stats.rejected += 1
+            if self._tel is not None:
+                self._tel.count("serve.rejected")
             raise
         self.stats.submitted += 1
         return fut
@@ -134,25 +147,49 @@ class MicroBatcher:
         if not live:
             return 0
         specs = [s for s, _, _ in live]
-        try:
-            results = self._solve_batch(specs)
-            if len(results) != len(specs):
-                raise RuntimeError(
-                    f"solve_batch returned {len(results)} results for "
-                    f"{len(specs)} specs"
-                )
-        except Exception as exc:  # noqa: BLE001 — propagate to every waiter
-            for _, fut, _ in live:
-                fut.set_exception(exc)
-            self.stats.failed += len(live)
-            self.stats.batches += 1
-            return 0
-        now = time.monotonic()
-        for (spec, fut, t_in), res in zip(live, results):
-            res.latency_s = now - t_in
-            fut.set_result(res)
+        tel = self._tel
+        if tel is None:
+            span = contextlib.nullcontext()
+        else:
+            tel.gauge("serve.queue_depth", self._queue.qsize())
+            tel.gauge("serve.batch_size", len(live))
+            tel.gauge("serve.batch_occupancy", len(live) / self.max_batch)
+            span = tel.trace_span("batch", f"batch:{self.stats.batches}")
+        with span:
+            try:
+                results = self._solve_batch(specs)
+                if len(results) != len(specs):
+                    raise RuntimeError(
+                        f"solve_batch returned {len(results)} results for "
+                        f"{len(specs)} specs"
+                    )
+            except Exception as exc:  # noqa: BLE001 — propagate to every waiter
+                for _, fut, _ in live:
+                    fut.set_exception(exc)
+                self.stats.failed += len(live)
+                self.stats.batches += 1
+                if tel is not None:
+                    tel.count("serve.batches")
+                    tel.count("serve.failed", len(live))
+                return 0
+            now = time.monotonic()
+            for (spec, fut, t_in), res in zip(live, results):
+                res.latency_s = now - t_in
+                fut.set_result(res)
+                if tel is not None and tel.trace_enabled:
+                    tel.event(
+                        "serve.query",
+                        entity=spec.entity,
+                        target_type=spec.target_type,
+                        source=res.source,
+                        rounds=res.rounds,
+                        latency_s=res.latency_s,
+                    )
         self.stats.completed += len(live)
         self.stats.batches += 1
+        if tel is not None:
+            tel.count("serve.batches")
+            tel.count("serve.completed", len(live))
         return len(live)
 
     def drain(self) -> int:

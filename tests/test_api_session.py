@@ -3,7 +3,7 @@
 Covers the ISSUE-5 acceptance surface: shim CLIs produce identical
 artifacts to the spec-driven driver, one prepared engine is shared
 across solve→serve, the scenario disk cache round-trips, and the
-demoted ``sparse_coo`` backend warns on selection.
+deleted ``sparse_coo`` backend stays gone from spec resolution.
 """
 from __future__ import annotations
 
@@ -294,13 +294,13 @@ def test_bipartite_scenario_registered_and_recoverable():
     assert out["recovery_auc"] > 0.8
 
 
-# ------------------------------------------------------ sparse_coo demotion
-def test_sparse_coo_selection_warns():
+# ------------------------------------------------------ sparse_coo removal
+def test_sparse_coo_backend_deleted():
     from repro.core.solver import LPConfig
-    from repro.engine import make_engine, select_backend
+    from repro.engine import UnknownBackendError, make_engine, select_backend
 
-    with pytest.warns(DeprecationWarning, match="sparse_coo"):
+    with pytest.raises(UnknownBackendError):
         make_engine("sparse_coo", LPConfig(alg="dhlp2"))
-    # the auto policy never resolves to the demoted layout
+    # the auto policy is unchanged by the deletion
     assert select_backend(100) == "dense"
     assert select_backend(1_000_000) == "sparse"

@@ -266,15 +266,15 @@ def test_matrix_expansion_filters_by_device_count():
     cells, skipped = expand_matrix(backends, params, device_count=2)
     names = {b.name for b, _ in cells}
     assert names == {
-        "dense", "kernel", "sparse", "sparse_coo", "sharded1", "sharded2",
+        "dense", "kernel", "sparse", "sharded1", "sharded2",
     }
     assert [b.name for b in skipped] == ["sharded4"]
-    assert len(cells) == 6 * 2
+    assert len(cells) == 5 * 2
     # params are copied per cell, not shared
     cells[0][1]["alg"] = "mutated"
     assert params[0]["alg"] == "dhlp1"
     cells4, skipped4 = expand_matrix(backends, params, device_count=4)
-    assert not skipped4 and len(cells4) == 7 * 2
+    assert not skipped4 and len(cells4) == 6 * 2
     assert BackendSpec("sharded8", "sharded", devices=8).available(4) is False
 
 

@@ -41,8 +41,9 @@ def seeds(bio_norm):
 class TestRegistry:
     def test_builtin_backends_registered(self):
         names = available_backends()
-        for expected in ("dense", "sparse", "sparse_coo", "sharded", "kernel"):
+        for expected in ("dense", "sparse", "sharded", "kernel"):
             assert expected in names
+        assert "sparse_coo" not in names  # deleted legacy COO layout
         assert "auto" in available_backends(include_auto=True)
         assert "auto" not in names  # policy, not a class
 
@@ -74,18 +75,21 @@ class TestAutoPolicy:
         assert resolve_backend(None, num_nodes=10) == "dense"
 
     def test_concrete_backend_passes_through(self):
-        assert resolve_backend("sparse_coo", num_nodes=10) == "sparse_coo"
+        assert resolve_backend("sparse", num_nodes=10) == "sparse"
+
+    def test_deleted_coo_backend_is_unknown(self):
+        with pytest.raises(UnknownBackendError):
+            resolve_backend("sparse_coo", num_nodes=10)
 
 
 class TestFixedPointParity:
-    """CSR vs COO vs dense all land on the dense fixed point."""
+    """CSR, kernel and sharded all land on the dense fixed point."""
 
     @pytest.mark.parametrize("alg", ["dhlp1", "dhlp2"])
-    @pytest.mark.parametrize("backend", ["sparse", "sparse_coo"])
-    def test_sparse_layouts_match_dense(self, bio_norm, seeds, alg, backend):
+    def test_sparse_layout_matches_dense(self, bio_norm, seeds, alg):
         cfg = LPConfig(alg=alg, sigma=1e-4, seed_mode="fixed")
         ref = make_engine("dense", cfg).run(bio_norm, seeds=seeds)
-        res = make_engine(backend, cfg).run(bio_norm, seeds=seeds)
+        res = make_engine("sparse", cfg).run(bio_norm, seeds=seeds)
         assert np.max(np.abs(res.F - ref.F)) < 5e-3
         assert res.converged
 
@@ -104,7 +108,7 @@ class TestFixedPointParity:
         # silently dropping a configured convergence knob would be a lie
         cfg = LPConfig(alg="dhlp2", momentum=0.2)
         with pytest.raises(BackendUnsupported, match="momentum"):
-            make_engine("sparse_coo", cfg).prepare(bio_norm)
+            make_engine("sharded", cfg).prepare(bio_norm)
 
     def test_prepare_cache_hits_on_raw_network(self):
         from repro.data.drugnet import DrugNetSpec, make_drugnet
@@ -135,7 +139,7 @@ class TestEngineContract:
 
     def test_warm_start_threads_through(self, bio_norm, seeds):
         cfg = LPConfig(alg="dhlp2", sigma=1e-4, seed_mode="fixed")
-        for backend in ("dense", "sparse", "sparse_coo"):
+        for backend in ("dense", "sparse", "kernel"):
             engine = make_engine(backend, cfg)
             cold = engine.run(bio_norm, seeds=seeds)
             warm = engine.run(bio_norm, seeds=seeds, F0=cold.F)
@@ -144,8 +148,7 @@ class TestEngineContract:
 
     def test_round_moves_toward_fixed_point(self, bio_norm, seeds):
         cfg = LPConfig(alg="dhlp2", sigma=1e-4, seed_mode="fixed")
-        for backend in ("dense", "sparse", "sparse_coo", "kernel",
-                        "sharded"):
+        for backend in ("dense", "sparse", "kernel", "sharded"):
             engine = make_engine(backend, cfg)
             op = engine.prepare(bio_norm)
             Fstar = engine.solve(op, seeds).F

@@ -1,0 +1,316 @@
+"""Telemetry subsystem tests (DESIGN.md §14).
+
+Covers the ISSUE-6 acceptance surface: span nesting/parenting under an
+injected clock, histogram bucket-edge arithmetic, the JSONL round-trip
+through schema validation and the summary loader, the off-level
+zero-event overhead guard, and serve-replay counters matching the
+scheduler/cache's own bookkeeping.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs import (
+    DEFAULT_BUCKETS,
+    Histogram,
+    MetricsRegistry,
+    Telemetry,
+    TelemetryError,
+    bucket_index,
+    validate_dir,
+    validate_line,
+)
+from repro.obs.summary import load_dir, render, summarize
+
+
+class FakeClock:
+    """Deterministic monotonic clock: each read advances by ``step``."""
+
+    def __init__(self, step=1.0):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self) -> float:
+        t = self.t
+        self.t += self.step
+        return t
+
+
+# ---------------------------------------------------------------------------
+# spans
+# ---------------------------------------------------------------------------
+class TestSpans:
+    def test_nesting_assigns_parent_ids(self):
+        tel = Telemetry("trace", run_id="t", clock=FakeClock())
+        with tel.span("run", "r") as run:
+            with tel.span("phase", "solve") as phase:
+                with tel.trace_span("superstep", "s0") as step:
+                    tel.event("residual", value=0.5)
+        events = tel.events()
+        # spans record on __exit__, so the innermost closes first
+        by_name = {e.get("name"): e for e in events}
+        assert run.id == 0 and phase.id == 1 and step.id == 2
+        assert by_name["r"]["parent"] is None
+        assert by_name["solve"]["parent"] == run.id
+        assert by_name["s0"]["parent"] == phase.id
+        assert by_name["residual"]["parent"] == step.id
+        assert [e["kind"] for e in events] == ["event", "span", "span", "span"]
+
+    def test_injected_clock_times_spans_exactly(self):
+        clock = FakeClock(step=1.0)
+        tel = Telemetry("metrics", clock=clock)
+        with tel.span("run", "r"):
+            pass  # t0=0 on enter, t1=1 on exit
+        (rec,) = tel.events()
+        assert rec["t0"] == 0.0
+        assert rec["dur_s"] == 1.0
+
+    def test_background_thread_parents_to_ambient_phase(self):
+        """A span opened on a fresh thread (empty stack) nests under the
+        innermost open run/phase — the micro-batcher's situation."""
+        tel = Telemetry("trace", clock=FakeClock())
+        seen = {}
+
+        def worker():
+            with tel.span("batch", "b0") as sp:
+                seen["parent"] = sp.parent
+
+        with tel.span("run", "r"):
+            with tel.span("phase", "serve") as phase:
+                t = threading.Thread(target=worker)
+                t.start()
+                t.join()
+        assert seen["parent"] == phase.id
+
+    def test_batch_span_never_becomes_ambient_parent(self):
+        tel = Telemetry("trace", clock=FakeClock())
+        with tel.span("run", "r") as run:
+            with tel.span("batch", "b"):
+                pass
+            seen = {}
+
+            def worker():
+                with tel.span("batch", "b2") as sp:
+                    seen["parent"] = sp.parent
+
+            t = threading.Thread(target=worker)
+            t.start()
+            t.join()
+        assert seen["parent"] == run.id  # not the closed batch span
+
+    def test_error_exit_marks_span(self):
+        tel = Telemetry("metrics", clock=FakeClock())
+        with pytest.raises(RuntimeError):
+            with tel.span("phase", "boom"):
+                raise RuntimeError("x")
+        (rec,) = tel.events()
+        assert rec["status"] == "error"
+        assert rec["error"].startswith("RuntimeError")
+
+    def test_trace_span_is_null_at_metrics_level(self):
+        tel = Telemetry("metrics", clock=FakeClock())
+        with tel.trace_span("superstep", "s0") as sp:
+            assert sp.id is None
+        assert tel.events() == []
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+class TestHistogramBuckets:
+    def test_default_edges_five_per_decade(self):
+        assert len(DEFAULT_BUCKETS) == 41
+        assert DEFAULT_BUCKETS[0] == pytest.approx(1e-6)
+        assert DEFAULT_BUCKETS[-1] == pytest.approx(1e2)
+        ratios = np.diff(np.log10(DEFAULT_BUCKETS))
+        np.testing.assert_allclose(ratios, 0.2, atol=1e-12)
+
+    def test_bucket_index_edges(self):
+        # exact edges are inclusive upper bounds (bisect_left)
+        assert bucket_index(1e-6) == 0
+        assert bucket_index(10.0 ** (-29 / 5.0)) == 1
+        assert bucket_index(1e2) == 40
+        assert bucket_index(1e9) == 41  # overflow bucket
+        assert bucket_index(0.0) == 0
+
+    def test_observe_accumulates_and_bounds(self):
+        h = Histogram("lat")
+        for v in (1e-4, 2e-4, 5e-1):
+            h.observe(v)
+        assert h.count == 3
+        assert h.total == pytest.approx(0.5003)
+        assert h.min == pytest.approx(1e-4)
+        assert h.max == pytest.approx(0.5)
+        assert sum(h.counts) == 3
+        # p100 is clamped to the observed max, not a bucket edge
+        assert h.percentile(1.0) == pytest.approx(0.5)
+        p50 = h.percentile(0.5)
+        assert 1e-4 <= p50 <= 0.5
+
+    def test_registry_is_type_strict(self):
+        reg = MetricsRegistry(clock=FakeClock())
+        reg.counter("x").inc()
+        with pytest.raises(TypeError):
+            reg.gauge("x")
+
+
+# ---------------------------------------------------------------------------
+# JSONL round-trip
+# ---------------------------------------------------------------------------
+class TestRoundTrip:
+    def _recorded(self) -> Telemetry:
+        tel = Telemetry("trace", run_id="rt", clock=FakeClock())
+        with tel.span("run", "rt"):
+            with tel.span("phase", "solve"):
+                tel.gauge("solve.residual", 0.25)
+                tel.count("solve.supersteps", 3)
+            with tel.span("phase", "serve"):
+                tel.observe("serve.latency_s", 1e-3)
+                tel.event("serve.delta", at=0.5)
+        return tel
+
+    def test_flush_validate_load_summarize(self, tmp_path):
+        tel = self._recorded()
+        paths = tel.flush(str(tmp_path))
+        assert [p.rsplit("/", 1)[1] for p in paths] == [
+            "events.jsonl", "metrics.jsonl", "summary.json",
+        ]
+        counts = validate_dir(str(tmp_path))
+        assert counts["meta"] == 2
+        assert counts["span"] == 3
+        assert counts["event"] == 1
+        assert counts["metric"] == 3
+        meta, events, metrics = load_dir(str(tmp_path))
+        assert meta["run_id"] == "rt"
+        assert len(events) == 4 and len(metrics) == 3
+        summary = summarize(meta, events, metrics)
+        assert summary["run_id"] == "rt"
+        assert render(summary)  # renders without raising
+
+    def test_first_line_is_meta_with_schema(self, tmp_path):
+        self._recorded().flush(str(tmp_path))
+        for name in ("events.jsonl", "metrics.jsonl"):
+            with open(tmp_path / name) as f:
+                first = json.loads(f.readline())
+            assert first["kind"] == "meta"
+            assert first["schema"] == "repro.obs/v1"
+
+    def test_validator_rejects_malformed_lines(self, tmp_path):
+        with pytest.raises(TelemetryError, match="schema"):
+            validate_line({"kind": "meta", "schema": "bogus/v9"})
+        with pytest.raises(TelemetryError):
+            validate_line({"kind": "span", "id": -1})
+        self._recorded().flush(str(tmp_path))
+        with open(tmp_path / "events.jsonl", "a") as f:
+            f.write('{"kind": "span", "id": "nope"}\n')
+        with pytest.raises(TelemetryError, match="events.jsonl"):
+            validate_dir(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# overhead guard
+# ---------------------------------------------------------------------------
+class TestOffIsFree:
+    def test_disabled_records_nothing(self, tmp_path):
+        calls = []
+
+        def loud_clock():
+            calls.append(1)
+            return 0.0
+
+        tel = Telemetry("off", clock=loud_clock)
+        with tel.span("run", "r"):
+            with tel.trace_span("superstep", "s"):
+                tel.event("x")
+                tel.count("c")
+                tel.gauge("g", 1.0)
+                tel.observe("h", 1e-3)
+        assert tel.events() == []
+        assert tel.metrics.to_lines() == []
+        assert tel.suppressed == 6
+        assert calls == []            # disabled path never reads the clock
+        assert tel.flush(str(tmp_path)) == []
+        assert list(tmp_path.iterdir()) == []  # no artifact dir contents
+
+    def test_null_span_is_shared_singleton(self):
+        tel = Telemetry("off")
+        assert tel.span("run", "a") is tel.span("phase", "b")
+
+
+# ---------------------------------------------------------------------------
+# serve counters mirror scheduler/cache bookkeeping
+# ---------------------------------------------------------------------------
+class TestServeCounters:
+    def _net(self, seed=0, n=(18, 12, 9)):
+        from repro.core import HeteroNetwork
+
+        rng = np.random.default_rng(seed)
+        P = []
+        for ni in n:
+            a = (rng.random((ni, ni)) < 0.35) * rng.random((ni, ni))
+            np.fill_diagonal(a, 0)
+            P.append((a + a.T) / 2)
+        R = {(i, j): (rng.random((n[i], n[j])) < 0.3).astype(float)
+             for (i, j) in [(0, 1), (0, 2), (1, 2)]}
+        return HeteroNetwork(P=P, R=R)
+
+    def test_cache_and_batch_counters_match_stats(self):
+        from repro.core import LPConfig
+        from repro.serve import LPServeEngine, QuerySpec, ServeConfig
+
+        tel = Telemetry("metrics", run_id="serve-counters")
+        engine = LPServeEngine(
+            self._net(),
+            ServeConfig(
+                lp=LPConfig(alg="dhlp2", seed_mode="fixed", sigma=1e-6),
+                max_wait_s=1e-3, max_batch=4,
+            ),
+            telemetry=tel,
+        )
+        futs = [
+            engine.submit(QuerySpec(entity=e, target_type=2, top_k=3))
+            for e in range(6)
+        ]
+        engine.batcher.drain()
+        # repeat: the second pass should be pure cache hits
+        futs += [
+            engine.submit(QuerySpec(entity=e, target_type=2, top_k=3))
+            for e in range(6)
+        ]
+        engine.batcher.drain()
+        for f in futs:
+            f.result(timeout=60)
+
+        def counter(name):
+            return tel.metrics.counter(name).value
+
+        cache = engine.columns.stats
+        assert counter("serve.cache.misses") == cache.misses
+        assert counter("serve.cache.hits") == cache.hits
+        assert cache.hits >= 6
+        assert counter("serve.batches") == engine.batcher.stats.batches
+        assert counter("serve.completed") == engine.batcher.stats.completed
+        assert counter("serve.completed") == 12
+        # gauges tracked one sample per tick
+        depth = tel.metrics.gauge("serve.queue_depth")
+        occ = tel.metrics.gauge("serve.batch_occupancy")
+        assert len(depth.series) == engine.batcher.stats.batches
+        assert occ.series and max(v for _, v in occ.series) <= 1.0
+
+    def test_standalone_components_accept_no_telemetry(self):
+        """telemetry=None (the default) leaves serve components silent."""
+        from repro.core import LPConfig
+        from repro.serve import LPServeEngine, QuerySpec, ServeConfig
+
+        engine = LPServeEngine(
+            self._net(),
+            ServeConfig(
+                lp=LPConfig(alg="dhlp2", seed_mode="fixed", sigma=1e-6),
+                max_wait_s=1e-3,
+            ),
+        )
+        fut = engine.submit(QuerySpec(entity=0, target_type=2, top_k=3))
+        engine.batcher.drain()
+        assert fut.result(timeout=60).candidates.size > 0

@@ -1,4 +1,4 @@
-"""Baselines (MINProp/Heter-LP) and the sparse COO engine vs the dense one."""
+"""Baselines (MINProp/Heter-LP) and the blocked-CSR engine vs the dense one."""
 import numpy as np
 import pytest
 
@@ -10,7 +10,7 @@ from repro.core import (
     minprop_single_seed,
     run_all_seeds,
 )
-from repro.core.sparse import SparseHeteroLP
+from repro.engine import make_engine
 
 
 def rand_net(seed=1, n=(10, 8, 6), density=0.35):
@@ -76,20 +76,20 @@ class TestSparseEngine:
         cfg = LPConfig(alg=alg, seed_mode="fixed", sigma=1e-7,
                        max_iter=3000, max_inner=300)
         dense = HeteroLP(cfg).run(net)
-        sparse = SparseHeteroLP(cfg).run(norm, pad_mult=32)
+        sparse = make_engine("sparse", cfg).run(norm)
         np.testing.assert_allclose(dense.F, sparse.F, atol=1e-5)
 
     def test_drift_mode_matches_dense(self, net, norm):
         cfg = LPConfig(alg="dhlp2", sigma=1e-4)
         dense = HeteroLP(cfg).run(net)
-        sparse = SparseHeteroLP(cfg).run(norm, pad_mult=32)
+        sparse = make_engine("sparse", cfg).run(norm)
         np.testing.assert_allclose(dense.F, sparse.F, atol=1e-5)
 
     def test_seed_chunking(self, norm):
         cfg = LPConfig(alg="dhlp2", seed_mode="fixed", sigma=1e-6,
                        seed_chunk=7)
-        full = SparseHeteroLP(
-            LPConfig(alg="dhlp2", seed_mode="fixed", sigma=1e-6)
-        ).run(norm, pad_mult=32)
-        chunked = SparseHeteroLP(cfg).run(norm, pad_mult=32)
+        full = make_engine(
+            "sparse", LPConfig(alg="dhlp2", seed_mode="fixed", sigma=1e-6)
+        ).run(norm)
+        chunked = make_engine("sparse", cfg).run(norm)
         np.testing.assert_allclose(full.F, chunked.F, atol=1e-6)

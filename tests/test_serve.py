@@ -83,12 +83,12 @@ class TestWarmStartEquivalence:
         assert warm.outer_iters <= cold.outer_iters
 
     def test_sparse_engine_warm_start(self):
-        from repro.core.sparse import SparseHeteroLP
+        from repro.engine import make_engine
 
         net = small_net()
         norm = net.normalize()
         cfg = LPConfig(alg="dhlp2", seed_mode="fixed", sigma=SIGMA)
-        solver = SparseHeteroLP(cfg)
+        solver = make_engine("sparse", cfg)
         Y = np.eye(net.num_nodes)[:, [0]].astype(np.float32)
         cold = solver.run(norm, seeds=Y)
         warm = solver.run(norm, seeds=Y, F0=cold.F)
@@ -187,7 +187,7 @@ class TestSchedulerCoalescing:
 
     def test_operator_cache_keyed_by_identity(self):
         """Equal-by-value but distinct networks must not share operators."""
-        from repro.core.sparse import SparseHeteroLP
+        from repro.engine import make_engine
 
         net = small_net()
         cfg = LPConfig(alg="dhlp2", seed_mode="fixed", sigma=1e-4)
@@ -197,11 +197,10 @@ class TestSchedulerCoalescing:
         assert dense._device_arrays(n1) is a1       # same object: cached
         assert dense._device_arrays(n2) is not a1   # new object: rebuilt
         assert dense._cache[0] is n2                # entry keeps norm alive
-        sparse = SparseHeteroLP(cfg)
-        o1 = sparse._operator(n1, 64)
-        assert sparse._operator(n1, 64) is o1
-        assert sparse._operator(n1, 128) is not o1  # padding is part of key
-        assert sparse._operator(n2, 64) is not o1
+        sparse = make_engine("sparse", cfg)
+        o1 = sparse.prepare(n1)
+        assert sparse.prepare(n1) is o1             # same object: cached
+        assert sparse.prepare(n2) is not o1         # identity, not equality
 
     def test_solver_error_propagates_to_futures(self):
         batcher = MicroBatcher(
