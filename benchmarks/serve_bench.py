@@ -20,11 +20,18 @@ Trace-replay mode (DESIGN.md §12.3) drives the engine with a *scenario*
 workload instead of the fixed four phases: queries arrive on a real
 arrival process (poisson / bursty / diurnal), pace honored by the
 replay clock, and the scenario's timed GraphDelta stream (when it has
-one — ``streaming``) lands mid-trace.  Reports offered vs achieved QPS
-and p50/p95/p99 per process — the number that actually differs across
-processes is the tail.
+one — ``streaming``) lands mid-trace.  The default ``--time-scale``
+compresses the clock so hard the replay runs at *full offered load* —
+the queue saturates and the report measures the tier's ceiling, not the
+arrival pacing.  Each process replays twice: once through the pipelined
+tier (double-buffered ticks, sharded cache, early exit) and once
+through the synchronous-scheduler baseline (``pipeline_depth=1``,
+``cache_shards=1``, ``early_exit=False`` — the pre-pipeline serve
+loop), reporting achieved-vs-offered QPS, p99, and ``speedup_vs_sync``.
+An early-exit agreement check (strict in the BENCH record) verifies the
+per-column-halt solves match full-superstep solves.
 
-  PYTHONPATH=src python benchmarks/serve_bench.py --trace streaming
+  PYTHONPATH=src python benchmarks/serve_bench.py --trace diurnal
   PYTHONPATH=src python benchmarks/serve_bench.py --trace powerlaw \
       --scale 0.02 --rate-qps 80 --horizon 2 --processes poisson,bursty
 """
@@ -70,6 +77,27 @@ def _phase(engine, entities, top_k) -> Dict:
     return out
 
 
+def _serve_spec(args, **overrides) -> ServeSpec:
+    """The pipelined-tier ServeSpec from the CLI knobs (overridable)."""
+    early = {"auto": None, "on": True, "off": False}[
+        getattr(args, "early_exit", "auto")
+    ]
+    kw = dict(
+        max_batch=args.max_batch,
+        max_wait_ms=2.0,
+        pipeline_depth=getattr(args, "pipeline_depth", 2),
+        cache_shards=getattr(args, "cache_shards", 4),
+        early_exit=early,
+    )
+    kw.update(overrides)
+    return ServeSpec(**kw)
+
+
+#: The pre-pipeline synchronous scheduler, as a knob setting: one batch
+#: in flight, one global cache lock, full-superstep solves.
+SYNC_BASELINE = dict(pipeline_depth=1, cache_shards=1, early_exit=False)
+
+
 def _session(args, network: NetworkSpec, obs_level: str = "off") -> Session:
     """One resolved spec per bench invocation: the serve engines below
     share the session's prepared LP engine (DESIGN.md §13)."""
@@ -82,7 +110,7 @@ def _session(args, network: NetworkSpec, obs_level: str = "off") -> Session:
                 seed_mode="fixed",
                 backend=args.engine,
             ),
-            serve=ServeSpec(max_batch=args.max_batch, max_wait_ms=2.0),
+            serve=_serve_spec(args),
             obs=ObsSpec(level=obs_level) if obs_level != "off" else None,
         )
     )
@@ -146,12 +174,57 @@ def run(args) -> Dict[str, Dict]:
     return report
 
 
+def early_exit_agreement(session, *, entities, target_type, top_k) -> Dict:
+    """Strict gate: early-exit batch solves match full-superstep solves.
+
+    One coalesced batch of cold queries through each path (identical
+    inputs — empty caches, same spec order), compared on the solved
+    label columns.  Fixed-seed mode makes the two mathematically
+    identical up to iteration tolerance; the gate uses the same
+    tolerance the engine-matrix ``agree_dense`` gate does (5e-3).
+    """
+    tol = 5e-3
+    specs = [
+        QuerySpec(entity=int(e), target_type=target_type, top_k=top_k)
+        for e in entities
+    ]
+    if session.spec.resolved_solve().alg != "dhlp2":
+        return {"agreement": None, "skipped": "early exit is dhlp2-only"}
+    eng_full = session.serve_engine(_bench_sv(early_exit=False))
+    eng_ee = session.serve_engine(_bench_sv(early_exit=True))
+    res_full = eng_full._solve_batch(specs)
+    res_ee = eng_ee._solve_batch(specs)
+    diff = 0.0
+    for e in entities:
+        cf = eng_full.columns.get(0, int(e))
+        ce = eng_ee.columns.get(0, int(e))
+        diff = max(diff, float(np.max(np.abs(cf - ce))))
+    mean_full = float(np.mean([r.rounds for r in res_full]))
+    mean_ee = float(np.mean([r.rounds for r in res_ee]))
+    return {
+        "max_abs_diff": diff,
+        "tolerance": tol,
+        "agreement": 1.0 if diff <= tol else 0.0,
+        "mean_rounds_full": mean_full,
+        "mean_rounds_early_exit": mean_ee,
+    }
+
+
+def _bench_sv(**overrides) -> ServeSpec:
+    """A minimal one-batch-at-a-time ServeSpec for A/B solve checks."""
+    kw = dict(pipeline_depth=1, cache_shards=1, max_batch=64)
+    kw.update(overrides)
+    return ServeSpec(**kw)
+
+
 def run_trace(args) -> Dict[str, Dict]:
     """Replay mode: one report section per requested arrival process.
 
     The replay loop itself is the shared :func:`repro.serve.replay.
     replay_trace` — the same player ``Session.serve()`` runs for RunSpec
-    ``serve`` sections.
+    ``serve`` sections.  Unless ``--no-sync-compare``, every process
+    replays twice — synchronous baseline first, then the pipelined tier
+    — and the report carries ``speedup_vs_sync``.
     """
     import inspect
 
@@ -186,10 +259,6 @@ def run_trace(args) -> Dict[str, Dict]:
     processes = [p.strip() for p in args.processes.split(",") if p.strip()]
     report: Dict[str, Dict] = {}
     for process in processes:
-        # fresh serve engine per process (each replay starts cold and
-        # applies the delta stream from version 0) over the session's
-        # one prepared LP engine
-        engine = session.serve_engine()
         trace = sc.build_trace(
             bundle,
             process,
@@ -203,19 +272,54 @@ def run_trace(args) -> Dict[str, Dict]:
                 f"(rate_qps={args.rate_qps}, horizon={args.horizon}); "
                 "raise --rate-qps or --horizon"
             )
-        # warm the jit cache so the first arrival measures solving
-        engine.query(QuerySpec(
-            entity=int(trace.entity[0]), target_type=int(trace.target_type[0]),
-            top_k=args.top_k,
-        ))
-        engine.columns.clear()
-        report[process] = replay_trace(
-            engine,
-            trace,
-            bundle.deltas if args.apply_deltas else (),
-            top_k=args.top_k,
-            time_scale=args.time_scale,
-        )
+        deltas = bundle.deltas if args.apply_deltas else ()
+
+        def replay(sv) -> Dict:
+            # fresh serve engine per replay (each starts cold and applies
+            # the delta stream from version 0) over the session's one
+            # prepared LP engine; a throwaway query warms the jit cache
+            # so the first arrival measures solving
+            engine = session.serve_engine(sv)
+            engine.query(QuerySpec(
+                entity=int(trace.entity[0]),
+                target_type=int(trace.target_type[0]),
+                top_k=args.top_k,
+            ))
+            engine.columns.clear()
+            return replay_trace(
+                engine,
+                trace,
+                deltas,
+                top_k=args.top_k,
+                time_scale=args.time_scale,
+            )
+
+        if args.sync_compare:
+            # baseline FIRST so any shared jit warmup favors neither side
+            sync = replay(_serve_spec(args, **SYNC_BASELINE))
+            r = replay(_serve_spec(args))
+            r["sync"] = {
+                k: sync[k]
+                for k in ("qps", "achieved_vs_offered", "p50", "p95",
+                          "p99", "wall_s", "batches")
+            }
+            r["speedup_vs_sync"] = r["qps"] / sync["qps"]
+        else:
+            r = replay(_serve_spec(args))
+        report[process] = r
+
+    # the strict agreement gate rides along with every trace run (its own
+    # cold engine pair, not the replays above)
+    probe = sc.build_trace(
+        bundle, processes[0], rate_qps=args.rate_qps,
+        horizon_s=args.horizon, seed=args.seed,
+    )
+    report["early_exit_agreement"] = early_exit_agreement(
+        session,
+        entities=np.unique(probe.entity)[:32],
+        target_type=int(probe.target_type[0]),
+        top_k=args.top_k,
+    )
     return report
 
 
@@ -310,6 +414,46 @@ def records(fast: bool = True) -> List[BenchRecord]:
             stats=stats_from_samples(r["latencies"]).to_dict(),
             derived=derived,
         ))
+    # pipelined tier vs synchronous scheduler: the diurnal trace at full
+    # offered load (time_scale saturates the queue), achieved-vs-offered
+    # and p99 in the record, early-exit agreement as the strict gate.
+    # speedup_vs_sync is tracked, not hard-gated: wall-clock ratios on
+    # shared runners swing; the committed full-load run is the evidence.
+    targs = argparse.Namespace(
+        alg="dhlp2", sigma=1e-4, engine="sparse",
+        trace="bio_tri", scale=0.25 if fast else 1.0,
+        processes="diurnal",
+        rate_qps=120.0 if fast else 240.0,
+        horizon=3.0 if fast else 6.0,
+        time_scale=1000.0,
+        apply_deltas=True, no_cache=False,
+        top_k=10, max_batch=64, seed=0,
+        pipeline_depth=2, cache_shards=4, early_exit="auto",
+        sync_compare=True,
+    )
+    trep = run_trace(targs)
+    d = trep["diurnal"]
+    agree = trep["early_exit_agreement"]
+    out.append(BenchRecord(
+        suite="serve", name="trace_diurnal_pipelined", backend="sparse",
+        params={"scenario": targs.trace, "scale": targs.scale,
+                "rate_qps": targs.rate_qps, "horizon_s": targs.horizon,
+                "time_scale": targs.time_scale, "queries": d["queries"],
+                "pipeline_depth": targs.pipeline_depth,
+                "cache_shards": targs.cache_shards, "top_k": targs.top_k},
+        stats=stats_from_samples(d["latencies"]).to_dict(),
+        derived={
+            "achieved_qps": d["qps"],
+            "offered_qps": d["offered_qps"],
+            "achieved_vs_offered": d["achieved_vs_offered"],
+            "p99_ms": d["p99"] * 1e3,
+            "sync_p99_ms": d["sync"]["p99"] * 1e3,
+            "speedup_vs_sync": d["speedup_vs_sync"],
+            "early_exit_agreement": agree["agreement"],
+        },
+        strict=["early_exit_agreement"],
+    ))
+
     # obs-overhead A/B: telemetry must stay cheap (non-strict — wall-clock
     # noise on small bursts — but tracked across the trajectory)
     ab = run_obs_overhead(args)
@@ -354,33 +498,69 @@ def main() -> None:
     ap.add_argument("--trace", default=None, metavar="SCENARIO",
                     help="replay a generated query trace for this "
                          "registered scenario instead of the four phases")
-    ap.add_argument("--scale", type=float, default=0.5,
+    ap.add_argument("--scale", type=float, default=1.0,
                     help="scenario scale for --trace")
     ap.add_argument("--processes", default="poisson,bursty,diurnal",
                     help="comma-separated arrival processes to replay")
-    ap.add_argument("--rate-qps", type=float, default=40.0)
-    ap.add_argument("--horizon", type=float, default=3.0,
+    ap.add_argument("--rate-qps", type=float, default=240.0)
+    ap.add_argument("--horizon", type=float, default=6.0,
                     help="trace horizon in seconds")
-    ap.add_argument("--time-scale", type=float, default=1.0,
-                    help=">1 compresses the replay clock")
+    ap.add_argument("--time-scale", type=float, default=1000.0,
+                    help=">1 compresses the replay clock; the default "
+                         "saturates the queue (full offered load)")
     ap.add_argument("--no-deltas", dest="apply_deltas",
                     action="store_false",
                     help="skip the scenario's timed delta stream")
     ap.add_argument("--no-cache", action="store_true",
                     help="bypass the scenario disk cache for --trace")
+    # ---- pipelined-tier knobs
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="batches in flight (1 = synchronous tick)")
+    ap.add_argument("--cache-shards", type=int, default=4,
+                    help="independently-locked column-cache shards")
+    ap.add_argument("--early-exit", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="per-column convergence early exit in batch solves")
+    ap.add_argument("--no-sync-compare", dest="sync_compare",
+                    action="store_false",
+                    help="skip the synchronous-scheduler baseline replay")
     args = ap.parse_args()
 
     if args.trace:
+        import repro.scenarios as sc
+
+        if args.trace in sc.ARRIVAL_PROCESSES:
+            # convenience: `--trace diurnal` = the default scenario
+            # replayed on that one arrival process
+            args.processes = args.trace
+            args.trace = "bio_tri"
         report = run_trace(args)
+        agree = report.pop("early_exit_agreement", None)
         hdr = (f"{'process':<10}{'queries':>9}{'offered':>9}{'qps':>9}"
-               f"{'p50 ms':>9}{'p95 ms':>9}{'p99 ms':>9}{'deltas':>8}")
+               f"{'ach/off':>9}{'p50 ms':>9}{'p99 ms':>9}{'deltas':>8}"
+               f"{'vs sync':>9}")
         print(hdr)
         print("-" * len(hdr))
         for process, r in report.items():
+            speedup = (f"{r['speedup_vs_sync']:>8.2f}x"
+                       if "speedup_vs_sync" in r else f"{'—':>9}")
             print(f"{process:<10}{r['queries']:>9}"
                   f"{r['offered_qps']:>9.1f}{r['qps']:>9.1f}"
-                  f"{r['p50'] * 1e3:>9.2f}{r['p95'] * 1e3:>9.2f}"
-                  f"{r['p99'] * 1e3:>9.2f}{r['deltas_applied']:>8}")
+                  f"{r['achieved_vs_offered']:>9.3f}"
+                  f"{r['p50'] * 1e3:>9.2f}"
+                  f"{r['p99'] * 1e3:>9.2f}{r['deltas_applied']:>8}"
+                  f"{speedup}")
+        if agree is not None:
+            report["early_exit_agreement"] = agree
+            if agree.get("agreement") is not None:
+                status = "OK" if agree["agreement"] == 1.0 else "FAIL"
+                print(f"\nearly-exit agreement: {status} "
+                      f"(max |ΔF| = {agree['max_abs_diff']:.2e} ≤ "
+                      f"{agree['tolerance']:.0e}; rounds "
+                      f"{agree['mean_rounds_early_exit']:.1f} early-exit vs "
+                      f"{agree['mean_rounds_full']:.1f} full)")
+                assert agree["agreement"] == 1.0, \
+                    "early-exit solves must match full-superstep solves"
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(report, f, indent=2)

@@ -347,11 +347,14 @@ class Session:
         cfg = ServeConfig(
             lp=self.lp_config(),
             cache_columns=sv.cache_columns,
+            cache_shards=sv.cache_shards,
             warm_start=sv.warm_start,
             refresh_rounds=sv.refresh_rounds,
             max_batch=sv.max_batch,
             max_wait_s=sv.max_wait_ms / 1e3,
             queue_depth=sv.queue_depth,
+            pipeline_depth=sv.pipeline_depth,
+            early_exit=sv.resolved_early_exit(self.spec.resolved_solve()),
         )
         return LPServeEngine(
             self.network,
@@ -394,6 +397,7 @@ class Session:
                 self.bundle.deltas if sv.apply_deltas else (),
                 top_k=sv.top_k,
                 time_scale=sv.time_scale,
+                priority=sv.priority,
                 telemetry=self.telemetry,
             )
             mode = "trace"

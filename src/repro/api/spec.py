@@ -43,6 +43,9 @@ _SEED_MODES = (None, "fixed", "drift")
 _NETWORK_KINDS = ("scenario", "drugnet", "file")
 _EVAL_PROTOCOLS = ("recovery", "cv")
 _OBS_LEVELS = ("off", "metrics", "trace", "profile")
+# mirrors repro.serve.types.PRIORITY_CLASSES (this module stays
+# import-light; the sync is asserted by tests/test_api_spec.py)
+_PRIORITY_CLASSES = ("interactive", "refresh", "bulk")
 _DRYRUN_MESHES = ("single", "multi", "both")
 _RUN_ID_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
 
@@ -267,6 +270,13 @@ class ServeSpec:
     the legacy serve CLI used.  ``engine`` is redundant with
     ``solve.backend`` — setting both to different keys is a conflict
     (the session runs ONE engine across solve → eval → serve).
+
+    The pipelined-tier knobs default to production settings
+    (``pipeline_depth=2``, ``cache_shards=4``); library users
+    constructing a bare :class:`repro.serve.ServeConfig` get the
+    conservative synchronous defaults instead.  ``early_exit=None``
+    auto-enables per-column convergence early exit whenever the solve
+    section permits it (dhlp2, no momentum).
     """
 
     engine: Optional[str] = None
@@ -292,6 +302,11 @@ class ServeSpec:
     max_batch: int = 64
     max_wait_ms: float = 2.0
     queue_depth: int = 1024
+    # pipelined-tier knobs (DESIGN.md §9.1)
+    pipeline_depth: int = 2       # 1 = synchronous tick, 2 = double-buffered
+    cache_shards: int = 4         # independently-locked column-cache shards
+    early_exit: Optional[bool] = None  # None = auto (dhlp2 w/o momentum)
+    priority: str = "interactive"      # admission class for replayed queries
 
     def __post_init__(self) -> None:
         if self.trace is not None and (
@@ -329,12 +344,43 @@ class ServeSpec:
         _positive(self.max_batch, "serve.max_batch")
         _positive(self.max_wait_ms, "serve.max_wait_ms", strict=False)
         _positive(self.queue_depth, "serve.queue_depth")
+        _positive(self.pipeline_depth, "serve.pipeline_depth")
+        _positive(self.cache_shards, "serve.cache_shards")
+        if self.cache_shards > self.cache_columns:
+            raise SpecError(
+                f"serve.cache_shards={self.cache_shards} > "
+                f"serve.cache_columns={self.cache_columns}: every shard "
+                "needs at least one slot"
+            )
+        if self.early_exit is not None and not isinstance(
+            self.early_exit, bool
+        ):
+            raise SpecError(
+                f"serve.early_exit must be true/false/null, "
+                f"got {self.early_exit!r}"
+            )
+        if self.priority not in _PRIORITY_CLASSES:
+            raise SpecError(
+                f"serve.priority must be one of {_PRIORITY_CLASSES}, "
+                f"got {self.priority!r}"
+            )
 
     @classmethod
     def from_dict(cls, d: Any, path: str = "serve") -> "ServeSpec":
         d = _require_mapping(d, path)
         _check_keys(cls, d, path)
         return cls(**dict(d))
+
+    def resolved_early_exit(self, solve: "SolveSpec") -> bool:
+        """Whether batch solves run the per-column early-exit loop.
+
+        ``None`` auto-enables exactly when the solve section permits it:
+        dhlp2 (the loop rides the fused-round contract) without momentum
+        (the loop is the plain heavy-ball-free update).
+        """
+        if self.early_exit is not None:
+            return self.early_exit
+        return solve.alg == "dhlp2" and not solve.momentum
 
 
 @dataclasses.dataclass(frozen=True)
@@ -477,6 +523,20 @@ class RunSpec:
                     "serve requires solve.seed_mode='fixed' (warm starts "
                     "need the F0-independent fixed point, DESIGN.md §9)"
                 )
+            if self.serve.early_exit:
+                if solve.alg != "dhlp2":
+                    raise SpecError(
+                        "serve.early_exit=true requires solve.alg='dhlp2' "
+                        "(the per-column loop rides the fused DHLP-2 "
+                        "round contract)"
+                    )
+                if solve.momentum:
+                    raise SpecError(
+                        "serve.early_exit=true conflicts with "
+                        "solve.momentum — the early-exit loop is the "
+                        "plain heavy-ball-free update (set early_exit "
+                        "to false or null)"
+                    )
         if self.eval is not None and self.network.kind == "file":
             raise SpecError(
                 "eval sections need planted ground truth; "

@@ -219,6 +219,7 @@ class SparseCSREngine(LPEngine):
         super().__init__(config if config is not None else LPConfig())
         self.block_rows = block_rows
         self.width_mult = width_mult
+        self._round_jit = None  # built lazily; compiled per (F, Y) shape
 
     def _build(self, norm: NormalizedNetwork) -> Operator:
         cfg = self.config
@@ -327,10 +328,21 @@ class SparseCSREngine(LPEngine):
         beta2 = (1.0 - cfg.alpha) ** 2
         Fd = jnp.asarray(F, jnp.float32)
         Yd = jnp.asarray(Y, jnp.float32)
-        if self.use_kernel:
-            out = _bucket_round(fused, fused_inv, Fd, Yd, beta2=beta2)
-        else:
-            out = beta2 * Yd + _bucket_agg(fused, fused_inv, Fd)
+        if self._round_jit is None:
+            # one jitted program per (F, Y) shape instead of eager
+            # per-bucket dispatch — the serve tier's early-exit loop and
+            # hint refresh call round once per superstep, so per-call
+            # overhead is its hot path.  beta2 folds in as a constant
+            # (alpha is frozen per engine).
+            if self.use_kernel:
+                def _round_impl(buckets, inv, Fc, Yc):
+                    return _bucket_round(buckets, inv, Fc, Yc, beta2=beta2)
+            else:
+                def _round_impl(buckets, inv, Fc, Yc):
+                    return beta2 * Yc + _bucket_agg(buckets, inv, Fc)
+
+            self._round_jit = jax.jit(_round_impl)
+        out = self._round_jit(fused, fused_inv, Fd, Yd)
         return np.asarray(out, dtype=np.float64)
 
 

@@ -1,31 +1,17 @@
-"""DEPRECATED entry point — delegates to the unified driver.
+"""REMOVED entry point — see :mod:`repro.launch._removed`.
 
-The benchmark pass (historically ``python benchmarks/run.py``) now runs
-through the shared driver behind ``python -m repro run --bench`` /
-RunSpec ``bench`` sections (DESIGN.md §10/§13); this module forwards the
-legacy flag surface to the ``repro bench`` shim and warns.
-
-  PYTHONPATH=src python -m repro run --bench            # fast pass
-  PYTHONPATH=src python -m repro run --bench --full     # paper scale
+``python -m repro.launch.bench`` was a deprecation shim over the unified
+driver; the migration window has closed.  Use ``python -m repro run``
+(RunSpec, DESIGN.md §13) or ``python -m repro bench`` (legacy flags).
 """
 
 from __future__ import annotations
 
-import os
-import sys
-
-# sharded cells need fabricated host devices BEFORE any jax import —
-# same peek as benchmarks/run.py and repro/__main__.py
-_DEVICES = 8 if "--full" in sys.argv else 4
-os.environ.setdefault(
-    "XLA_FLAGS", f"--xla_force_host_platform_device_count={_DEVICES}"
-)
-
-from repro.launch.cli import bench_main  # noqa: E402
+from repro.launch._removed import removed_main
 
 
 def main() -> None:
-    sys.exit(bench_main(sys.argv[1:]))
+    removed_main("bench")
 
 
 if __name__ == "__main__":

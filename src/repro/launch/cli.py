@@ -8,14 +8,15 @@ thin argparse layer over that API:
 
 * ``run``       — the driver: a spec file, or flags that build one;
 * ``obs``       — render/validate a run's telemetry (DESIGN.md §14);
-* ``solve``     — DEPRECATED shim for the old ``repro.launch.solve``;
-* ``serve``     — DEPRECATED shim for the old ``repro.launch.serve``;
-* ``scenario``  — DEPRECATED shim for the old ``repro.launch.scenario``;
-* ``bench``     — DEPRECATED shim for ``benchmarks/run.py``.
+* ``solve``, ``serve``, ``scenario``, ``bench`` — legacy-surface
+  subcommands: the flag surfaces of the retired ``repro.launch.*``
+  module entry points, kept as positional subcommands.
 
-The shims keep their legacy flag surfaces, emit a ``DeprecationWarning``,
-build a RunSpec, and execute it through the same Session the driver
-uses — rankings are byte-identical to the scripts they replace.
+The legacy subcommands emit a ``DeprecationWarning``, build a RunSpec,
+and execute it through the same Session the driver uses — rankings are
+byte-identical to the scripts they replaced.  The old module entry
+points (``python -m repro.launch.solve`` etc.) are retired and exit
+with a migration hint (:mod:`repro.launch._removed`).
 """
 
 from __future__ import annotations
@@ -151,6 +152,30 @@ def _run_parser() -> argparse.ArgumentParser:
     ap.add_argument("--refresh-rounds", type=int, default=None)
     ap.add_argument("--max-batch", type=int, default=None)
     ap.add_argument(
+        "--pipeline-depth",
+        type=int,
+        default=None,
+        help="batches in flight (1 = synchronous tick, 2 = double-buffered)",
+    )
+    ap.add_argument(
+        "--cache-shards",
+        type=int,
+        default=None,
+        help="independently-locked column-cache shards",
+    )
+    ap.add_argument(
+        "--early-exit",
+        choices=("auto", "on", "off"),
+        default=None,
+        help="per-column convergence early exit in batch solves",
+    )
+    ap.add_argument(
+        "--priority",
+        choices=("interactive", "refresh", "bulk"),
+        default=None,
+        help="admission class stamped on replayed queries",
+    )
+    ap.add_argument(
         "--source-type",
         type=int,
         default=None,
@@ -272,12 +297,20 @@ def _build_spec_dict(args) -> Dict:
         ("time_scale", "time_scale"),
         ("refresh_rounds", "refresh_rounds"),
         ("max_batch", "max_batch"),
+        ("pipeline_depth", "pipeline_depth"),
+        ("cache_shards", "cache_shards"),
+        ("priority", "priority"),
         ("source_type", "source_type"),
         ("target_type", "target_type"),
     ):
         v = getattr(args, flag)
         if v is not None:
             srv[key] = v
+    if args.early_exit is not None:
+        # the tri-state maps onto ServeSpec.early_exit's None/bool
+        srv["early_exit"] = {"auto": None, "on": True, "off": False}[
+            args.early_exit
+        ]
 
     bench: Dict = {}
     if args.bench:
@@ -344,6 +377,8 @@ def _describe(art) -> List[str]:
         )
         if "offered_qps" in r:
             line += f"  offered={r['offered_qps']:.1f}"
+        if "achieved_vs_offered" in r:
+            line += f"  achieved/offered={r['achieved_vs_offered']:.2f}"
         src = ", ".join(f"{s}:{n}" for s, n in sorted(r["sources"].items()))
         return [line, f"[serve] sources: {src}"]
     if k == "bench":

@@ -1,24 +1,17 @@
-"""DEPRECATED entry point — delegates to the unified driver.
+"""REMOVED entry point — see :mod:`repro.launch._removed`.
 
-``python -m repro.launch.scenario`` listed/generated/solved named
-workloads.  The solve/CV cores now run as RunSpecs through the Session
-API (DESIGN.md §13); this module forwards its legacy flag surface to the
-``repro scenario`` shim and warns.
-
-  PYTHONPATH=src python -m repro run --network scenario:powerlaw \
-      --scale 0.05 --eval recovery --backend sparse
-  PYTHONPATH=src python -m repro scenario --list
+``python -m repro.launch.scenario`` was a deprecation shim over the unified
+driver; the migration window has closed.  Use ``python -m repro run``
+(RunSpec, DESIGN.md §13) or ``python -m repro scenario`` (legacy flags).
 """
 
 from __future__ import annotations
 
-import sys
-
-from repro.launch.cli import scenario_main
+from repro.launch._removed import removed_main
 
 
 def main() -> None:
-    sys.exit(scenario_main(sys.argv[1:]))
+    removed_main("scenario")
 
 
 if __name__ == "__main__":

@@ -1,25 +1,17 @@
-"""DEPRECATED entry point — delegates to the unified driver.
+"""REMOVED entry point — see :mod:`repro.launch._removed`.
 
-``python -m repro.launch.serve`` stood up the online query engine and
-played a synthetic zipf workload against it.  That workflow is now a
-RunSpec with a ``serve`` section executed by ``python -m repro run``
-(DESIGN.md §13); this module forwards its legacy flag surface to the
-``repro serve`` shim and warns.
-
-  PYTHONPATH=src python -m repro run --serve --requests 200
-  PYTHONPATH=src python -m repro run --serve --requests 2000 \
-      --backend sparse --zipf 1.2 --deltas 3 --max-batch 128
+``python -m repro.launch.serve`` was a deprecation shim over the unified
+driver; the migration window has closed.  Use ``python -m repro run``
+(RunSpec, DESIGN.md §13) or ``python -m repro serve`` (legacy flags).
 """
 
 from __future__ import annotations
 
-import sys
-
-from repro.launch.cli import serve_main
+from repro.launch._removed import removed_main
 
 
 def main() -> None:
-    sys.exit(serve_main(sys.argv[1:]))
+    removed_main("serve")
 
 
 if __name__ == "__main__":

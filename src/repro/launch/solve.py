@@ -1,25 +1,17 @@
-"""DEPRECATED entry point — delegates to the unified driver.
+"""REMOVED entry point — see :mod:`repro.launch._removed`.
 
-``python -m repro.launch.solve`` built the case-study network, ran
-DHLP-1/2 to σ-convergence, and printed the three outputs.  That workflow
-is now one declarative RunSpec executed by ``python -m repro run``
-(DESIGN.md §13); this module forwards its legacy flag surface to the
-``repro solve`` shim (same flags, same prints, byte-identical rankings)
-and warns.
-
-  PYTHONPATH=src python -m repro run --alg dhlp2 --sigma 1e-3 --top-k 20
-  PYTHONPATH=src python -m repro run --backend sharded --devices 2
+``python -m repro.launch.solve`` was a deprecation shim over the unified
+driver; the migration window has closed.  Use ``python -m repro run``
+(RunSpec, DESIGN.md §13) or ``python -m repro solve`` (legacy flags).
 """
 
 from __future__ import annotations
 
-import sys
-
-from repro.launch.cli import solve_main
+from repro.launch._removed import removed_main
 
 
 def main() -> None:
-    sys.exit(solve_main(sys.argv[1:]))
+    removed_main("solve")
 
 
 if __name__ == "__main__":

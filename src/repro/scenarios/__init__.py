@@ -3,7 +3,7 @@
 Named generators of heterogeneous-network workloads: each produces a
 :class:`ScenarioBundle` — network + planted truth + optional delta
 stream + optional serve query trace — behind a string-keyed registry,
-so benches, eval, serving, and the ``repro.launch.scenario`` CLI all
+so benches, eval, serving, and the ``repro scenario`` CLI all
 name workloads the same way the engine registry names backends.
 """
 from repro.scenarios.arrivals import (

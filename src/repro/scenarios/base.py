@@ -16,7 +16,7 @@ Builders register under a string key with
 ``fn(scale: float, seed: int, **kw) -> ScenarioBundle``; ``scale``
 multiplies the scenario's nominal size (node counts or target edges) so
 one registration serves both the CI fast pass (``scale << 1``) and the
-full-scale cell.  ``repro.launch.scenario`` lists/generates/solves them;
+full-scale cell.  ``repro scenario`` lists/generates/solves them;
 ``bench/matrix.py`` crosses them with the engine-backend registry.
 """
 from __future__ import annotations

@@ -5,30 +5,48 @@ network, solves every seed, and exits.  This package turns the same
 engines into a long-lived query service:
 
 * :class:`~repro.serve.scheduler.MicroBatcher` — coalesces pending queries
-  into one batched solve per tick (bounded queue = backpressure).
-* :class:`~repro.serve.cache.ColumnCache` — LRU of solved label columns;
-  repeat queries are cache hits, cold queries warm-start from cached
-  nearby columns.
+  into one batched solve per tick (bounded queue = backpressure), with
+  priority-class admission control and an optional pipelined mode where
+  the next batch assembles while the engine solves the current one.
+* :class:`~repro.serve.cache.ColumnCache` /
+  :class:`~repro.serve.cache.ShardedColumnCache` — LRU of solved label
+  columns (optionally split into independently-locked shards); repeat
+  queries are cache hits, cold queries warm-start from cached nearby
+  columns.
 * :class:`~repro.serve.engine.LPServeEngine` — the front-end: ranking via
   ``core/ranking.py``, incremental :class:`~repro.core.GraphDelta` updates
-  with stale-column warm restarts.
+  with stale-column warm restarts, and convergence-aware early exit
+  inside batch solves.
 """
-from repro.serve.cache import CacheStats, ColumnCache, NetworkState
+from repro.serve.cache import (
+    CacheStats,
+    ColumnCache,
+    NetworkState,
+    ShardedColumnCache,
+)
 from repro.serve.engine import LPServeEngine, ServeConfig
 from repro.serve.replay import play_zipf, replay_trace
 from repro.serve.scheduler import MicroBatcher, SchedulerStats
-from repro.serve.types import QueryResult, QuerySpec
+from repro.serve.types import (
+    DEFAULT_PRIORITY,
+    PRIORITY_CLASSES,
+    QueryResult,
+    QuerySpec,
+)
 
 __all__ = [
     "CacheStats",
     "ColumnCache",
+    "DEFAULT_PRIORITY",
     "LPServeEngine",
     "MicroBatcher",
     "NetworkState",
+    "PRIORITY_CLASSES",
     "QueryResult",
     "QuerySpec",
     "SchedulerStats",
     "ServeConfig",
+    "ShardedColumnCache",
     "play_zipf",
     "replay_trace",
 ]

@@ -1,6 +1,6 @@
 """Solver-state + label-column caches (DESIGN.md §9.2).
 
-Two levels:
+Three pieces:
 
 * :class:`NetworkState` — one per network *version*: the raw network, its
   normalization, and the per-node type/offset tables.  The solver engines
@@ -13,10 +13,17 @@ Two levels:
   (``stale``): the next solve for that node starts from the stale column
   instead of the seed vector, which is the delta-propagation trick — the
   fixed point moved a little, so the stale answer is a few rounds away.
+* :class:`ShardedColumnCache` — N independent ``ColumnCache`` shards, each
+  behind its own lock, routed by node id.  The pipelined scheduler's
+  assembly and completion stages probe/write concurrently; per-shard locks
+  keep eviction and warm-start lookup from serializing on one global
+  mutex.  ``shards=1`` is behaviorally identical to a single
+  ``ColumnCache`` (tested), so the sharding is purely a concurrency knob.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
@@ -88,7 +95,13 @@ class ColumnCache:
     version — not servable, but the warm-start seed for the next solve.
     """
 
-    def __init__(self, capacity: int = 4096, *, telemetry=None):
+    def __init__(
+        self,
+        capacity: int = 4096,
+        *,
+        telemetry=None,
+        shard_id: Optional[int] = None,
+    ):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
@@ -96,24 +109,32 @@ class ColumnCache:
         self._stale: Dict[int, np.ndarray] = {}
         self.stats = CacheStats()
         # mirrors the CacheStats increments into serve.cache.* counters
-        # (DESIGN.md §14.2); None = uninstrumented standalone use
+        # (DESIGN.md §14.2); None = uninstrumented standalone use.  A
+        # shard of a ShardedColumnCache additionally mirrors hit/miss
+        # into serve.cache.shard<i>.* so per-shard balance is observable.
         self._tel = telemetry
+        self._shard_id = shard_id
 
     def __len__(self) -> int:
         return len(self._lru)
+
+    def _count(self, short: str, n: int = 1, *, per_shard: bool = False) -> None:
+        if self._tel is None:
+            return
+        self._tel.count(f"serve.cache.{short}", n)
+        if per_shard and self._shard_id is not None:
+            self._tel.count(f"serve.cache.shard{self._shard_id}.{short}", n)
 
     def get(self, version: int, node: int) -> Optional[np.ndarray]:
         key = (version, node)
         col = self._lru.get(key)
         if col is None:
             self.stats.misses += 1
-            if self._tel is not None:
-                self._tel.count("serve.cache.misses")
+            self._count("misses", per_shard=True)
             return None
         self._lru.move_to_end(key)
         self.stats.hits += 1
-        if self._tel is not None:
-            self._tel.count("serve.cache.hits")
+        self._count("hits", per_shard=True)
         return col
 
     def put(self, version: int, node: int, col: np.ndarray) -> None:
@@ -124,8 +145,7 @@ class ColumnCache:
         while len(self._lru) > self.capacity:
             self._lru.popitem(last=False)
             self.stats.evictions += 1
-            if self._tel is not None:
-                self._tel.count("serve.cache.evictions")
+            self._count("evictions")
 
     # ---------------------------------------------------------- warm starts
     def stale_hint(self, node: int) -> Optional[np.ndarray]:
@@ -177,10 +197,130 @@ class ColumnCache:
             self.stats.invalidations += 1
             demoted += 1
         self.stats.warm_hints = len(self._stale)
-        if self._tel is not None and demoted:
-            self._tel.count("serve.cache.invalidations", demoted)
+        if demoted:
+            self._count("invalidations", demoted)
         return demoted
 
     def clear(self) -> None:
         self._lru.clear()
         self._stale.clear()
+
+
+class ShardedColumnCache:
+    """``ColumnCache`` split into N independently-locked shards.
+
+    Keys route by ``node % shards`` (the version is deliberately NOT in
+    the routing key, so a node's fresh columns and its stale warm-start
+    hint always live in the same shard).  Each shard holds
+    ``ceil(capacity / shards)`` columns, so total capacity is preserved
+    and, with one shard, eviction order is identical to the flat LRU.
+
+    Exposes the same surface as :class:`ColumnCache` — the serve engine
+    treats the two interchangeably — plus an aggregated ``stats`` view.
+    """
+
+    def __init__(
+        self, capacity: int = 4096, *, shards: int = 1, telemetry=None
+    ):
+        if shards < 1:
+            raise ValueError("shards must be >= 1")
+        if capacity < shards:
+            raise ValueError(
+                f"capacity {capacity} < shards {shards}: every shard "
+                "needs at least one slot"
+            )
+        self.capacity = capacity
+        self.shards = shards
+        per_shard = -(-capacity // shards)  # ceil
+        self._shards: List[ColumnCache] = [
+            ColumnCache(
+                per_shard,
+                telemetry=telemetry,
+                shard_id=(i if shards > 1 else None),
+            )
+            for i in range(shards)
+        ]
+        self._locks = [threading.Lock() for _ in range(shards)]
+
+    def _shard(self, node: int) -> Tuple[ColumnCache, threading.Lock]:
+        i = node % self.shards
+        return self._shards[i], self._locks[i]
+
+    def __len__(self) -> int:
+        return sum(len(s) for s in self._shards)
+
+    @property
+    def stats(self) -> CacheStats:
+        """Aggregated snapshot across shards (same fields as the flat LRU)."""
+        agg = CacheStats()
+        for s in self._shards:
+            agg.hits += s.stats.hits
+            agg.misses += s.stats.misses
+            agg.evictions += s.stats.evictions
+            agg.invalidations += s.stats.invalidations
+            agg.warm_hints += s.stats.warm_hints
+        return agg
+
+    def shard_stats(self) -> List[CacheStats]:
+        return [s.stats for s in self._shards]
+
+    def get(self, version: int, node: int) -> Optional[np.ndarray]:
+        shard, lock = self._shard(node)
+        with lock:
+            return shard.get(version, node)
+
+    def put(self, version: int, node: int, col: np.ndarray) -> None:
+        shard, lock = self._shard(node)
+        with lock:
+            shard.put(version, node, col)
+
+    def stale_hint(self, node: int) -> Optional[np.ndarray]:
+        shard, lock = self._shard(node)
+        with lock:
+            return shard.stale_hint(node)
+
+    def put_stale(self, node: int, col: np.ndarray) -> None:
+        shard, lock = self._shard(node)
+        with lock:
+            shard.put_stale(node, col)
+
+    def stale_nodes(self) -> List[int]:
+        out: List[int] = []
+        for shard, lock in zip(self._shards, self._locks):
+            with lock:
+                out.extend(shard.stale_nodes())
+        return out
+
+    def cached_nodes(self, version: int) -> List[int]:
+        out: List[int] = []
+        for shard, lock in zip(self._shards, self._locks):
+            with lock:
+                out.extend(shard.cached_nodes(version))
+        return out
+
+    def invalidate_for_delta(
+        self,
+        old_version: int,
+        new_version: int,
+        touched_types: frozenset,
+        type_of: np.ndarray,
+        remap=None,
+        carry_untouched: bool = True,
+    ) -> int:
+        demoted = 0
+        for shard, lock in zip(self._shards, self._locks):
+            with lock:
+                demoted += shard.invalidate_for_delta(
+                    old_version,
+                    new_version,
+                    touched_types,
+                    type_of,
+                    remap=remap,
+                    carry_untouched=carry_untouched,
+                )
+        return demoted
+
+    def clear(self) -> None:
+        for shard, lock in zip(self._shards, self._locks):
+            with lock:
+                shard.clear()

@@ -10,6 +10,22 @@ Layers the dense/sparse batched solvers behind a query interface:
   queries re-converge from the stale state (delta propagation) instead of
   from scratch.
 
+The batch tick is split into two stages so the scheduler can pipeline
+them (DESIGN.md §9.1):
+
+* :meth:`_assemble_batch` — queue-side, cheap: snapshot the network
+  state, probe the (sharded) column cache, build the seed/warm-start
+  matrices for the misses.  Runs WITHOUT the engine lock; the cache's
+  per-shard locks are its only synchronization.
+* :meth:`_execute_batch` — engine-side, the long pole: one batched solve
+  for the misses, cache write-back, per-request ranking.  Serialized
+  against ``apply_delta`` by the engine lock.
+
+A delta landing between the two stages is benign: the solve runs against
+the *assembled* snapshot (consistent answers, correct version stamp) and
+the write-back demotes to a warm-start hint instead of publishing a
+column under the wrong version.
+
 Serving always runs the solver in **fixed-seed mode**: the fixed point
 ``F* = β²(I − A)⁻¹Y`` is then independent of the iteration's starting
 state, which is exactly the property warm-starting relies on.
@@ -25,9 +41,9 @@ import numpy as np
 
 from repro.core.network import GraphDelta, HeteroNetwork
 from repro.core.ranking import topk_exclusive
-from repro.core.solver import LPConfig
+from repro.core.solver import LPConfig, SolveResult
 from repro.engine import make_engine, resolve_backend
-from repro.serve.cache import ColumnCache, NetworkState
+from repro.serve.cache import NetworkState, ShardedColumnCache
 from repro.serve.scheduler import MicroBatcher
 from repro.serve.types import QueryResult, QuerySpec
 
@@ -45,6 +61,7 @@ class ServeConfig:
     # lp.backend to different keys is a conflict, not a silent precedence.
     engine: Optional[str] = None
     cache_columns: int = 4096        # column-LRU capacity
+    cache_shards: int = 1            # independently-locked cache shards
     warm_start: bool = True          # neighbor/stale warm starts
     carry_untouched: bool = True     # keep untouched-type columns on delta
     # after a delta, advance demoted stale hints this many fused LP rounds
@@ -55,6 +72,15 @@ class ServeConfig:
     max_batch: int = 64
     max_wait_s: float = 0.005
     queue_depth: int = 1024
+    # batches in flight between assembly start and future resolution; 1 =
+    # the synchronous tick, 2 = double-buffered (assemble next while the
+    # engine solves current)
+    pipeline_depth: int = 1
+    # convergence-aware batch solves: per-column residual checks drop
+    # converged columns from subsequent rounds (the BSP no-activity halt,
+    # per column).  dhlp2 + no momentum only — the loop is built on the
+    # engine.round contract.
+    early_exit: bool = False
 
     def resolved_engine(self) -> str:
         """Backend key serving will use (before any ``auto`` resolution)."""
@@ -109,6 +135,46 @@ class ServeConfig:
                 "serving requires fixed-seed mode "
                 "(LPConfig(seed_mode='fixed'))"
             )
+        if self.pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
+        if self.cache_shards < 1:
+            raise ValueError("cache_shards must be >= 1")
+        if self.cache_shards > self.cache_columns:
+            raise ValueError(
+                f"cache_shards={self.cache_shards} > "
+                f"cache_columns={self.cache_columns}: every shard needs "
+                "at least one slot"
+            )
+        if self.early_exit and self.lp.alg != "dhlp2":
+            raise ValueError(
+                "early_exit requires alg='dhlp2' (the per-column residual "
+                "loop is built on the fused DHLP-2 engine.round contract)"
+            )
+        if self.early_exit and self.lp.momentum:
+            raise ValueError(
+                "early_exit and momentum are mutually exclusive — the "
+                "early-exit round loop is the plain heavy-ball-free update"
+            )
+
+
+@dataclasses.dataclass
+class PreparedBatch:
+    """Everything stage 2 needs, snapshotted by stage 1.
+
+    ``state`` pins the network version the batch was assembled against;
+    the solve and the ranking both use it, so a mid-flight delta cannot
+    split one batch across two versions.
+    """
+
+    state: NetworkState
+    specs: List[QuerySpec]
+    cols: Dict[int, Optional[np.ndarray]]   # entity -> column (None = miss)
+    sources: Dict[int, str]
+    rounds: Dict[int, int]
+    miss_nodes: List[int]
+    Y: Optional[np.ndarray]                 # (N, misses) seed columns
+    F0: Optional[np.ndarray]                # warm/seed starting state
+    warm: List[bool]                        # per miss: warm-started?
 
 
 class LPServeEngine:
@@ -150,16 +216,24 @@ class LPServeEngine:
             self._engine = engine
         else:
             self._engine = make_engine(backend, config.lp)
-        self.columns = ColumnCache(config.cache_columns, telemetry=telemetry)
+        self.columns = ShardedColumnCache(
+            config.cache_columns,
+            shards=config.cache_shards,
+            telemetry=telemetry,
+        )
         self.batcher = MicroBatcher(
             self._solve_batch,
             max_batch=config.max_batch,
             max_wait_s=config.max_wait_s,
             queue_depth=config.queue_depth,
+            pipeline_depth=config.pipeline_depth,
+            assemble=self._assemble_batch,
+            execute=self._execute_batch,
             telemetry=telemetry,
         )
-        # one solve/update at a time: the solvers' operator caches and the
-        # column LRU are not concurrency-safe on their own
+        # one solve/update at a time: the engines' prepared-operator caches
+        # are single-entry and not concurrency-safe; the sharded column
+        # cache carries its own locks, so assembly stays outside this lock
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------ accessors
@@ -172,14 +246,13 @@ class LPServeEngine:
         return self._state.version
 
     # -------------------------------------------------------------- queries
-    def _validate(self, spec: QuerySpec) -> None:
+    def _validate(self, spec: QuerySpec, state: NetworkState) -> None:
         """Reject bad specs at the edge, before they join a batch.
 
         A bad spec inside a coalesced batch would fail every co-batched
         request; validity is stable once checked — the node-id space only
         ever grows (``GraphDelta.add_nodes``) and the type count is fixed.
         """
-        state = self._state
         if not 0 <= spec.entity < state.num_nodes:
             raise ValueError(
                 f"entity {spec.entity} out of range [0,{state.num_nodes})"
@@ -189,7 +262,7 @@ class LPServeEngine:
 
     def submit(self, spec: QuerySpec, **kw) -> "Future[QueryResult]":
         """Enqueue for the micro-batcher (needs ``start()`` or ``drain()``)."""
-        self._validate(spec)
+        self._validate(spec, self._state)
         return self.batcher.submit(spec, **kw)
 
     def query(self, spec: QuerySpec) -> QueryResult:
@@ -202,21 +275,16 @@ class LPServeEngine:
     def stop(self) -> None:
         self.batcher.stop()
 
-    # ------------------------------------------------------------- the tick
-    def _solve_batch(self, specs: Sequence[QuerySpec]) -> List[QueryResult]:
-        with self._lock:
-            return self._solve_batch_locked(specs)
-
-    def _solve_batch_locked(
-        self, specs: Sequence[QuerySpec]
-    ) -> List[QueryResult]:
-        state = self._state
+    # ------------------------------------------------------ stage 1: assemble
+    def _assemble_batch(self, specs: Sequence[QuerySpec]) -> PreparedBatch:
+        """Cache probe + seed/warm-start assembly (no engine lock)."""
+        state = self._state  # one atomic snapshot for the whole batch
         n = state.num_nodes
         for spec in specs:
-            self._validate(spec)  # no-op for specs vetted at submit()
+            self._validate(spec, state)  # no-op for specs vetted at submit()
 
-        # 1. split hits from misses; dedupe miss columns within the batch
-        cols: Dict[int, np.ndarray] = {}
+        # split hits from misses; dedupe miss columns within the batch
+        cols: Dict[int, Optional[np.ndarray]] = {}
         sources: Dict[int, str] = {}
         rounds: Dict[int, int] = {}
         miss_nodes: List[int] = []
@@ -230,21 +298,21 @@ class LPServeEngine:
                 sources[node] = "cache"
                 rounds[node] = 0
             else:
-                cols[node] = None  # placeholder, solved below
+                cols[node] = None  # placeholder, solved in stage 2
                 miss_nodes.append(node)
 
-        # 2. one batched solve for every miss column
+        Y = F0 = None
+        warm: List[bool] = []
         if miss_nodes:
             warm_index = (
-                self._cached_by_type() if self.config.warm_start else {}
+                self._cached_by_type(state) if self.config.warm_start else {}
             )
             Y = np.zeros((n, len(miss_nodes)), dtype=np.float64)
             F0 = np.zeros_like(Y)
-            warm = []
             for c, node in enumerate(miss_nodes):
                 Y[node, c] = 1.0
                 hint = (
-                    self._warm_hint(node, warm_index)
+                    self._warm_hint(node, warm_index, state)
                     if self.config.warm_start
                     else None
                 )
@@ -254,38 +322,128 @@ class LPServeEngine:
                 else:
                     F0[:, c] = Y[:, c]
                     warm.append(False)
-            result = self._run_solver(Y, F0)
-            per_col = (
-                result.per_column_iters
-                if result.per_column_iters is not None
-                else np.full(len(miss_nodes), result.outer_iters, np.int32)
+        return PreparedBatch(
+            state=state, specs=list(specs), cols=cols, sources=sources,
+            rounds=rounds, miss_nodes=miss_nodes, Y=Y, F0=F0, warm=warm,
+        )
+
+    # ------------------------------------------------------- stage 2: execute
+    def _execute_batch(self, prepared: PreparedBatch) -> List[QueryResult]:
+        """Batched solve + cache write-back + ranking (engine lock held)."""
+        with self._lock:
+            state = prepared.state
+            cols, sources, rounds = (
+                prepared.cols, prepared.sources, prepared.rounds,
             )
-            for c, node in enumerate(miss_nodes):
-                col = result.F[:, c]
-                cols[node] = col
-                sources[node] = "warm" if warm[c] else "cold"
-                rounds[node] = int(per_col[c])
-                self.columns.put(state.version, node, col)
+            if prepared.miss_nodes:
+                result = self._run_solver(state, prepared.Y, prepared.F0)
+                per_col = (
+                    result.per_column_iters
+                    if result.per_column_iters is not None
+                    else np.full(
+                        len(prepared.miss_nodes), result.outer_iters, np.int32
+                    )
+                )
+                # a delta may have landed after assembly: publishing under
+                # state.version would be a dead key, so demote to a
+                # warm-start hint instead (same treatment the delta gives
+                # live columns)
+                stale = self._state.version != state.version
+                for c, node in enumerate(prepared.miss_nodes):
+                    col = result.F[:, c]
+                    cols[node] = col
+                    sources[node] = "warm" if prepared.warm[c] else "cold"
+                    rounds[node] = int(per_col[c])
+                    if stale:
+                        self.columns.put_stale(node, col)
+                    else:
+                        self.columns.put(state.version, node, col)
+            return [
+                self._rank(spec, cols[spec.entity], sources[spec.entity],
+                           rounds[spec.entity], state)
+                for spec in prepared.specs
+            ]
 
-        # 3. rank per request
-        return [self._rank(spec, cols[spec.entity], sources[spec.entity],
-                           rounds[spec.entity]) for spec in specs]
+    # ------------------------------------------------------------- the tick
+    def _solve_batch(self, specs: Sequence[QuerySpec]) -> List[QueryResult]:
+        """One-stage tick: the synchronous drivers' (and tests') path."""
+        return self._execute_batch(self._assemble_batch(specs))
 
-    def _run_solver(self, Y: np.ndarray, F0: np.ndarray):
+    def _run_solver(
+        self, state: NetworkState, Y: np.ndarray, F0: np.ndarray
+    ) -> SolveResult:
         # every registered engine caches its prepared operator on the
         # normalized network's identity, so repeat batches skip re-assembly
-        return self._engine.run(self._state.norm, seeds=Y, F0=F0)
+        if self.config.early_exit:
+            return self._solve_early_exit(state, Y, F0)
+        return self._engine.run(state.norm, seeds=Y, F0=F0)
 
-    def _cached_by_type(self) -> Dict[int, List[int]]:
+    def _solve_early_exit(
+        self, state: NetworkState, Y: np.ndarray, F0: np.ndarray
+    ) -> SolveResult:
+        """Batched solve with per-column convergence early exit.
+
+        The BSP no-activity halt, per column: after each fused round the
+        per-column residual ``max|F_{t+1} − F_t|`` is checked against σ
+        and converged columns leave the active set — subsequent rounds
+        run a strictly narrower matmul.  Fixed-seed mode makes this exact
+        (each column's fixed point is independent of its co-batch), so
+        the result matches the full-superstep solve to iteration
+        tolerance; dtype is float64 end to end via ``engine.round``.
+
+        The active width is padded up to the next power of two with zero
+        columns (a zero seed + zero state is a fixed point, so the pad
+        is inert) — the jitted round then compiles at most
+        ``log2(max_batch)`` programs total, where per-exact-width shapes
+        would recompile on nearly every narrowing.  This also bounds the
+        compile set across batches: the legacy full-superstep solver
+        retraces its whole while-loop program for every distinct
+        miss-count a tick produces.
+        """
+        cfg = self.config.lp
+        op = self._engine.prepare(state.norm)
+        n = F0.shape[0]
+        F = np.array(F0, dtype=np.float64)
+        Y = np.asarray(Y, dtype=np.float64)
+        k = F.shape[1]
+        col_iters = np.zeros(k, dtype=np.int32)
+        active = np.arange(k)
+        it = 0
+        while active.size and it < cfg.max_iter:
+            a = int(active.size)
+            width = 1 << (a - 1).bit_length()  # next power of two
+            Fa = np.zeros((n, width), dtype=np.float64)
+            Ya = np.zeros((n, width), dtype=np.float64)
+            Fa[:, :a] = F[:, active]
+            Ya[:, :a] = Y[:, active]
+            Fn = np.asarray(
+                self._engine.round(op, Fa, Ya), dtype=np.float64
+            )[:, :a]
+            delta = np.max(np.abs(Fn - F[:, active]), axis=0)
+            F[:, active] = Fn
+            col_iters[active] += 1
+            active = active[delta >= cfg.sigma]
+            it += 1
+        return SolveResult(
+            F=F,
+            outer_iters=int(col_iters.max(initial=0)),
+            inner_iters=0,
+            converged=(active.size == 0),
+            per_column_iters=col_iters,
+        )
+
+    def _cached_by_type(self, state: NetworkState) -> Dict[int, List[int]]:
         """Group the current version's cached nodes by type, once per tick."""
-        state = self._state
         by_type: Dict[int, List[int]] = {}
         for other in self.columns.cached_nodes(state.version):
             by_type.setdefault(int(state.type_of[other]), []).append(other)
         return by_type
 
     def _warm_hint(
-        self, node: int, by_type: Dict[int, List[int]]
+        self,
+        node: int,
+        by_type: Dict[int, List[int]],
+        state: NetworkState,
     ) -> Optional[np.ndarray]:
         """Warm-start column for a cold node.
 
@@ -295,9 +453,8 @@ class LPServeEngine:
         one vectorized similarity-row lookup, not a per-node scan).
         """
         stale = self.columns.stale_hint(node)
-        if stale is not None and stale.shape[0] == self._state.num_nodes:
+        if stale is not None and stale.shape[0] == state.num_nodes:
             return stale
-        state = self._state
         t, u = state.local_id(node)
         cands = [o for o in by_type.get(t, ()) if o != node]
         if not cands:
@@ -310,9 +467,13 @@ class LPServeEngine:
 
     # -------------------------------------------------------------- ranking
     def _rank(
-        self, spec: QuerySpec, col: np.ndarray, source: str, rounds: int
+        self,
+        spec: QuerySpec,
+        col: np.ndarray,
+        source: str,
+        rounds: int,
+        state: NetworkState,
     ) -> QueryResult:
-        state = self._state
         t_ent, u = state.local_id(spec.entity)
         tt = spec.target_type
         off = state.offsets[tt]

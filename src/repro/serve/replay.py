@@ -9,7 +9,7 @@ legacy serve CLI shim, and ``benchmarks/serve_bench.py``:
   scenario's timed GraphDelta stream between the submissions each delta
   precedes, exactly as a live feed would interleave them;
 * :func:`play_zipf` — the synthetic zipf-popularity workload the
-  original ``repro.launch.serve`` CLI played: skewed repeat queries
+  original standalone serve CLI played: skewed repeat queries
   over one source type, with optional random association deltas
   interleaved at even intervals.
 """
@@ -23,7 +23,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core.network import GraphDelta
-from repro.serve.types import QuerySpec, percentiles
+from repro.serve.types import DEFAULT_PRIORITY, QuerySpec, percentiles
 
 
 def _sample(result) -> Dict:
@@ -38,13 +38,24 @@ def _sample(result) -> Dict:
 
 
 def replay_trace(
-    engine, trace, deltas, *, top_k: int, time_scale: float, telemetry=None
+    engine,
+    trace,
+    deltas,
+    *,
+    top_k: int,
+    time_scale: float,
+    priority: str = DEFAULT_PRIORITY,
+    telemetry=None,
 ) -> Dict:
     """Submit ``trace`` through the micro-batcher at its own pace.
 
     ``time_scale > 1`` compresses the clock (a 4s horizon replays in
     4/scale seconds — same arrival *pattern*, proportionally higher
-    offered rate).
+    offered rate).  ``priority`` stamps every replayed query with an
+    admission class.  The report includes ``achieved_vs_offered`` — the
+    fraction of the offered rate the tier actually sustained (1.0 means
+    it kept pace; lower means the trace outran it and queueing delay
+    stretched the wall clock).
     """
     deltas = sorted(deltas, key=lambda d: d.t)
     di = 0
@@ -70,6 +81,7 @@ def replay_trace(
                     entity=int(trace.entity[i]),
                     target_type=int(trace.target_type[i]),
                     top_k=top_k,
+                    priority=priority,
                 )
             )
         )
@@ -81,10 +93,13 @@ def replay_trace(
         for lat in lats:
             telemetry.observe("serve.latency_s", lat)
     sources = [r.source for r in results]
+    offered = len(trace) / (trace.horizon_s / time_scale)
+    achieved = len(results) / wall
     out = {
         "queries": len(results),
-        "offered_qps": len(trace) / (trace.horizon_s / time_scale),
-        "qps": len(results) / wall,
+        "offered_qps": offered,
+        "qps": achieved,
+        "achieved_vs_offered": achieved / offered if offered else 0.0,
         "wall_s": wall,
         "deltas_applied": di,
         "mean_rounds": float(np.mean([r.rounds for r in results])),

@@ -6,6 +6,12 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+#: Admission/drain classes, highest priority first (DESIGN.md §9.1).
+#: ``interactive`` is user-facing traffic, ``refresh`` is post-delta
+#: re-convergence work, ``bulk`` is offline backfill.
+PRIORITY_CLASSES = ("interactive", "refresh", "bulk")
+DEFAULT_PRIORITY = "interactive"
+
 
 @dataclasses.dataclass(frozen=True)
 class QuerySpec:
@@ -13,7 +19,8 @@ class QuerySpec:
     ``entity``" (the paper's step G, per-entity candidate list).
 
     ``entity`` is a *global* node id; ``target_type`` the type index whose
-    block is ranked (e.g. targets for a drug).
+    block is ranked (e.g. targets for a drug).  ``priority`` selects the
+    admission/drain class (``interactive`` > ``refresh`` > ``bulk``).
     """
 
     entity: int
@@ -22,6 +29,7 @@ class QuerySpec:
     # serve known-associated entities too (default: exclude them — they
     # would trivially top every repositioning list)
     include_known: bool = False
+    priority: str = DEFAULT_PRIORITY
 
 
 @dataclasses.dataclass

@@ -118,19 +118,32 @@ def test_file_network_round_trip(tmp_path):
         Session(spec).evaluate()
 
 
-# ----------------------------------------------------------------- shims
-def _run_shim(main_fn, argv, monkeypatch):
-    import sys
+# ------------------------------------------------- retired launch shims
+@pytest.mark.parametrize("name", ["solve", "serve", "scenario", "bench"])
+def test_launch_module_entry_points_removed(name, capsys):
+    """The ``repro.launch.*`` module shims are retired: they exit 2 with
+    a migration hint instead of forwarding."""
+    import importlib
 
-    monkeypatch.setattr(sys, "argv", ["prog"] + argv)
+    mod = importlib.import_module(f"repro.launch.{name}")
+    with pytest.raises(SystemExit) as exc:
+        mod.main()
+    assert exc.value.code == 2
+    err = capsys.readouterr().err
+    assert f"repro.launch.{name} has been removed" in err
+    assert "repro run" in err
+    assert f"repro {name}" in err
+
+
+# ------------------------------------------- legacy-surface subcommands
+def _run_shim(main_fn, argv):
     with pytest.warns(DeprecationWarning, match="repro run"):
-        with pytest.raises(SystemExit) as exc:
-            main_fn()
-    assert exc.value.code in (0, None)
+        rc = main_fn(argv)
+    assert rc == 0
 
 
-def test_solve_shim_identical_to_spec_driver(tmp_path, monkeypatch):
-    from repro.launch import solve as launch_solve
+def test_solve_shim_identical_to_spec_driver(tmp_path):
+    from repro.launch.cli import solve_main
 
     out = str(tmp_path / "shim.npz")
     argv = [
@@ -138,7 +151,7 @@ def test_solve_shim_identical_to_spec_driver(tmp_path, monkeypatch):
         "--sigma", "1e-3", "--backend", "dense", "--top-k", "5",
         "--out", out,
     ]
-    _run_shim(launch_solve.main, argv, monkeypatch)
+    _run_shim(solve_main, argv)
 
     art = Session(tiny_spec()).solve()
     shim = np.load(out)
@@ -153,26 +166,26 @@ def test_solve_shim_identical_to_spec_driver(tmp_path, monkeypatch):
     assert art.ranking["candidates"] == [int(x) for x in order]
 
 
-def test_serve_shim_runs_and_warns(monkeypatch, capsys):
-    from repro.launch import serve as launch_serve
+def test_serve_shim_runs_and_warns(capsys):
+    from repro.launch.cli import serve_main
 
     argv = [
         "--drugs", "30", "--diseases", "20", "--targets", "15",
         "--requests", "6", "--max-batch", "4",
     ]
-    _run_shim(launch_serve.main, argv, monkeypatch)
+    _run_shim(serve_main, argv)
     out = capsys.readouterr().out
     assert "queries" in out and "QPS" in out
 
 
-def test_scenario_shim_recovery_and_agreement(monkeypatch, capsys):
-    from repro.launch import scenario as launch_scenario
+def test_scenario_shim_recovery_and_agreement(capsys):
+    from repro.launch.cli import scenario_main
 
     argv = [
         "--solve", "bipartite", "--scale", "0.25",
         "--backends", "dense,sparse",
     ]
-    _run_shim(launch_scenario.main, argv, monkeypatch)
+    _run_shim(scenario_main, argv)
     out = capsys.readouterr().out
     assert "agree_vs_dense=True" in out
 

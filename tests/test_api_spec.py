@@ -233,3 +233,70 @@ def test_bench_label_resolution():
     assert BenchSpec().resolved_label() == "ci"
     assert BenchSpec(fast=False).resolved_label() == "full"
     assert BenchSpec(label="x").resolved_label() == "x"
+
+
+# ------------------------------------------------------- pipelined serving
+def test_serve_pipeline_knob_validation():
+    assert ServeSpec().pipeline_depth == 2
+    assert ServeSpec().cache_shards == 4
+    with pytest.raises(SpecError, match="pipeline_depth"):
+        ServeSpec(pipeline_depth=0)
+    with pytest.raises(SpecError, match="cache_shards"):
+        ServeSpec(cache_shards=0)
+    with pytest.raises(SpecError, match="cache_shards"):
+        ServeSpec(cache_shards=256, cache_columns=64)
+
+
+def test_serve_priority_validation():
+    assert ServeSpec().priority == "interactive"
+    ServeSpec(priority="bulk")
+    with pytest.raises(SpecError, match="priority"):
+        ServeSpec(priority="urgent")
+
+
+def test_priority_classes_in_sync_with_serve_types():
+    # spec.py keeps its own copy to stay import-light; this is the
+    # sync assertion that copy's comment promises.
+    from repro.api.spec import _PRIORITY_CLASSES
+    from repro.serve.types import PRIORITY_CLASSES
+
+    assert _PRIORITY_CLASSES == PRIORITY_CLASSES
+
+
+def test_serve_early_exit_tri_state():
+    assert ServeSpec().early_exit is None
+    with pytest.raises(SpecError, match="early_exit"):
+        ServeSpec(early_exit="yes")
+    # auto: on for plain dhlp2, off otherwise
+    assert ServeSpec().resolved_early_exit(SolveSpec(alg="dhlp2")) is True
+    assert ServeSpec().resolved_early_exit(SolveSpec(alg="dhlp1")) is False
+    assert (
+        ServeSpec().resolved_early_exit(SolveSpec(alg="dhlp2", momentum=0.2))
+        is False
+    )
+    assert (
+        ServeSpec(early_exit=False).resolved_early_exit(SolveSpec(alg="dhlp2"))
+        is False
+    )
+
+
+def test_serve_early_exit_conflicts():
+    net = NetworkSpec(kind="drugnet")
+    with pytest.raises(SpecError, match="dhlp2"):
+        RunSpec(
+            network=net,
+            solve=SolveSpec(alg="dhlp1", seed_mode="fixed"),
+            serve=ServeSpec(early_exit=True),
+        )
+    with pytest.raises(SpecError, match="momentum"):
+        RunSpec(
+            network=net,
+            solve=SolveSpec(alg="dhlp2", momentum=0.3),
+            serve=ServeSpec(early_exit=True),
+        )
+    # explicit off always composes
+    RunSpec(
+        network=net,
+        solve=SolveSpec(alg="dhlp2", momentum=0.3),
+        serve=ServeSpec(early_exit=False),
+    )

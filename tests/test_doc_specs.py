@@ -1,0 +1,59 @@
+"""Docs-consistency gate (tools/check_doc_specs.py): every fenced json
+block in README.md / docs/runspec.md must parse as a strict RunSpec."""
+import importlib.util
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_doc_specs", REPO_ROOT / "tools" / "check_doc_specs.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_repo_docs_pass():
+    mod = _load_checker()
+    assert mod.main([]) == 0
+
+
+def test_docs_have_spec_blocks():
+    mod = _load_checker()
+    for doc in mod.DEFAULT_DOCS:
+        text = (REPO_ROOT / doc).read_text()
+        assert list(mod.iter_json_blocks(text)), f"{doc}: no json blocks"
+
+
+def test_block_extraction_line_numbers():
+    mod = _load_checker()
+    text = 'intro\n\n```json\n{"a": 1}\n```\n\n```python\nx = 1\n```\n'
+    blocks = list(mod.iter_json_blocks(text))
+    assert len(blocks) == 1  # python fence ignored
+    line, body = blocks[0]
+    assert line == 3
+    assert body.strip() == '{"a": 1}'
+
+
+def test_bad_spec_block_fails(tmp_path, capsys):
+    mod = _load_checker()
+    doc = tmp_path / "bad.md"
+    doc.write_text('```json\n{"network": {"kind": "nope"}}\n```\n')
+    assert mod.main([str(doc)]) == 1
+    assert "not a valid RunSpec" in capsys.readouterr().err
+
+
+def test_invalid_json_block_fails(tmp_path, capsys):
+    mod = _load_checker()
+    doc = tmp_path / "broken.md"
+    doc.write_text("```json\n{not json}\n```\n")
+    assert mod.main([str(doc)]) == 1
+    assert "not valid JSON" in capsys.readouterr().err
+
+
+def test_missing_file_is_distinct_error(tmp_path, capsys):
+    mod = _load_checker()
+    assert mod.main([str(tmp_path / "absent.md")]) == 2

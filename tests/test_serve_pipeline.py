@@ -1,0 +1,391 @@
+"""Pipelined serving tier tests (DESIGN.md §9): priority-class
+fairness and admission control, clean shutdown with batches in flight,
+sharded-cache equivalence, and early-exit numerical agreement."""
+import queue
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import LPConfig
+from repro.serve import (
+    ColumnCache,
+    LPServeEngine,
+    MicroBatcher,
+    PRIORITY_CLASSES,
+    QuerySpec,
+    ServeConfig,
+    ShardedColumnCache,
+)
+from repro.serve.types import QueryResult
+
+from test_serve import SIGMA, serve_cfg, small_net
+
+# Strict agreement gate, same tolerance as bench.matrix.agree_dense.
+AGREEMENT_TOL = 5e-3
+
+
+def _fake_result(spec: QuerySpec) -> QueryResult:
+    return QueryResult(
+        spec=spec,
+        candidates=np.arange(spec.top_k),
+        scores=np.zeros(spec.top_k),
+        target_offset=0,
+        version=0,
+        source="cold",
+        rounds=1,
+    )
+
+
+def _fake_solve(specs):
+    return [_fake_result(s) for s in specs]
+
+
+def _spec(entity, priority="interactive"):
+    return QuerySpec(entity=entity, target_type=2, top_k=3, priority=priority)
+
+
+class TestPriorityFairness:
+    def test_wrr_drain_shares_one_tick(self):
+        """One tick over a mixed backlog follows the 8/4/2 drain weights:
+        interactive drains fully, no class is starved."""
+        mb = MicroBatcher(_fake_solve, max_batch=16, max_wait_s=1e-4)
+        futs = {}
+        futs["bulk"] = [mb.submit(_spec(i, "bulk")) for i in range(30)]
+        futs["refresh"] = [mb.submit(_spec(i, "refresh")) for i in range(5)]
+        futs["interactive"] = [
+            mb.submit(_spec(i, "interactive")) for i in range(3)
+        ]
+        served = mb.run_once(wait=False)
+        assert served == 16
+        done = {c: sum(f.done() for f in fs) for c, fs in futs.items()}
+        # every non-empty class got a slot; interactive fully drained
+        assert done["interactive"] == 3
+        assert done["refresh"] == 5
+        assert done["bulk"] == 16 - 3 - 5
+        mb.drain()
+        assert all(f.done() for fs in futs.values() for f in fs)
+
+    def test_bulk_not_starved_by_interactive_backlog(self):
+        """Even with interactive demand exceeding max_batch every tick,
+        bulk requests get at least one slot per tick."""
+        mb = MicroBatcher(_fake_solve, max_batch=8, max_wait_s=1e-4)
+        bulk = [mb.submit(_spec(i, "bulk")) for i in range(3)]
+        for i in range(40):
+            mb.submit(_spec(i, "interactive"))
+        ticks = 0
+        while not all(f.done() for f in bulk):
+            assert mb.run_once(wait=False) > 0
+            ticks += 1
+            assert ticks <= 3, "bulk starved beyond its 1-slot/tick floor"
+        mb.drain()
+
+    def test_per_class_stats(self):
+        mb = MicroBatcher(_fake_solve, max_batch=64, max_wait_s=1e-4)
+        for i in range(4):
+            mb.submit(_spec(i, "bulk"))
+        for i in range(2):
+            mb.submit(_spec(i, "refresh"))
+        mb.drain()
+        by = mb.stats.by_class
+        assert set(by) == set(PRIORITY_CLASSES)
+        assert by["bulk"]["submitted"] == by["bulk"]["completed"] == 4
+        assert by["refresh"]["submitted"] == by["refresh"]["completed"] == 2
+        assert by["interactive"]["submitted"] == 0
+
+    def test_unknown_priority_rejected_at_submit(self):
+        mb = MicroBatcher(_fake_solve)
+        with pytest.raises(ValueError, match="priority"):
+            mb.submit(_spec(0, "urgent"))
+
+
+class TestAdmissionControl:
+    def test_bulk_shed_before_interactive(self):
+        """bulk admits up to 50% of queue_depth, interactive up to 100%:
+        under backlog, bulk is rejected while interactive still admits."""
+        mb = MicroBatcher(_fake_solve, queue_depth=8, max_wait_s=1e-4)
+        for i in range(4):
+            mb.submit(_spec(i, "bulk"))
+        with pytest.raises(queue.Full):
+            mb.submit(_spec(99, "bulk"), block=False)
+        # interactive and refresh still have headroom at pending=4
+        mb.submit(_spec(0, "refresh"), block=False)
+        mb.submit(_spec(0, "interactive"), block=False)
+        assert mb.stats.rejected == 1
+        assert mb.stats.by_class["bulk"]["rejected"] == 1
+        assert mb.stats.by_class["interactive"]["rejected"] == 0
+        mb.drain()
+
+    def test_interactive_full_queue_rejects(self):
+        mb = MicroBatcher(_fake_solve, queue_depth=4, max_wait_s=1e-4)
+        for i in range(4):
+            mb.submit(_spec(i))
+        with pytest.raises(queue.Full):
+            mb.submit(_spec(9), block=False)
+        with pytest.raises(queue.Full):
+            mb.submit(_spec(9), timeout=0.01)
+        assert mb.stats.rejected == 2
+        mb.drain()
+
+    def test_blocking_submit_waits_for_drain(self):
+        mb = MicroBatcher(_fake_solve, queue_depth=2, max_wait_s=1e-4)
+        mb.submit(_spec(0))
+        mb.submit(_spec(1))
+        done = threading.Event()
+
+        def late():
+            mb.submit(_spec(2), timeout=5.0)
+            done.set()
+
+        t = threading.Thread(target=late)
+        t.start()
+        time.sleep(0.02)
+        assert not done.is_set()
+        mb.run_once(wait=False)
+        t.join(timeout=5.0)
+        assert done.is_set()
+        mb.drain()
+        assert mb.stats.completed == 3
+
+
+class TestPipelinedShutdown:
+    def test_stop_resolves_all_inflight_futures(self):
+        """stop() with batches in flight joins both pipeline threads and
+        leaves no stranded future."""
+        net = small_net()
+        engine = LPServeEngine(
+            net, serve_cfg(pipeline_depth=2, cache_shards=2, max_batch=8)
+        )
+        engine.start()
+        try:
+            futs = [
+                engine.submit(QuerySpec(entity=e % 18, target_type=2, top_k=3))
+                for e in range(24)
+            ]
+        finally:
+            engine.stop()
+        for f in futs:
+            r = f.result(timeout=1.0)
+            assert r.version == 0
+            assert np.all(np.diff(r.scores) <= 1e-12)
+        assert engine.batcher.stats.completed == 24
+        assert engine.batcher.pending == 0
+        # all pipeline threads joined
+        assert not any(
+            t.name.startswith("lp-serve") for t in threading.enumerate()
+        )
+
+    def test_assembly_failure_fails_only_its_batch(self):
+        """An exception in the assemble stage fails that batch's futures
+        without wedging the collector/solver pipeline."""
+        calls = {"n": 0}
+
+        def assemble(specs):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("assembly boom")
+            return list(specs)
+
+        def execute(prepared):
+            return [_fake_result(s) for s in prepared]
+
+        mb = MicroBatcher(
+            _fake_solve, max_batch=4, max_wait_s=1e-3,
+            pipeline_depth=2, assemble=assemble, execute=execute,
+        )
+        mb.start()
+        try:
+            bad = [mb.submit(_spec(i)) for i in range(4)]
+            for f in bad:  # first batch fails
+                with pytest.raises(RuntimeError, match="assembly boom"):
+                    f.result(timeout=5.0)
+            good = [mb.submit(_spec(i)) for i in range(4)]
+            for f in good:  # pipeline still alive
+                assert f.result(timeout=5.0).rounds == 1
+        finally:
+            mb.stop()
+        assert mb.stats.failed == 4
+        assert mb.stats.completed == 4
+
+    def test_pipeline_depth_requires_stage_hooks(self):
+        with pytest.raises(ValueError, match="assemble"):
+            MicroBatcher(_fake_solve, pipeline_depth=2)
+
+    def test_pipelined_results_match_sync(self):
+        """The two-stage pipeline returns the same rankings as the
+        synchronous scheduler on an identical cold workload."""
+        net = small_net()
+        specs = [
+            QuerySpec(entity=e, target_type=2, top_k=4) for e in range(10)
+        ]
+        sync = LPServeEngine(net, serve_cfg())
+        sync_futs = [sync.submit(s) for s in specs]
+        sync.batcher.drain()
+
+        pipe = LPServeEngine(net, serve_cfg(pipeline_depth=3, cache_shards=2))
+        pipe.start()
+        try:
+            pipe_futs = [pipe.submit(s) for s in specs]
+            results = [f.result(timeout=30.0) for f in pipe_futs]
+        finally:
+            pipe.stop()
+        for fs, r in zip(sync_futs, results):
+            s = fs.result(timeout=1.0)
+            np.testing.assert_array_equal(s.candidates, r.candidates)
+            np.testing.assert_allclose(s.scores, r.scores, atol=1e-9)
+
+
+class TestShardedCacheEquivalence:
+    def _exercise(self, cache):
+        rng = np.random.default_rng(7)
+        type_of = np.zeros(40, dtype=np.int64)
+        type_of[20:] = 1
+        log = []
+        for step in range(200):
+            node = int(rng.integers(0, 40))
+            op = rng.random()
+            if op < 0.5:
+                cache.put(0, node, np.full(8, float(node)))
+                log.append(("put", node))
+            elif op < 0.8:
+                col = cache.get(0, node)
+                log.append(("get", node, None if col is None else col[0]))
+            elif op < 0.9:
+                hint = cache.stale_hint(node)
+                log.append(
+                    ("hint", node, None if hint is None else hint[0])
+                )
+            else:
+                cache.invalidate_for_delta(
+                    0, 1, frozenset({node % 2}), type_of
+                )
+                log.append(("delta", node))
+        log.append(("len", len(cache)))
+        s = cache.stats
+        log.append(
+            ("stats", s.hits, s.misses, s.evictions,
+             s.invalidations, s.warm_hints)
+        )
+        return log
+
+    def test_one_shard_identical_to_flat_cache(self):
+        """shards=1 reproduces the flat ColumnCache exactly: same hits,
+        misses, evictions, LRU order, and stale-hint behavior."""
+        flat = self._exercise(ColumnCache(capacity=16))
+        sharded = self._exercise(ShardedColumnCache(16, shards=1))
+        assert flat == sharded
+
+    def test_multi_shard_same_contents_different_layout(self):
+        """shards>1 changes eviction locality but not correctness: every
+        lookup that hits returns the same column."""
+        flat = ColumnCache(capacity=64)
+        sharded = ShardedColumnCache(64, shards=4)
+        for node in range(32):
+            col = np.full(4, float(node))
+            flat.put(0, node, col)
+            sharded.put(0, node, col)
+        for node in range(32):
+            np.testing.assert_array_equal(
+                flat.get(0, node), sharded.get(0, node)
+            )
+        assert len(sharded) == len(flat) == 32
+        assert sharded.stats.hits == flat.stats.hits == 32
+
+    def test_capacity_split_and_validation(self):
+        c = ShardedColumnCache(10, shards=4)
+        for node in range(40):
+            c.put(0, node, np.zeros(2))
+        assert len(c) <= 12  # ceil(10/4)=3 per shard, 4 shards
+        with pytest.raises(ValueError):
+            ShardedColumnCache(2, shards=4)
+        with pytest.raises(ValueError):
+            ShardedColumnCache(8, shards=0)
+
+
+class TestEarlyExitAgreement:
+    def test_agrees_with_full_solve_strict(self):
+        """Per-column early exit matches the full-superstep solver within
+        the bench agree_dense tolerance on every cached column."""
+        net = small_net()
+        specs = [
+            QuerySpec(entity=e, target_type=2, top_k=5) for e in range(12)
+        ]
+        full = LPServeEngine(net, serve_cfg(early_exit=False))
+        early = LPServeEngine(net, serve_cfg(early_exit=True))
+        r_full = full._solve_batch(list(specs))
+        r_early = early._solve_batch(list(specs))
+        worst = 0.0
+        for e in range(12):
+            cf = full.columns.get(0, e)
+            ce = early.columns.get(0, e)
+            assert cf is not None and ce is not None
+            worst = max(worst, float(np.max(np.abs(cf - ce))))
+        assert worst <= AGREEMENT_TOL
+        for a, b in zip(r_full, r_early):
+            np.testing.assert_array_equal(a.candidates, b.candidates)
+
+    def test_columns_converge_at_different_rounds(self):
+        """Early exit tracks per-column round counts; a mixed batch with a
+        warm hint should show heterogeneous counts."""
+        net = small_net()
+        engine = LPServeEngine(net, serve_cfg(early_exit=True))
+        engine._solve_batch([QuerySpec(entity=0, target_type=2, top_k=3)])
+        # re-solving a cached column is a hit: no rounds at all
+        rehit = engine._solve_batch(
+            [QuerySpec(entity=0, target_type=2, top_k=3)]
+        )
+        assert rehit[0].source == "cache"
+        assert rehit[0].rounds == 0
+        cold = engine._solve_batch(
+            [QuerySpec(entity=5, target_type=2, top_k=3)]
+        )
+        assert cold[0].source == "cold"
+        assert cold[0].rounds >= 1
+
+    def test_early_exit_requires_dhlp2(self):
+        with pytest.raises(ValueError, match="dhlp2"):
+            ServeConfig(
+                lp=LPConfig(alg="dhlp1", seed_mode="fixed"), early_exit=True
+            )
+
+    def test_early_exit_momentum_conflict(self):
+        with pytest.raises(ValueError, match="momentum"):
+            ServeConfig(
+                lp=LPConfig(
+                    alg="dhlp2", seed_mode="fixed", momentum=0.5
+                ),
+                early_exit=True,
+            )
+
+    def test_config_knob_validation(self):
+        with pytest.raises(ValueError, match="pipeline_depth"):
+            serve_cfg(pipeline_depth=0)
+        with pytest.raises(ValueError, match="cache_shards"):
+            serve_cfg(cache_shards=0)
+        with pytest.raises(ValueError, match="cache_shards"):
+            serve_cfg(cache_shards=128, cache_columns=64)
+
+
+class TestPriorityTelemetry:
+    def test_per_class_gauges_and_shard_counters(self):
+        from repro.obs import Telemetry
+
+        tel = Telemetry("metrics", run_id="pipeline-tel")
+        net = small_net()
+        engine = LPServeEngine(
+            net, serve_cfg(cache_shards=2, max_batch=8), telemetry=tel
+        )
+        for e in range(6):
+            engine.submit(
+                QuerySpec(entity=e, target_type=2, top_k=3, priority="bulk")
+            )
+        engine.batcher.drain()
+        depth = tel.metrics.gauge("serve.queue_depth.bulk")
+        assert depth.series, "per-class queue gauge missing"
+        shard_counts = sum(
+            tel.metrics.counter(f"serve.cache.shard{i}.misses").value
+            for i in range(2)
+        )
+        assert shard_counts == tel.metrics.counter("serve.cache.misses").value
+        assert shard_counts == engine.columns.stats.misses > 0

@@ -54,7 +54,7 @@ class TestTrainDriver:
 class TestSolveDriver:
     def test_end_to_end(self, tmp_path):
         out = subprocess.run(
-            [sys.executable, "-m", "repro.launch.solve",
+            [sys.executable, "-m", "repro", "solve",
              "--alg", "dhlp2", "--drugs", "30", "--diseases", "20",
              "--targets", "15", "--sigma", "1e-3",
              "--out", str(tmp_path / "out.npz")],
