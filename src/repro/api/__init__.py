@@ -20,6 +20,7 @@ from repro.api.artifacts import (
     EvalArtifact,
     ServeArtifact,
     SolveArtifact,
+    TrainArtifact,
     jsonable,
 )
 from repro.api.session import Session
@@ -33,6 +34,7 @@ from repro.api.spec import (
     ServeSpec,
     SolveSpec,
     SpecError,
+    TrainSpec,
 )
 
 __all__ = [
@@ -52,5 +54,7 @@ __all__ = [
     "SolveArtifact",
     "SolveSpec",
     "SpecError",
+    "TrainArtifact",
+    "TrainSpec",
     "jsonable",
 ]

@@ -4,7 +4,8 @@ Each :class:`~repro.api.session.Session` stage returns one artifact:
 ``solve()`` → :class:`SolveArtifact` (rankings + solver outputs),
 ``evaluate()`` → :class:`EvalArtifact` (protocol metrics), ``serve()`` →
 :class:`ServeArtifact` (workload report), ``bench()`` →
-:class:`BenchArtifact` (BENCH record summary), ``dryrun()`` →
+:class:`BenchArtifact` (BENCH record summary), ``train()`` →
+:class:`TrainArtifact` (guarded training-loop stats), ``dryrun()`` →
 :class:`DryrunArtifact` (per-cell compile census, emitted in the
 telemetry event format so ``benchmarks/roofline.py`` and ``repro obs``
 read the same artifact).  Artifacts carry their heavy payloads (score
@@ -235,6 +236,39 @@ class DryrunArtifact(Artifact):
                 f.write(json.dumps(jsonable(line), sort_keys=True) + "\n")
         paths.append(path)
         return paths
+
+
+@dataclasses.dataclass
+class TrainArtifact(Artifact):
+    """A guarded training run (lm / gnn / recsys arch families)."""
+
+    kind: ClassVar[str] = "train"
+    arch: str = "?"
+    family: str = "?"
+    steps: int = 0
+    first_loss: float = float("nan")
+    last_loss: float = float("nan")
+    retries: int = 0
+    restores: int = 0
+    slow_steps: int = 0
+    resumed: bool = False
+
+    def summary(self) -> Dict[str, Any]:
+        out = super().summary()
+        out.update(
+            {
+                "arch": self.arch,
+                "family": self.family,
+                "steps": self.steps,
+                "first_loss": self.first_loss,
+                "last_loss": self.last_loss,
+                "retries": self.retries,
+                "restores": self.restores,
+                "slow_steps": self.slow_steps,
+                "resumed": self.resumed,
+            }
+        )
+        return out
 
 
 @dataclasses.dataclass

@@ -32,6 +32,7 @@ from repro.api.artifacts import (
     EvalArtifact,
     ServeArtifact,
     SolveArtifact,
+    TrainArtifact,
     _write_json,
 )
 from repro.api.spec import DryrunSpec, EvalSpec, RunSpec, ServeSpec, SpecError
@@ -466,6 +467,37 @@ class Session:
             report_paths=outcome.paths,
         )
 
+    # --------------------------------------------------------------- train
+    def train(self, *, echo=print) -> TrainArtifact:
+        """Run the guarded training loop for the spec's ``train`` section.
+
+        Training never touches the LP network/engine machinery — the
+        section runs standalone (a networkless spec is valid), and
+        lp-family archs are rejected in :func:`run_training` because
+        they converge via the solve stage, not SGD.  ``echo`` receives
+        the per-step progress lines (the launch shim points it at
+        ``print``).
+        """
+        if self.spec.train is None:
+            raise SpecError("run section 'train' needs a train section in the spec")
+        from repro.launch.train import run_training
+
+        t0 = time.perf_counter()
+        stats = run_training(self.spec.train, echo=echo)
+        return TrainArtifact(
+            run_id=self.run_id,
+            seconds=time.perf_counter() - t0,
+            arch=str(stats["arch"]),
+            family=str(stats["family"]),
+            steps=int(stats["steps"]),
+            first_loss=float(stats["first_loss"]),
+            last_loss=float(stats["last_loss"]),
+            retries=int(stats["retries"]),
+            restores=int(stats["restores"]),
+            slow_steps=int(stats["slow_steps"]),
+            resumed=bool(stats["resumed"]),
+        )
+
     # -------------------------------------------------------------- dryrun
     def dryrun(self) -> DryrunArtifact:
         """Compile-sweep the configured (arch × shape × mesh) cells.
@@ -534,6 +566,7 @@ class Session:
             # bench honors the run-level write flag: --no-write must not
             # leave BENCH_<label>.json behind either
             "bench": lambda: self.bench(write=write),
+            "train": lambda: self.train(echo=echo),
             "dryrun": self.dryrun,
         }
         names = list(sections) if sections else list(self.spec.sections())

@@ -47,6 +47,7 @@ _OBS_LEVELS = ("off", "metrics", "trace", "profile")
 # import-light; the sync is asserted by tests/test_api_spec.py)
 _PRIORITY_CLASSES = ("interactive", "refresh", "bulk")
 _DRYRUN_MESHES = ("single", "multi", "both")
+_STORAGE_DTYPES = ("f32", "bf16")
 _RUN_ID_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
 
 
@@ -172,6 +173,12 @@ class SolveSpec:
     devices: Optional[int] = None  # sharded only
     momentum: float = 0.0
     max_iter: int = 1000
+    # mixed precision (sparse/kernel backends): "bf16" stores operator
+    # weights + the gather panel in bfloat16 (fp32 state/accumulation)
+    storage_dtype: str = "f32"
+    # consult the persisted blocked-CSR autotune cache (False pins the
+    # layout/panel defaults unconditionally)
+    autotune: bool = True
     # the ranking reported by the solve artifact (paper step G)
     top_k: int = 20
     entity: int = 0
@@ -180,6 +187,15 @@ class SolveSpec:
     def __post_init__(self) -> None:
         if self.alg not in _ALGS:
             raise SpecError(f"solve.alg must be one of {_ALGS}, got {self.alg!r}")
+        if self.storage_dtype not in _STORAGE_DTYPES:
+            raise SpecError(
+                f"solve.storage_dtype must be one of {_STORAGE_DTYPES}, "
+                f"got {self.storage_dtype!r}"
+            )
+        if not isinstance(self.autotune, bool):
+            raise SpecError(
+                f"solve.autotune must be true/false, got {self.autotune!r}"
+            )
         if self.mode not in _MODES:
             raise SpecError(f"solve.mode must be one of {_MODES}, got {self.mode!r}")
         if self.seed_mode not in _SEED_MODES:
@@ -225,6 +241,8 @@ class SolveSpec:
             momentum=self.momentum,
             max_iter=self.max_iter,
             backend=backend if backend is not None else self.backend,
+            storage_dtype=self.storage_dtype,
+            autotune=self.autotune,
         )
 
 
@@ -438,6 +456,56 @@ class ObsSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class TrainSpec:
+    """A model-training run (lm / gnn / recsys arch families).
+
+    Folds the ``launch/train`` driver behind the declarative API: the
+    arch registry resolves ``arch`` to a family, the session runs the
+    guarded training loop (periodic checkpoints, retry/restore on
+    transient failures, straggler watch, optional injected faults).
+    LP-family archs are rejected at session resolution — label
+    propagation runs via a ``solve`` section.
+    """
+
+    arch: str = ""
+    steps: int = 50
+    batch: int = 8
+    seq: int = 128
+    full: bool = False  # full pod-scale config (default: reduced)
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 25
+    ckpt_async: bool = False
+    inject_fault: Tuple[int, ...] = ()  # steps that raise a transient fault
+    log_every: int = 10
+
+    def __post_init__(self) -> None:
+        if not self.arch or not isinstance(self.arch, str):
+            raise SpecError("train.arch is required (a registered arch name)")
+        _positive(self.steps, "train.steps")
+        _positive(self.batch, "train.batch")
+        _positive(self.seq, "train.seq")
+        _positive(self.ckpt_every, "train.ckpt_every")
+        _positive(self.log_every, "train.log_every")
+        if not isinstance(self.inject_fault, (list, tuple)) or not all(
+            isinstance(s, int) and not isinstance(s, bool) and s >= 0
+            for s in self.inject_fault
+        ):
+            raise SpecError(
+                f"train.inject_fault must be step indices, "
+                f"got {self.inject_fault!r}"
+            )
+        object.__setattr__(self, "inject_fault", tuple(self.inject_fault))
+        if self.ckpt_async and self.ckpt_dir is None:
+            raise SpecError("train.ckpt_async requires train.ckpt_dir")
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str = "train") -> "TrainSpec":
+        d = _require_mapping(d, path)
+        _check_keys(cls, d, path)
+        return cls(**dict(d))
+
+
+@dataclasses.dataclass(frozen=True)
 class DryrunSpec:
     """A multi-pod compile sweep (lower + compile every config cell).
 
@@ -482,8 +550,8 @@ class DryrunSpec:
 class RunSpec:
     """One declarative job: network × solve × (eval? serve? bench? …)."""
 
-    #: None is allowed ONLY for a dryrun-only spec — the compile sweep
-    #: exercises model configs, not a propagation network
+    #: None is allowed ONLY for a train- and/or dryrun-only spec — those
+    #: stages exercise model configs, not a propagation network
     network: Optional[NetworkSpec] = None
     #: None = default solve parameters; the solve STAGE runs when this
     #: section is explicitly present, or when no other stage is configured
@@ -492,6 +560,7 @@ class RunSpec:
     serve: Optional[ServeSpec] = None
     bench: Optional[BenchSpec] = None
     obs: Optional[ObsSpec] = None
+    train: Optional[TrainSpec] = None
     dryrun: Optional[DryrunSpec] = None
     run_id: Optional[str] = None  # None = deterministic content-derived id
 
@@ -501,10 +570,13 @@ class RunSpec:
                 f"run_id {self.run_id!r} is not filesystem-safe "
                 "([A-Za-z0-9._-], no leading punctuation)"
             )
-        if self.network is None and self.sections() != ("dryrun",):
+        sections = self.sections()
+        if self.network is None and not (
+            sections and all(s in ("train", "dryrun") for s in sections)
+        ):
             raise SpecError(
                 "runspec: a 'network' section is required (only a "
-                "dryrun-only spec runs without one)"
+                "train- and/or dryrun-only spec runs without one)"
             )
         solve = self.resolved_solve()
         if self.serve is not None:
@@ -548,10 +620,12 @@ class RunSpec:
     def from_dict(cls, d: Any) -> "RunSpec":
         d = _require_mapping(d, "runspec")
         _check_keys(cls, d, "runspec")
-        dryrun_only = d.get("dryrun") is not None and not any(
+        networkless_ok = (
+            d.get("dryrun") is not None or d.get("train") is not None
+        ) and not any(
             d.get(k) is not None for k in ("solve", "eval", "serve", "bench")
         )
-        if "network" not in d and not dryrun_only:
+        if "network" not in d and not networkless_ok:
             raise SpecError("runspec: a 'network' section is required")
         return cls(
             network=(
@@ -576,6 +650,11 @@ class RunSpec:
                 else None
             ),
             obs=(ObsSpec.from_dict(d["obs"]) if d.get("obs") is not None else None),
+            train=(
+                TrainSpec.from_dict(d["train"])
+                if d.get("train") is not None
+                else None
+            ),
             dryrun=(
                 DryrunSpec.from_dict(d["dryrun"])
                 if d.get("dryrun") is not None
@@ -622,7 +701,8 @@ class RunSpec:
         if self.run_id:
             return self.run_id
         if self.network is None:
-            return f"dryrun-{self.content_hash()}"
+            prefix = "train" if self.dryrun is None else "dryrun"
+            return f"{prefix}-{self.content_hash()}"
         solve = self.resolved_solve()
         net = self.network.name or self.network.kind
         backend = solve.backend or "auto"
@@ -633,11 +713,11 @@ class RunSpec:
 
         ``solve`` runs when its section is explicitly present — or when
         nothing else is, so a bare ``{"network": ...}`` spec is a solve.
-        (``obs`` is cross-cutting, not a stage; ``dryrun`` never implies
-        a solve.)
+        (``obs`` is cross-cutting, not a stage; ``train`` and ``dryrun``
+        never imply a solve.)
         """
         out = []
-        others = [self.eval, self.serve, self.bench, self.dryrun]
+        others = [self.eval, self.serve, self.bench, self.train, self.dryrun]
         if self.solve is not None or not any(s is not None for s in others):
             out.append("solve")
         if self.eval is not None:
@@ -646,6 +726,8 @@ class RunSpec:
             out.append("serve")
         if self.bench is not None:
             out.append("bench")
+        if self.train is not None:
+            out.append("train")
         if self.dryrun is not None:
             out.append("dryrun")
         return tuple(out)

@@ -52,6 +52,7 @@ def import_suite_modules() -> None:
         if repo not in sys.path:
             sys.path.insert(0, repo)
         import benchmarks.fig34_parallelism  # noqa: F401
+    import benchmarks.kernel_variants  # noqa: F401
     import benchmarks.kernels_bench  # noqa: F401
     import benchmarks.lp_on_graph  # noqa: F401
     import benchmarks.roofline as bench_roofline

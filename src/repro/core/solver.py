@@ -74,8 +74,23 @@ class LPConfig:
     # below 1).  ``None`` = auto-scale H by 1/(T−1); pass 1.0 for the
     # strictly-literal paper update.
     hetero_scale: Optional[float] = None
+    # Mixed precision (sparse/kernel backends): "bf16" stores operator
+    # weights and the per-round gather panel in bfloat16 while state and
+    # accumulation stay fp32 — halves superstep memory traffic at a
+    # slightly shifted fixed point (gated by agree_dense/recovery-AUC in
+    # the bench matrix).  "f32" is exact.
+    storage_dtype: Literal["f32", "bf16"] = "f32"
+    # Consult the persisted autotune cache (repro.engine.autotune) for
+    # blocked-CSR layout + kernel panel parameters.  A cold cache falls
+    # back to the defaults; False pins the defaults unconditionally.
+    autotune: bool = True
 
     def __post_init__(self) -> None:
+        if self.storage_dtype not in ("f32", "bf16"):
+            raise ValueError(
+                f"storage_dtype must be 'f32' or 'bf16', got "
+                f"{self.storage_dtype!r}"
+            )
         if self.use_kernel and self.backend is None:
             warnings.warn(
                 "LPConfig(use_kernel=True) is deprecated; use "

@@ -118,6 +118,20 @@ class LPEngine(abc.ABC):
         """One fused fixed-seed DHLP-2 round ``β²Y + A_eff @ F``."""
         raise NotImplementedError(f"backend {self.name!r} has no incremental round")
 
+    def round_with_residual(self, op: Operator, F, Y):
+        """One round plus its per-column residual ``max_r |Fn − F|``.
+
+        Convergence-driven callers (serve's early-exit loop) consume this
+        instead of ``round`` + a host-side reduction so fused backends can
+        emit the residual from the same kernel launch.  Default: compose
+        from ``round``.
+        """
+        Fn = self.round(op, F, Y)
+        delta = np.max(
+            np.abs(np.asarray(Fn) - np.asarray(F, dtype=np.float64)), axis=0
+        )
+        return Fn, delta
+
     # ---------------------------------------------------------- convenience
     def run(
         self,

@@ -4,8 +4,16 @@ Each kernel subpackage ships: ``kernel.py`` (pl.pallas_call + BlockSpec),
 ``ops.py`` (jit'd public wrapper with fallback), ``ref.py`` (pure-jnp
 oracle used by the allclose test sweeps).
 """
-from repro.kernels.embedding_bag import embedding_bag, embedding_bag_op, embedding_bag_ref
-from repro.kernels.flash_attention import attention_ref, flash_attention, gqa_attention_op
+from repro.kernels.embedding_bag import (
+    embedding_bag,
+    embedding_bag_op,
+    embedding_bag_ref,
+)
+from repro.kernels.flash_attention import (
+    attention_ref,
+    flash_attention,
+    gqa_attention_op,
+)
 from repro.kernels.lp_blockspmm import lp_round, lp_round_op, lp_round_ref
 from repro.kernels.segment_reduce import (
     csr_aggregate,
@@ -14,6 +22,9 @@ from repro.kernels.segment_reduce import (
     csr_round,
     csr_round_op,
     csr_round_ref,
+    csr_round_residual,
+    csr_round_residual_op,
+    csr_round_residual_ref,
 )
 
 __all__ = [
@@ -24,6 +35,9 @@ __all__ = [
     "csr_round",
     "csr_round_op",
     "csr_round_ref",
+    "csr_round_residual",
+    "csr_round_residual_op",
+    "csr_round_residual_ref",
     "embedding_bag",
     "embedding_bag_op",
     "embedding_bag_ref",

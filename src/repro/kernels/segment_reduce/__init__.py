@@ -1,6 +1,18 @@
-from repro.kernels.segment_reduce.kernel import csr_aggregate, csr_round
-from repro.kernels.segment_reduce.ops import csr_aggregate_op, csr_round_op
-from repro.kernels.segment_reduce.ref import csr_aggregate_ref, csr_round_ref
+from repro.kernels.segment_reduce.kernel import (
+    csr_aggregate,
+    csr_round,
+    csr_round_residual,
+)
+from repro.kernels.segment_reduce.ops import (
+    csr_aggregate_op,
+    csr_round_op,
+    csr_round_residual_op,
+)
+from repro.kernels.segment_reduce.ref import (
+    csr_aggregate_ref,
+    csr_round_ref,
+    csr_round_residual_ref,
+)
 
 __all__ = [
     "csr_aggregate",
@@ -9,4 +21,7 @@ __all__ = [
     "csr_round",
     "csr_round_op",
     "csr_round_ref",
+    "csr_round_residual",
+    "csr_round_residual_op",
+    "csr_round_residual_ref",
 ]

@@ -23,6 +23,15 @@ panel (DESIGN.md §11).
 ``csr_round`` is the fused LP round: the same accumulation with a
 ``c · base`` epilogue folded into the flush, so one kernel call computes
 ``A_eff @ F + β²·Y`` for its row bucket without a second HBM pass.
+
+``csr_round_residual`` is the fused *superstep*: the round plus the
+per-column convergence reduction ``max_r |out − prev|`` emitted from the
+same flush, so the σ-check the LP loops run never re-reads the (N, S)
+state from HBM.  ``prev`` is the pre-round state slice for this bucket's
+rows; the second output is one max-partial row per row block, reduced to
+the (S,) residual by a cheap (grid_m, S) host-side max.  Accumulation is
+fp32 regardless of the storage dtype, so a bf16 ``F``/``wgt`` pair (the
+engine's ``storage_dtype="bf16"`` mode) quantizes only the operands.
 """
 
 from __future__ import annotations
@@ -80,6 +89,43 @@ def _csr_round_kernel(
     @pl.when(d == d_steps - 1)
     def _flush():
         out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def _csr_round_res_kernel(
+    nbr_ref,
+    wgt_ref,
+    f_ref,
+    base_ref,
+    prev_ref,
+    out_ref,
+    delta_ref,
+    acc_ref,
+    *,
+    d_steps,
+    bd,
+    c,
+):
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init():
+        acc_ref[...] = c * base_ref[...].astype(jnp.float32)
+
+    nbr = nbr_ref[...]
+    wgt = wgt_ref[...].astype(jnp.float32)
+    f = f_ref[...]
+    for k in range(bd):
+        rows = f[nbr[:, k], :].astype(jnp.float32)
+        acc_ref[...] += wgt[:, k][:, None] * rows
+
+    @pl.when(d == d_steps - 1)
+    def _flush():
+        acc = acc_ref[...]
+        out_ref[...] = acc.astype(out_ref.dtype)
+        # the residual folded into the flush: padded rows carry zero base,
+        # zero weights, and zero prev, so they contribute |0 − 0| = 0
+        diff = jnp.abs(acc - prev_ref[...].astype(jnp.float32))
+        delta_ref[...] = jnp.max(diff, axis=0, keepdims=True)
 
 
 def _pad_inputs(nbr, wgt, F, bm, bs, bd):
@@ -192,3 +238,75 @@ def csr_round(
     if m_pad != m or s_pad != s:
         out = out[:m, :s]
     return out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("c", "bn", "bs", "bd", "interpret")
+)
+def csr_round_residual(
+    nbr: jax.Array,  # (M, D) int32
+    wgt: jax.Array,  # (M, D)
+    F: jax.Array,  # (N, S) gather panel (storage dtype)
+    base: jax.Array,  # (M, S) seed/base slice for this bucket
+    prev: jax.Array,  # (M, S) pre-round state slice for this bucket
+    *,
+    c: float,
+    bn: int = 256,
+    bs: int = 128,
+    bd: int = 16,
+    interpret: bool | None = None,
+) -> tuple:
+    """Fused superstep for one row bucket.
+
+    Returns ``(out, delta)`` where ``out = c·base + Σ_k wgt·F[nbr]`` in
+    ``base.dtype`` (the state dtype — a bf16 panel still yields fp32
+    state) and ``delta`` is the ``(grid_m, S)`` per-row-block partial of
+    ``max_r |out − prev|``; reduce it with ``jnp.max(delta, axis=0)``.
+    """
+    m, dmax = nbr.shape
+    n, s = F.shape
+    if base.shape != (m, s) or prev.shape != (m, s):
+        raise ValueError(
+            f"base/prev must be ({m}, {s}), got {base.shape}/{prev.shape}"
+        )
+    bm = min(bn, m)
+    bs = min(bs, s)
+    bd = min(bd, dmax)
+    nbr, wgt, F, m_pad, s_pad, d_pad = _pad_inputs(nbr, wgt, F, bm, bs, bd)
+    if base.shape != (m_pad, s_pad):
+        base = jnp.pad(base, ((0, m_pad - m), (0, s_pad - s)))
+        prev = jnp.pad(prev, ((0, m_pad - m), (0, s_pad - s)))
+    grid = (m_pad // bm, s_pad // bs, d_pad // bd)
+    if interpret is None:
+        interpret = default_interpret()
+    kernel = functools.partial(
+        _csr_round_res_kernel, d_steps=grid[2], bd=bd, c=c
+    )
+    out, delta = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bd), lambda i, j, d: (i, d)),  # nbr tile
+            pl.BlockSpec((bm, bd), lambda i, j, d: (i, d)),  # wgt tile
+            pl.BlockSpec((F.shape[0], bs), lambda i, j, d: (0, j)),  # F panel
+            pl.BlockSpec((bm, bs), lambda i, j, d: (i, j)),  # base tile
+            pl.BlockSpec((bm, bs), lambda i, j, d: (i, j)),  # prev tile
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bs), lambda i, j, d: (i, j)),
+            pl.BlockSpec((1, bs), lambda i, j, d: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_pad, s_pad), base.dtype),
+            jax.ShapeDtypeStruct((grid[0], s_pad), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bs), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(nbr, wgt, F, base, prev)
+    if m_pad != m or s_pad != s:
+        out = out[:m, :s]
+        delta = delta[:, :s]
+    return out, delta

@@ -4,8 +4,16 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.common import default_interpret
-from repro.kernels.segment_reduce.kernel import csr_aggregate, csr_round
-from repro.kernels.segment_reduce.ref import csr_aggregate_ref, csr_round_ref
+from repro.kernels.segment_reduce.kernel import (
+    csr_aggregate,
+    csr_round,
+    csr_round_residual,
+)
+from repro.kernels.segment_reduce.ref import (
+    csr_aggregate_ref,
+    csr_round_ref,
+    csr_round_residual_ref,
+)
 from repro.obs.profiler import kernel_clock, kernel_time
 
 # The resident F panel must fit VMEM alongside tiles: N·bs·4B ≲ 8MB.
@@ -63,3 +71,37 @@ def csr_round_op(
         interpret=default_interpret(),
     )
     return kernel_time("csr_round.kernel", t0, out)
+
+
+def csr_round_residual_op(
+    nbr: jax.Array,
+    wgt: jax.Array,
+    F: jax.Array,
+    base: jax.Array,
+    prev: jax.Array,
+    *,
+    c: float,
+    bn: int = 256,
+    bs: int = 128,
+    bd: int = 16,
+    use_kernel: bool | None = None,
+) -> tuple:
+    """Fused superstep for one bucket: round plus max-|out − prev| partial.
+
+    Returns ``(out, delta)``; ``delta`` has one max-partial row per row
+    block (``(grid_m, S)`` from the kernel, ``(1, S)`` from the oracle) —
+    callers reduce with ``jnp.max(delta, axis=0)`` after concatenating
+    buckets. Same size heuristic as :func:`csr_aggregate_op`.
+    """
+    n = F.shape[0]
+    if use_kernel is None:
+        use_kernel = 128 <= n <= _MAX_RESIDENT_NODES
+    t0 = kernel_clock()
+    if not use_kernel:
+        out = csr_round_residual_ref(nbr, wgt, F, base, prev, c)
+        return kernel_time("csr_round_residual.ref", t0, out)
+    out = csr_round_residual(
+        nbr, wgt, F, base, prev, c=c, bn=bn, bs=bs, bd=bd,
+        interpret=default_interpret(),
+    )
+    return kernel_time("csr_round_residual.kernel", t0, out)

@@ -33,3 +33,25 @@ def csr_round_ref(
     """Fused LP round oracle: ``c·base + Σ_k wgt[·,k] · F[nbr[·,k]]``."""
     acc = csr_aggregate_ref(nbr, wgt, F).astype(jnp.float32)
     return (c * base.astype(jnp.float32) + acc).astype(F.dtype)
+
+
+def csr_round_residual_ref(
+    nbr: jnp.ndarray,   # (M, D) int32 neighbor ids
+    wgt: jnp.ndarray,   # (M, D) float weights (0 = pad)
+    F: jnp.ndarray,     # (N, S) features/labels (gather panel)
+    base: jnp.ndarray,  # (M, S) seed/base panel
+    prev: jnp.ndarray,  # (M, S) pre-round state for this bucket's rows
+    c: float,
+) -> tuple:
+    """Fused superstep oracle: the round plus its convergence residual.
+
+    Returns ``(out, delta)`` with ``out`` in ``base.dtype`` and ``delta``
+    shaped ``(1, S)`` — the max over this bucket's rows of ``|out − prev|``
+    computed in fp32, matching the kernel's per-row-block partial layout.
+    """
+    acc = csr_aggregate_ref(nbr, wgt, F).astype(jnp.float32)
+    out = c * base.astype(jnp.float32) + acc
+    delta = jnp.max(
+        jnp.abs(out - prev.astype(jnp.float32)), axis=0, keepdims=True
+    )
+    return out.astype(base.dtype), delta

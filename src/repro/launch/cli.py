@@ -386,6 +386,14 @@ def _describe(art) -> List[str]:
             f"[bench] label={art.label} suites={len(art.suites)} "
             f"records={art.records} failures={art.failures}"
         ]
+    if k == "train":
+        return [
+            f"[train] {art.arch} ({art.family}): {art.steps} steps "
+            f"loss {art.first_loss:.4f}→{art.last_loss:.4f} "
+            f"retries={art.retries} restores={art.restores} "
+            f"slow={art.slow_steps}{' resumed' if art.resumed else ''} "
+            f"({art.seconds:.1f}s)"
+        ]
     if k == "dryrun":
         s = art.summary()
         statuses = " ".join(f"{k}:{v}" for k, v in sorted(s["statuses"].items()))

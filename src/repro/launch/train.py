@@ -1,18 +1,25 @@
-"""Training driver: any ``--arch`` × synthetic data × fault tolerance.
+"""Guarded training loop: any arch × synthetic data × fault tolerance.
 
-The production path: build the arch's config (reduced by default on CPU —
-pass ``--full`` on a real pod), construct the train step, restore the
-latest checkpoint if present, then run steps with:
+:func:`run_training` is the driver — it executes a
+:class:`~repro.api.spec.TrainSpec`: build the arch's config (reduced by
+default on CPU — ``full=True`` on a real pod), construct the train step,
+restore the latest checkpoint if present, then run steps with:
 
   * periodic (optionally async) checkpoints,
   * retry/restore on transient failures (``StepGuard``),
   * straggler watch (EWMA step times),
-  * optional injected faults (``--inject-fault N``) for recovery drills.
+  * optional injected faults (``inject_fault``) for recovery drills.
 
-Examples:
+``Session.train()`` calls it for specs with a ``train`` section; the
+module entry point is a deprecated shim that builds the equivalent
+train-only RunSpec:
+
   PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
       --steps 50 --ckpt-dir /tmp/ckpt --ckpt-every 20
-  PYTHONPATH=src python -m repro.launch.train --arch wide-deep --steps 100
+
+prefer:
+
+  PYTHONPATH=src python -m repro run --spec train.json
 """
 from __future__ import annotations
 
@@ -119,7 +126,124 @@ def build_recsys_job(arch: str, spec, batch: int):
     return params, opt.init(params), step_fn, next_batch
 
 
+def run_training(spec, *, echo=print) -> Dict[str, Any]:
+    """Execute a :class:`~repro.api.spec.TrainSpec`; returns loop stats.
+
+    ``echo`` receives the progress lines (``Session.train`` forwards the
+    run-level echo).  Raises :class:`~repro.api.spec.SpecError` for
+    lp-family archs — those converge via the ``solve`` section, not SGD.
+    """
+    from repro.api.spec import SpecError
+    from repro.configs import get_arch
+    from repro.ft import FailureInjector, StepGuard, StragglerWatch
+
+    arch = get_arch(spec.arch)
+    if arch.family == "lm":
+        cfg = arch.full_config if spec.full else arch.reduced_config
+        params, state, step_fn, next_batch = build_lm_job(
+            spec.arch, cfg, spec.batch, spec.seq
+        )
+    elif arch.family == "gnn":
+        params, state, step_fn, next_batch = build_gnn_job(spec.arch, arch)
+    elif arch.family == "recsys":
+        params, state, step_fn, next_batch = build_recsys_job(
+            spec.arch, arch, spec.batch
+        )
+    else:
+        raise SpecError(
+            f"train.arch: family {arch.family!r} trains via the solve "
+            "section (launch/solve.py) instead"
+        )
+
+    ckpt = None
+    start_step = 0
+    resumed = False
+    if spec.ckpt_dir:
+        from repro.checkpoint import CheckpointManager
+
+        ckpt = CheckpointManager(
+            spec.ckpt_dir, keep_last=3, async_write=spec.ckpt_async
+        )
+        restored_step, restored = ckpt.restore_latest((params, state))
+        if restored is not None:
+            params, state = restored
+            start_step = restored_step + 1
+            resumed = True
+            echo(f"[train] resumed from step {restored_step}")
+
+    injector = FailureInjector(fail_at=tuple(spec.inject_fault))
+    watch = StragglerWatch()
+
+    # restore-replay closure for StepGuard
+    snapshot = {"step": start_step, "params": params, "state": state}
+
+    def restore():
+        if ckpt is not None:
+            s, restored = ckpt.restore_latest(
+                (snapshot["params"], snapshot["state"])
+            )
+            if restored is not None:
+                snapshot["params"], snapshot["state"] = restored
+                snapshot["step"] = s + 1
+                echo(f"[train] restored from checkpoint step {s}")
+        return snapshot["step"], (snapshot["params"], snapshot["state"])
+
+    guard = StepGuard(max_retries=2, restore_fn=restore)
+
+    step = start_step
+    losses = []
+    while step < spec.steps:
+        batch = next_batch(step)
+        t0 = time.time()
+
+        def run_one():
+            injector.maybe_fail(step)
+            return step_fn(snapshot["params"], snapshot["state"], batch)
+
+        p, s, loss = guard.run(run_one)
+        snapshot["params"], snapshot["state"] = p, s
+        loss = float(loss)
+        losses.append(loss)
+        dt = time.time() - t0
+        slow = watch.observe(dt)
+        if step % spec.log_every == 0 or step == spec.steps - 1:
+            echo(
+                f"[train] step {step} loss {loss:.4f} "
+                f"({dt*1e3:.0f} ms{' SLOW' if slow else ''})"
+            )
+        if ckpt is not None and (step + 1) % spec.ckpt_every == 0:
+            ckpt.save(step, (snapshot["params"], snapshot["state"]),
+                      metadata={"loss": loss})
+        step += 1
+        snapshot["step"] = step
+
+    if ckpt is not None:
+        ckpt.save(spec.steps - 1, (snapshot["params"], snapshot["state"]))
+        ckpt.wait()
+    if losses:
+        echo(
+            f"[train] done: first loss {losses[0]:.4f} → last "
+            f"{losses[-1]:.4f}; retries={guard.retries} "
+            f"restores={guard.restores} slow_steps={watch.slow_steps}"
+        )
+    return {
+        "arch": spec.arch,
+        "family": arch.family,
+        "steps": len(losses),
+        "first_loss": losses[0] if losses else float("nan"),
+        "last_loss": losses[-1] if losses else float("nan"),
+        "retries": guard.retries,
+        "restores": guard.restores,
+        "slow_steps": watch.slow_steps,
+        "resumed": resumed,
+    }
+
+
 def main() -> None:
+    """Deprecated CLI shim: builds the equivalent train-only RunSpec and
+    runs it through ``Session.train()`` (no results/ writes)."""
+    import warnings
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--steps", type=int, default=50)
@@ -134,95 +258,34 @@ def main() -> None:
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
-    from repro.configs import get_arch
-    from repro.ft import FailureInjector, StepGuard, StragglerWatch
-
-    spec = get_arch(args.arch)
-    if spec.family == "lm":
-        cfg = spec.full_config if args.full else spec.reduced_config
-        params, state, step_fn, next_batch = build_lm_job(
-            args.arch, cfg, args.batch, args.seq
-        )
-    elif spec.family == "gnn":
-        params, state, step_fn, next_batch = build_gnn_job(args.arch, spec)
-    elif spec.family == "recsys":
-        params, state, step_fn, next_batch = build_recsys_job(
-            args.arch, spec, args.batch
-        )
-    else:
-        raise SystemExit(
-            f"family {spec.family!r} trains via launch/solve.py instead"
-        )
-
-    ckpt = None
-    start_step = 0
-    if args.ckpt_dir:
-        from repro.checkpoint import CheckpointManager
-
-        ckpt = CheckpointManager(
-            args.ckpt_dir, keep_last=3, async_write=args.ckpt_async
-        )
-        restored_step, restored = ckpt.restore_latest((params, state))
-        if restored is not None:
-            params, state = restored
-            start_step = restored_step + 1
-            print(f"[train] resumed from step {restored_step}")
-
-    injector = FailureInjector(fail_at=tuple(args.inject_fault))
-    watch = StragglerWatch()
-
-    # restore-replay closure for StepGuard
-    snapshot = {"step": start_step, "params": params, "state": state}
-
-    def restore():
-        if ckpt is not None:
-            s, restored = ckpt.restore_latest(
-                (snapshot["params"], snapshot["state"])
-            )
-            if restored is not None:
-                snapshot["params"], snapshot["state"] = restored
-                snapshot["step"] = s + 1
-                print(f"[train] restored from checkpoint step {s}")
-        return snapshot["step"], (snapshot["params"], snapshot["state"])
-
-    guard = StepGuard(max_retries=2, restore_fn=restore)
-
-    step = start_step
-    losses = []
-    while step < args.steps:
-        batch = next_batch(step)
-        t0 = time.time()
-
-        def run_one():
-            injector.maybe_fail(step)
-            return step_fn(snapshot["params"], snapshot["state"], batch)
-
-        p, s, loss = guard.run(run_one)
-        snapshot["params"], snapshot["state"] = p, s
-        loss = float(loss)
-        losses.append(loss)
-        dt = time.time() - t0
-        slow = watch.observe(dt)
-        if step % args.log_every == 0 or step == args.steps - 1:
-            print(
-                f"[train] step {step} loss {loss:.4f} "
-                f"({dt*1e3:.0f} ms{' SLOW' if slow else ''})",
-                flush=True,
-            )
-        if ckpt is not None and (step + 1) % args.ckpt_every == 0:
-            ckpt.save(step, (snapshot["params"], snapshot["state"]),
-                      metadata={"loss": loss})
-        step += 1
-        snapshot["step"] = step
-
-    if ckpt is not None:
-        ckpt.save(args.steps - 1, (snapshot["params"], snapshot["state"]))
-        ckpt.wait()
-    print(
-        f"[train] done: first loss {losses[0]:.4f} → last {losses[-1]:.4f}; "
-        f"retries={guard.retries} restores={guard.restores} "
-        f"slow_steps={watch.slow_steps}"
+    warnings.warn(
+        "python -m repro.launch.train is a shim; use a RunSpec with a "
+        "'train' section (python -m repro run) instead",
+        DeprecationWarning,
+        stacklevel=2,
     )
+    from repro.api import RunSpec, Session, SpecError, TrainSpec
+
+    try:
+        spec = RunSpec(
+            train=TrainSpec(
+                arch=args.arch,
+                steps=args.steps,
+                batch=args.batch,
+                seq=args.seq,
+                full=args.full,
+                ckpt_dir=args.ckpt_dir,
+                ckpt_every=args.ckpt_every,
+                ckpt_async=args.ckpt_async,
+                inject_fault=tuple(args.inject_fault),
+                log_every=args.log_every,
+            )
+        )
+        art = Session(spec).train(echo=lambda msg: print(msg, flush=True))
+    except SpecError as e:
+        print(f"[train] {e}")
+        raise SystemExit(2)
+    print(f"[train] artifact: {art.kind} run_id={art.run_id}")
 
 
 if __name__ == "__main__":

@@ -416,10 +416,11 @@ class LPServeEngine:
             Ya = np.zeros((n, width), dtype=np.float64)
             Fa[:, :a] = F[:, active]
             Ya[:, :a] = Y[:, active]
-            Fn = np.asarray(
-                self._engine.round(op, Fa, Ya), dtype=np.float64
-            )[:, :a]
-            delta = np.max(np.abs(Fn - F[:, active]), axis=0)
+            # fused superstep: the engine emits the per-column residual
+            # from the same launch as the round (no host-side reduction)
+            Fn, delta = self._engine.round_with_residual(op, Fa, Ya)
+            Fn = np.asarray(Fn, dtype=np.float64)[:, :a]
+            delta = np.asarray(delta, dtype=np.float64)[:a]
             F[:, active] = Fn
             col_iters[active] += 1
             active = active[delta >= cfg.sigma]

@@ -1,0 +1,218 @@
+"""Fused-superstep kernel, autotune cache, and plan-vs-legacy agreement."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.solver import LPConfig
+from repro.engine import autotune, make_engine
+from repro.kernels.segment_reduce import (
+    csr_round_residual,
+    csr_round_residual_ref,
+)
+
+
+RNG = np.random.default_rng(7)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-4, atol=5e-4
+    )
+
+
+def _drugnet_norm():
+    from repro.data.drugnet import DrugNetSpec, make_drugnet
+
+    dn = make_drugnet(
+        DrugNetSpec(n_drug=48, n_disease=32, n_target=24, n_clusters=6)
+    )
+    return dn.network.normalize()
+
+
+class TestCSRRoundResidual:
+    """Pallas fused superstep (interpret=True) vs the jnp oracle."""
+
+    @pytest.mark.parametrize(
+        "m,n,d,s",
+        [
+            (128, 128, 8, 32),   # aligned
+            (200, 150, 11, 37),  # padded tails on every axis
+            (64, 300, 33, 16),   # degree > one bd slab
+        ],
+    )
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, m, n, d, s, dtype):
+        nbr = jnp.asarray(RNG.integers(0, n, (m, d)).astype(np.int32))
+        wgt = jnp.asarray(
+            (RNG.random((m, d)) * (RNG.random((m, d)) < 0.7)), dtype
+        )
+        F = jnp.asarray(RNG.random((n, s)), dtype)
+        base = jnp.asarray(RNG.random((m, s)), jnp.float32)
+        prev = jnp.asarray(RNG.random((m, s)), jnp.float32)
+        got, gd = csr_round_residual(
+            nbr, wgt, F, base, prev, c=0.25, bn=64, bs=32, bd=8,
+            interpret=True,
+        )
+        want, wd = csr_round_residual_ref(nbr, wgt, F, base, prev, 0.25)
+        got = np.asarray(got, np.float32)[:m, :s]
+        np.testing.assert_allclose(
+            got, np.asarray(want, np.float32), **_tol(dtype)
+        )
+        # kernel delta is a per-row-block partial; reduce then compare
+        gd = np.asarray(jnp.max(gd, axis=0))[:s]
+        np.testing.assert_allclose(
+            gd, np.asarray(wd)[0], **_tol(dtype)
+        )
+
+    def test_residual_zero_at_fixed_point(self):
+        """delta == 0 exactly when prev equals the kernel's own output."""
+        m, n, d, s = 128, 128, 8, 32
+        nbr = jnp.asarray(RNG.integers(0, n, (m, d)).astype(np.int32))
+        wgt = jnp.asarray(RNG.random((m, d)), jnp.float32)
+        F = jnp.asarray(RNG.random((n, s)), jnp.float32)
+        base = jnp.asarray(RNG.random((m, s)), jnp.float32)
+        out, _ = csr_round_residual(
+            nbr, wgt, F, base, base, c=0.3, bn=64, bs=32, bd=8,
+            interpret=True,
+        )
+        _, delta = csr_round_residual(
+            nbr, wgt, F, base, out, c=0.3, bn=64, bs=32, bd=8,
+            interpret=True,
+        )
+        assert float(jnp.max(delta)) == 0.0
+
+
+class TestAutotuneCache:
+    @pytest.fixture(autouse=True)
+    def _fresh_memo(self):
+        autotune.clear_memo()
+        yield
+        autotune.clear_memo()
+
+    def test_miss_sweep_hit_and_persistence(self, tmp_path):
+        norm = _drugnet_norm()
+        n, nnz = norm.num_nodes, autotune.network_nnz(norm)
+        assert autotune.lookup(n, nnz, cache_dir=tmp_path) is None
+
+        params, hit = autotune.ensure_tuned(
+            norm, repeats=1, sweep_panels=False, cache_dir=tmp_path
+        )
+        assert not hit
+        assert (params.block_rows, params.width_mult) in autotune.LAYOUT_GRID
+        assert autotune.cache_path(tmp_path).exists()
+
+        again, hit2 = autotune.ensure_tuned(
+            norm, repeats=1, sweep_panels=False, cache_dir=tmp_path
+        )
+        assert hit2 and again == params
+
+        # memo dropped -> the persisted file alone must answer the lookup
+        autotune.clear_memo()
+        assert autotune.lookup(n, nnz, cache_dir=tmp_path) == params
+
+    def test_corrupt_cache_is_cold(self, tmp_path):
+        norm = _drugnet_norm()
+        n, nnz = norm.num_nodes, autotune.network_nnz(norm)
+        autotune.save(n, nnz, autotune.TunedParams(), cache_dir=tmp_path)
+        autotune.cache_path(tmp_path).write_text("not json{")
+        autotune.clear_memo()
+        assert autotune.lookup(n, nnz, cache_dir=tmp_path) is None
+
+    def test_shape_class_buckets_nearby_sizes(self):
+        assert autotune.shape_class(1000, 8000) == autotune.shape_class(
+            1100, 8800
+        )
+        assert autotune.shape_class(1000, 8000) != autotune.shape_class(
+            1000, 64000
+        )
+
+    def test_engine_consults_cache(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(autotune, "DEFAULT_CACHE_DIR", tmp_path)
+        norm = _drugnet_norm()
+        tuned = autotune.TunedParams(block_rows=32, width_mult=4)
+        autotune.save(
+            norm.num_nodes, autotune.network_nnz(norm), tuned
+        )
+        eng = make_engine(
+            "sparse", LPConfig(alg="dhlp2", seed_mode="fixed", autotune=True)
+        )
+        op = eng.prepare(norm)
+        assert op.payload.layout == (32, 4)
+
+    def test_autotune_off_uses_defaults(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(autotune, "DEFAULT_CACHE_DIR", tmp_path)
+        norm = _drugnet_norm()
+        autotune.save(
+            norm.num_nodes,
+            autotune.network_nnz(norm),
+            autotune.TunedParams(block_rows=32, width_mult=4),
+        )
+        eng = make_engine(
+            "sparse", LPConfig(alg="dhlp2", seed_mode="fixed", autotune=False)
+        )
+        op = eng.prepare(norm)
+        assert op.payload.layout == (
+            autotune.DEFAULT_PARAMS.block_rows,
+            autotune.DEFAULT_PARAMS.width_mult,
+        )
+
+
+class TestFusedSuperstepEngine:
+    @pytest.mark.parametrize("alg", ["dhlp1", "dhlp2"])
+    def test_fused_matches_legacy(self, alg):
+        norm = _drugnet_norm()
+        Y = np.eye(norm.num_nodes, dtype=np.float32)[:, :12]
+        cfg = LPConfig(alg=alg, sigma=1e-4, seed_mode="fixed", autotune=False)
+        ref = make_engine("sparse", cfg, fused_superstep=False).run(
+            norm, seeds=Y
+        )
+        got = make_engine("sparse", cfg).run(norm, seeds=Y)
+        np.testing.assert_allclose(got.F, ref.F, rtol=1e-5, atol=1e-6)
+        assert got.outer_iters == ref.outer_iters
+
+    def test_bf16_storage_agrees_within_tolerance(self):
+        norm = _drugnet_norm()
+        Y = np.eye(norm.num_nodes, dtype=np.float32)[:, :12]
+        f32 = make_engine(
+            "sparse",
+            LPConfig(alg="dhlp2", sigma=1e-4, seed_mode="fixed",
+                     autotune=False),
+        ).run(norm, seeds=Y)
+        bf16 = make_engine(
+            "sparse",
+            LPConfig(alg="dhlp2", sigma=1e-4, seed_mode="fixed",
+                     autotune=False, storage_dtype="bf16"),
+        ).run(norm, seeds=Y)
+        assert float(np.max(np.abs(bf16.F - f32.F))) < 5e-3
+
+    def test_tightened_plan_never_pads_more_than_block_layout(self):
+        from repro.core.blocked_csr import blocked_csr_from_network
+        from repro.engine.sparse import _tighten_buckets
+
+        norm = _drugnet_norm()
+        bcsr = blocked_csr_from_network(
+            norm, alpha=0.01, hetero_scale=0.5, block_rows=64, width_mult=8
+        )
+        blocks = bcsr.width_buckets()
+        block_padded = sum(b.nbr.size for b in blocks)
+        tight = _tighten_buckets(blocks)
+        tight_padded = sum(nbr.size for _, nbr, _ in tight)
+        assert tight_padded <= block_padded
+        # every row appears exactly once in the tightened order
+        rows = np.sort(np.concatenate([r for r, _, _ in tight]))
+        np.testing.assert_array_equal(
+            rows, np.sort(np.concatenate([b.rows for b in blocks]))
+        )
+
+    def test_round_with_residual_matches_legacy(self):
+        norm = _drugnet_norm()
+        Y = np.eye(norm.num_nodes, dtype=np.float32)[:, :8]
+        cfg = LPConfig(
+            alg="dhlp2", sigma=1e-4, seed_mode="fixed", autotune=False
+        )
+        fused = make_engine("sparse", cfg)
+        legacy = make_engine("sparse", cfg, fused_superstep=False)
+        out_f, d_f = fused.round_with_residual(fused.prepare(norm), Y, Y)
+        out_l, d_l = legacy.round_with_residual(legacy.prepare(norm), Y, Y)
+        np.testing.assert_allclose(out_f, out_l, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(d_f, d_l, rtol=1e-5, atol=1e-6)
