@@ -383,6 +383,24 @@ def run_obs_overhead(args) -> Dict:
     out["metrics"] = burst(metrics_session)
     out["telemetry"] = metrics_session.telemetry
     out["overhead_frac"] = 1.0 - out["metrics"]["qps"] / out["off"]["qps"]
+
+    # third arm: metrics + live streaming + OpenMetrics export at an
+    # aggressive 50ms cadence — the incremental flush path must stay
+    # inside the same <=5% bar as plain recording
+    import shutil
+    import tempfile
+
+    stream_session = _session(args, net_spec, obs_level="metrics")
+    stream_dir = tempfile.mkdtemp(prefix="obs_overhead_stream_")
+    try:
+        stream_session.telemetry.attach_stream(stream_dir, interval_s=0.05)
+        out["streaming"] = burst(stream_session)
+        stream_session.telemetry.flush(stream_dir)
+    finally:
+        shutil.rmtree(stream_dir, ignore_errors=True)
+    out["overhead_frac_streaming"] = (
+        1.0 - out["streaming"]["qps"] / out["off"]["qps"]
+    )
     return out
 
 
@@ -466,7 +484,9 @@ def records(fast: bool = True) -> List[BenchRecord]:
         derived={
             "qps_off": ab["off"]["qps"],
             "qps_metrics": ab["metrics"]["qps"],
+            "qps_streaming": ab["streaming"]["qps"],
             "overhead_frac": ab["overhead_frac"],
+            "overhead_frac_streaming": ab["overhead_frac_streaming"],
         },
         telemetry=telemetry_digest(ab["telemetry"]),
     ))

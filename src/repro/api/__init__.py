@@ -32,6 +32,7 @@ from repro.api.spec import (
     ObsSpec,
     RunSpec,
     ServeSpec,
+    SLOSpec,
     SolveSpec,
     SpecError,
     TrainSpec,
@@ -48,6 +49,7 @@ __all__ = [
     "NetworkSpec",
     "ObsSpec",
     "RunSpec",
+    "SLOSpec",
     "ServeArtifact",
     "ServeSpec",
     "Session",

@@ -155,6 +155,8 @@ class ServeArtifact(Artifact):
     report: Dict[str, Any] = dataclasses.field(default_factory=dict)
     #: one representative query result for provenance checks
     sample: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: the SLO watchdog roll-up (empty when the spec declared no slo block)
+    slo: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def summary(self) -> Dict[str, Any]:
         out = super().summary()
@@ -166,6 +168,8 @@ class ServeArtifact(Artifact):
                 "sample": self.sample,
             }
         )
+        if self.slo:
+            out["slo"] = self.slo
         return out
 
 

@@ -62,6 +62,7 @@ class Session:
         self._engine: Any = None
         self._eval_engine: Any = None
         self._telemetry: Any = None
+        self._watchdog: Any = None
 
     # ------------------------------------------------------------- network
     @property
@@ -212,8 +213,10 @@ class Session:
         if self._telemetry is None:
             from repro.obs import Telemetry
 
-            level = self.spec.obs.level if self.spec.obs is not None else "off"
-            self._telemetry = Telemetry(level, run_id=self.run_id)
+            obs = self.spec.obs
+            level = obs.level if obs is not None else "off"
+            export = obs.export if obs is not None else True
+            self._telemetry = Telemetry(level, run_id=self.run_id, export=export)
         return self._telemetry
 
     def _network_desc(self) -> Dict[str, Any]:
@@ -357,13 +360,27 @@ class Session:
             pipeline_depth=sv.pipeline_depth,
             early_exit=sv.resolved_early_exit(self.spec.resolved_solve()),
         )
-        return LPServeEngine(
+        engine = LPServeEngine(
             self.network,
             cfg,
             engine=self.engine,
             norm=self.norm,
             telemetry=self.telemetry,
         )
+        obs = self.spec.obs
+        if obs is not None and obs.slo is not None:
+            from repro.obs import ServeDegradation, SLOWatchdog
+
+            if self._watchdog is not None:
+                # bench sweeps build several engines per session; only the
+                # newest one's knobs should answer to the watchdog
+                self._watchdog.detach()
+            self._watchdog = SLOWatchdog.from_spec(
+                obs.slo,
+                self.telemetry,
+                degradation=ServeDegradation(engine),
+            ).attach()
+        return engine
 
     def serve(self) -> ServeArtifact:
         from repro.serve.replay import play_zipf, replay_trace
@@ -439,6 +456,7 @@ class Session:
             engine=self.backend,
             report=report,
             sample=sample,
+            slo=self._watchdog.report() if self._watchdog is not None else {},
         )
 
     # --------------------------------------------------------------- bench
@@ -579,6 +597,16 @@ class Session:
 
         tel = self.telemetry
         tel_dir = os.path.join(self.run_dir, "telemetry")
+        obs = self.spec.obs
+        if (
+            write
+            and tel.enabled
+            and obs is not None
+            and obs.flush_interval_s is not None
+        ):
+            # live mode: telemetry/<run_id> becomes readable mid-run and
+            # the SLO watchdog (if any) gets its per-window flush ticks
+            tel.attach_stream(tel_dir, interval_s=obs.flush_interval_s)
         if tel.profile_enabled:
             from repro.obs.profiler import install_kernel_hook
 

@@ -430,29 +430,108 @@ class BenchSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class SLOSpec:
+    """Service-level objectives the live watchdog evaluates per flush
+    window (DESIGN.md §14.9).
+
+    Each objective is optional but at least one must be set.
+    ``latency_p95_ms`` bounds the windowed p95 of interactive serve
+    latency; ``error_rate`` caps (failed + rejected) / completed-or-
+    errored traffic; ``cache_hit_floor`` is the minimum column-cache hit
+    ratio under lookup traffic; ``stall_windows`` flags a convergence
+    stall when the solve residual stops improving for that many
+    consecutive windows.  ``burn_windows`` consecutive violating windows
+    raise a breach (and escalate serve degradation one rung);
+    ``recovery_windows`` consecutive clean windows restore.
+    """
+
+    latency_p95_ms: Optional[float] = None
+    error_rate: Optional[float] = None
+    cache_hit_floor: Optional[float] = None
+    stall_windows: Optional[int] = None
+    burn_windows: int = 3
+    recovery_windows: int = 2
+
+    def __post_init__(self) -> None:
+        objectives = (
+            self.latency_p95_ms,
+            self.error_rate,
+            self.cache_hit_floor,
+            self.stall_windows,
+        )
+        if all(v is None for v in objectives):
+            raise SpecError(
+                "obs.slo: at least one objective required "
+                "(latency_p95_ms / error_rate / cache_hit_floor / stall_windows)"
+            )
+        if self.latency_p95_ms is not None:
+            _positive(self.latency_p95_ms, "obs.slo.latency_p95_ms")
+        for name in ("error_rate", "cache_hit_floor"):
+            value = getattr(self, name)
+            if value is not None and not 0.0 <= value <= 1.0:
+                raise SpecError(
+                    f"obs.slo.{name} must be in [0, 1], got {value}"
+                )
+        if self.stall_windows is not None:
+            _positive(self.stall_windows, "obs.slo.stall_windows")
+        _positive(self.burn_windows, "obs.slo.burn_windows")
+        _positive(self.recovery_windows, "obs.slo.recovery_windows")
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str = "obs.slo") -> "SLOSpec":
+        d = _require_mapping(d, path)
+        _check_keys(cls, d, path)
+        return cls(**dict(d))
+
+
+@dataclasses.dataclass(frozen=True)
 class ObsSpec:
-    """Telemetry level for the run (DESIGN.md §14).
+    """Telemetry level + live-streaming knobs for the run (DESIGN.md §14).
 
     ``metrics`` records counters/gauges/histograms + structural spans;
     ``trace`` adds per-superstep and per-query spans; ``profile`` adds
     the ``jax.profiler`` capture and kernel timing hooks.  Writing the
     section at all defaults to ``metrics`` — an explicit ``off`` keeps
     the spec round-trippable while disabling collection.
+
+    ``flush_interval_s`` turns on live streaming: telemetry flushes
+    incrementally at that cadence while the run executes, so
+    ``repro obs --follow`` can tail it.  ``export`` controls the
+    OpenMetrics ``metrics.prom`` snapshot written on each flush (and the
+    final one).  ``slo`` declares watchdog objectives — it requires
+    streaming (``flush_interval_s``) because evaluation is per flush
+    window, and a level that actually collects.
     """
 
     level: str = "metrics"
+    flush_interval_s: Optional[float] = None
+    export: bool = True
+    slo: Optional[SLOSpec] = None
 
     def __post_init__(self) -> None:
         if self.level not in _OBS_LEVELS:
             raise SpecError(
                 f"obs.level must be one of {_OBS_LEVELS}, got {self.level!r}"
             )
+        if self.flush_interval_s is not None:
+            _positive(self.flush_interval_s, "obs.flush_interval_s")
+        if self.slo is not None:
+            if self.flush_interval_s is None:
+                raise SpecError(
+                    "obs.slo requires obs.flush_interval_s: the watchdog "
+                    "evaluates per streaming flush window"
+                )
+            if self.level == "off":
+                raise SpecError("obs.slo requires obs.level != 'off'")
 
     @classmethod
     def from_dict(cls, d: Any, path: str = "obs") -> "ObsSpec":
         d = _require_mapping(d, path)
         _check_keys(cls, d, path)
-        return cls(**dict(d))
+        d = dict(d)
+        if d.get("slo") is not None:
+            d["slo"] = SLOSpec.from_dict(d["slo"], f"{path}.slo")
+        return cls(**d)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -25,7 +25,7 @@ import argparse
 import json
 import sys
 import warnings
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 ARRIVAL_CHOICES = ("poisson", "bursty", "diurnal")
 
@@ -1002,9 +1002,42 @@ def bench_main(argv: Optional[List[str]] = None) -> int:
 # --------------------------------------------------------------------------
 # repro obs
 # --------------------------------------------------------------------------
+def _has_telemetry(path: str) -> bool:
+    """A telemetry dir is recognizable mid-stream: the consolidated
+    events.jsonl only lands at the final flush, so live segments or the
+    metrics snapshot also count."""
+    import glob
+    import os
+
+    if not os.path.isdir(path):
+        return False
+    return (
+        os.path.isfile(os.path.join(path, "events.jsonl"))
+        or os.path.isfile(os.path.join(path, "metrics.jsonl"))
+        or bool(glob.glob(os.path.join(path, "events-*.jsonl")))
+    )
+
+
+def _latest_run_id(results_root: str) -> Optional[str]:
+    """Most recently modified results/<run_id>/ with a telemetry dir."""
+    import os
+
+    if not os.path.isdir(results_root):
+        return None
+    best, best_mtime = None, -1.0
+    for name in os.listdir(results_root):
+        tel = os.path.join(results_root, name, "telemetry")
+        if _has_telemetry(tel):
+            mtime = os.path.getmtime(tel)
+            if mtime > best_mtime:
+                best, best_mtime = name, mtime
+    return best
+
+
 def obs_main(argv: Optional[List[str]] = None) -> int:
     """Render (and optionally validate) a run's telemetry artifacts."""
     import os
+    import time as _time
 
     ap = argparse.ArgumentParser(
         prog="repro obs",
@@ -1012,7 +1045,10 @@ def obs_main(argv: Optional[List[str]] = None) -> int:
     )
     ap.add_argument(
         "run_id",
-        help="run id under --results-root, or a path to a run/telemetry dir",
+        nargs="?",
+        default=None,
+        help="run id under --results-root, or a path to a run/telemetry "
+        "dir; omitted = the most recent run with telemetry",
     )
     ap.add_argument("--results-root", default="results")
     ap.add_argument(
@@ -1025,21 +1061,42 @@ def obs_main(argv: Optional[List[str]] = None) -> int:
         action="store_true",
         help="print the summary digest as JSON instead of text",
     )
+    ap.add_argument(
+        "--follow",
+        action="store_true",
+        help="tail a live run: re-render the digest as flush ticks land",
+    )
+    ap.add_argument(
+        "--interval",
+        type=float,
+        default=1.0,
+        help="--follow poll interval in seconds (default 1.0)",
+    )
+    ap.add_argument(
+        "--max-ticks",
+        type=int,
+        default=0,
+        help="--follow: stop after N re-renders (0 = until interrupted)",
+    )
     args = ap.parse_args(argv)
+
+    if args.run_id is None:
+        args.run_id = _latest_run_id(args.results_root)
+        if args.run_id is None:
+            print(
+                f"repro obs: no run with telemetry under "
+                f"{args.results_root!r}; pass a run id or path",
+                file=sys.stderr,
+            )
+            return 2
+        print(f"[obs] defaulting to most recent run: {args.run_id}")
 
     candidates = [
         os.path.join(args.results_root, args.run_id, "telemetry"),
         os.path.join(args.run_id, "telemetry"),
         args.run_id,
     ]
-    tel_dir = next(
-        (
-            c
-            for c in candidates
-            if os.path.isfile(os.path.join(c, "events.jsonl"))
-        ),
-        None,
-    )
+    tel_dir = next((c for c in candidates if _has_telemetry(c)), None)
     if tel_dir is None:
         print(
             f"repro obs: no telemetry found for {args.run_id!r} "
@@ -1061,11 +1118,39 @@ def obs_main(argv: Optional[List[str]] = None) -> int:
         kinds = " ".join(f"{k}:{v}" for k, v in sorted(counts.items()))
         print(f"[obs] schema ok: {kinds}")
 
-    summary = summarize(*load_dir(tel_dir))
-    if args.json:
-        print(json.dumps(summary, indent=2, sort_keys=True))
-    else:
-        print(render(summary))
+    def emit() -> None:
+        summary = summarize(*load_dir(tel_dir))
+        if args.json:
+            print(json.dumps(summary, indent=2, sort_keys=True))
+        else:
+            print(render(summary))
+
+    if not args.follow:
+        emit()
+        return 0
+
+    # live tail: re-render whenever the streamed snapshot advances
+    ticks = 0
+    last_sig: Any = None
+    try:
+        while True:
+            names = sorted(
+                n for n in os.listdir(tel_dir) if n.endswith((".jsonl", ".prom"))
+            )
+            sig = tuple(
+                (n, os.path.getmtime(os.path.join(tel_dir, n))) for n in names
+            )
+            if sig != last_sig:
+                last_sig = sig
+                if ticks:
+                    print(f"--- tick {ticks} ---")
+                emit()
+                ticks += 1
+                if args.max_ticks and ticks >= args.max_ticks:
+                    break
+            _time.sleep(args.interval)
+    except KeyboardInterrupt:
+        pass
     return 0
 
 

@@ -7,6 +7,8 @@ section:
 * :mod:`repro.obs.telemetry` — structured spans/events + the level gate;
 * :mod:`repro.obs.metrics`   — counters, gauges, log-bucket histograms;
 * :mod:`repro.obs.schema`    — JSONL schema validation (CI + ``--validate``);
+* :mod:`repro.obs.export`    — OpenMetrics text snapshots (render/parse/lint);
+* :mod:`repro.obs.slo`       — SLO watchdog + serve degradation ladder;
 * :mod:`repro.obs.solve`     — the observed per-superstep solve loop;
 * :mod:`repro.obs.profiler`  — ``jax.profiler`` phases + kernel timing;
 * :mod:`repro.obs.summary`   — digest + text rendering for ``repro obs``.
@@ -24,7 +26,9 @@ from repro.obs.metrics import (
     MetricsRegistry,
     bucket_index,
 )
+from repro.obs.export import lint_openmetrics, parse_openmetrics, render_openmetrics
 from repro.obs.schema import TelemetryError, validate_dir, validate_file, validate_line
+from repro.obs.slo import ServeDegradation, SLOWatchdog
 from repro.obs.telemetry import LEVELS, SCHEMA, Span, Telemetry
 
 __all__ = [
@@ -35,10 +39,15 @@ __all__ = [
     "LEVELS",
     "MetricsRegistry",
     "SCHEMA",
+    "SLOWatchdog",
+    "ServeDegradation",
     "Span",
     "Telemetry",
     "TelemetryError",
     "bucket_index",
+    "lint_openmetrics",
+    "parse_openmetrics",
+    "render_openmetrics",
     "validate_dir",
     "validate_file",
     "validate_line",

@@ -115,6 +115,45 @@ class Histogram:
                 return float(min(max(edge, self.min), self.max))
         return self.max
 
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Fold ``other`` into this histogram bucket-by-bucket (in place).
+
+        The mergeability contract the segment-rotation sink and the SLO
+        window arithmetic rely on: two histograms over the same edges
+        combine exactly (counts add, the [min, max] envelope widens).
+        """
+        if self.edges != other.edges:
+            raise ValueError(
+                f"cannot merge histograms with different edges "
+                f"({len(self.edges)} vs {len(other.edges)})"
+            )
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.count += other.count
+        self.total += other.total
+        if other.min is not None and (self.min is None or other.min < self.min):
+            self.min = other.min
+        if other.max is not None and (self.max is None or other.max > self.max):
+            self.max = other.max
+        return self
+
+    @classmethod
+    def from_line(cls, line: Dict[str, Any]) -> "Histogram":
+        """Rebuild a histogram from its :meth:`to_line` record."""
+        h = cls(line["name"], tuple(line["edges"]))
+        counts = list(line["counts"])
+        if len(counts) != len(h.counts):
+            raise ValueError(
+                f"histogram line carries {len(counts)} counts for "
+                f"{len(h.edges)} edges"
+            )
+        h.counts = counts
+        h.count = int(line["count"])
+        h.total = float(line["sum"])
+        h.min = None if line.get("min") is None else float(line["min"])
+        h.max = None if line.get("max") is None else float(line["max"])
+        return h
+
     def to_line(self) -> Dict[str, Any]:
         return {
             "kind": "metric",
@@ -162,6 +201,11 @@ class MetricsRegistry:
         self, name: str, edges: Tuple[float, ...] = DEFAULT_BUCKETS
     ) -> Histogram:
         return self._get(name, Histogram, lambda: Histogram(name, edges))
+
+    def peek(self, name: str) -> Optional[Any]:
+        """The instrument registered under ``name``, or None — never
+        creates one (the SLO watchdog reads without perturbing)."""
+        return self._instruments.get(name)
 
     def names(self) -> List[str]:
         return sorted(self._instruments)

@@ -150,9 +150,12 @@ def validate_file(path: str) -> Dict[str, int]:
 def validate_dir(path: str) -> Dict[str, int]:
     """Validate a ``results/<run_id>/telemetry/`` directory.
 
-    ``events.jsonl`` and ``metrics.jsonl`` are required; any extra
-    ``*.jsonl`` (e.g. ``dryrun.jsonl``) is validated too; ``summary.json``
-    must be a JSON object when present.  Returns merged per-kind counts.
+    ``events.jsonl`` and ``metrics.jsonl`` are required (segment files
+    ``events-NNNN.jsonl`` from a live stream are validated like any other
+    JSONL — each leads with its own meta line); ``summary.json`` must be
+    a JSON object when present; a ``metrics.prom`` OpenMetrics snapshot
+    is parsed and name-linted (the CI telemetry-artifact gate).  Returns
+    merged per-kind counts.
     """
     _require(os.path.isdir(path), f"{path} is not a directory")
     for required in ("events.jsonl", "metrics.jsonl"):
@@ -175,4 +178,16 @@ def validate_dir(path: str) -> Dict[str, int]:
                 raise TelemetryError(f"{summary}: invalid JSON ({e})") from e
         _require(isinstance(doc, dict), f"{summary}: must be a JSON object")
         counts["summary"] = 1
+    prom = os.path.join(path, "metrics.prom")
+    if os.path.isfile(prom):
+        from repro.obs.export import lint_openmetrics, parse_openmetrics
+
+        with open(prom) as f:
+            text = f.read()
+        problems = lint_openmetrics(text)
+        _require(
+            not problems,
+            f"{prom}: OpenMetrics lint failed: {'; '.join(problems)}",
+        )
+        counts["openmetrics"] = len(parse_openmetrics(text))
     return counts

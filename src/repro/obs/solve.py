@@ -69,6 +69,7 @@ def _solve_block(
             residual = float(delta[active].max()) if active.any() else 0.0
         residuals.append(residual)
         actives.append(int(still.sum()))
+        telemetry.maybe_flush()  # superstep boundary = solve-side streaming pump
         F_prev, F, active = F, Fn, still
         if not active.any():
             converged = True

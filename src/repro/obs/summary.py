@@ -16,24 +16,60 @@ import os
 from typing import Any, Dict, List, Optional, Tuple
 
 
+def _segment_names(path: str) -> List[str]:
+    """Live-stream segment files (``events-NNNN.jsonl``), in write order."""
+    return sorted(
+        n
+        for n in os.listdir(path)
+        if n.startswith("events-") and n.endswith(".jsonl")
+    )
+
+
 def load_dir(path: str) -> Tuple[Dict, List[Dict], List[Dict]]:
-    """Read a telemetry directory back into (meta, events, metric lines)."""
+    """Read a telemetry directory back into (meta, events, metric lines).
+
+    Reads the consolidated ``events.jsonl`` plus any live-stream segments
+    still on disk (a run being tailed mid-flight has only segments; a
+    killed run may have both), deduplicating records by ``(kind, id)``.
+    A torn *final* line — the snapshot raced the writer — is tolerated
+    and counted in ``meta["truncated_lines"]``; a bad line anywhere else
+    is real corruption and still raises.
+    """
+    truncated = 0
 
     def read_jsonl(name: str) -> List[Dict]:
+        nonlocal truncated
         fp = os.path.join(path, name)
         if not os.path.isfile(fp):
             return []
         out = []
-        with open(fp) as f:
-            for line in f:
-                line = line.strip()
-                if line:
-                    out.append(json.loads(line))
+        raw = [ln.strip() for ln in open(fp)]
+        raw = [ln for ln in raw if ln]
+        for i, line in enumerate(raw):
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError:
+                if i == len(raw) - 1:
+                    truncated += 1
+                    continue
+                raise
         return out
 
     events = read_jsonl("events.jsonl")
+    seen = {(r.get("kind"), r.get("id")) for r in events if "id" in r}
+    for name in _segment_names(path):
+        for r in read_jsonl(name):
+            key = (r.get("kind"), r.get("id"))
+            if "id" in r and key in seen:
+                continue
+            if "id" in r:
+                seen.add(key)
+            events.append(r)
     metrics = read_jsonl("metrics.jsonl")
     meta = next((r for r in events + metrics if r.get("kind") == "meta"), {})
+    if truncated:
+        meta = dict(meta)
+        meta["truncated_lines"] = truncated
     return (
         meta,
         [r for r in events if r.get("kind") in ("span", "event")],
@@ -58,6 +94,8 @@ def summarize(meta: Dict, events: List[Dict], metrics: List[Dict]) -> Dict[str, 
         "level": meta.get("level"),
         "counters": counters,
     }
+    if meta.get("truncated_lines"):
+        out["truncated_lines"] = meta["truncated_lines"]
 
     spans: Dict[str, int] = {}
     phases = []
@@ -104,6 +142,16 @@ def summarize(meta: Dict, events: List[Dict], metrics: List[Dict]) -> Dict[str, 
             "hit_rate": hits / (hits + misses),
             "evictions": counters.get("serve.cache.evictions", 0),
             "invalidations": counters.get("serve.cache.invalidations", 0),
+        }
+
+    breaches = counters.get("obs.slo.breaches", 0)
+    recoveries = counters.get("obs.slo.recoveries", 0)
+    if breaches or recoveries:
+        burning = _series(by_name.get("obs.slo.burning"))
+        out["slo"] = {
+            "breaches": breaches,
+            "recoveries": recoveries,
+            "burning": bool(burning and burning[-1]),
         }
 
     depth = _series(by_name.get("serve.queue_depth"))
@@ -166,6 +214,14 @@ def render(summary: Dict[str, Any]) -> str:
             f"evictions={cache['evictions']} demoted={cache['invalidations']}"
         )
 
+    slo = summary.get("slo")
+    if slo:
+        state = "BURNING" if slo["burning"] else "ok"
+        lines.append(
+            f"slo: breaches={slo['breaches']} recoveries={slo['recoveries']} "
+            f"state={state}"
+        )
+
     queue = summary.get("queue")
     if queue:
         lines.append(
@@ -185,4 +241,9 @@ def render(summary: Dict[str, Any]) -> str:
     if spans or summary.get("events"):
         span_txt = " ".join(f"{k}={v}" for k, v in sorted(spans.items()))
         lines.append(f"records: spans[{span_txt}] events={summary.get('events', 0)}")
+    if summary.get("truncated_lines"):
+        lines.append(
+            f"warning: {summary['truncated_lines']} truncated trailing "
+            "line(s) skipped (snapshot raced the writer)"
+        )
     return "\n".join(lines)

@@ -23,6 +23,21 @@ Levels: ``off`` < ``metrics`` (counters/gauges/histograms + structural
 spans) < ``trace`` (adds per-superstep / per-query spans) < ``profile``
 (adds ``jax.profiler`` + kernel timing hooks, see
 :mod:`repro.obs.profiler`).
+
+**Streaming** (DESIGN.md §14.7): :meth:`Telemetry.attach_stream` turns
+the end-of-run recorder into a live sink.  Producers call
+:meth:`Telemetry.maybe_flush` from their natural pump points (scheduler
+tick, observed superstep, replay loop) — one attribute test when no
+stream is attached, one clock compare when one is.  Each elapsed
+interval appends the not-yet-written events to an append-only segment
+file (``events-NNNN.jsonl``, meta line first, rotated every
+``segment_records`` lines) and atomically rotates the point-in-time
+snapshots (``metrics.jsonl`` / ``summary.json`` / ``metrics.prom``) via
+temp-file + ``os.replace``, so a concurrent reader never sees a torn
+snapshot.  Flush listeners (the SLO watchdog) run once per tick, after
+the write.  The final :meth:`flush` consolidates: it writes the complete
+``events.jsonl`` and removes the segments, leaving the same directory
+layout a non-streaming run produces.
 """
 
 from __future__ import annotations
@@ -31,7 +46,7 @@ import json
 import os
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 from repro.obs.metrics import MetricsRegistry
 
@@ -62,6 +77,55 @@ class _NullSpan:
 
 
 _NULL_SPAN = _NullSpan()
+
+
+def _atomic_write(path: str, text: str) -> str:
+    """Write ``text`` to ``path`` via temp-file + rename (snapshot
+    rotation: a concurrent ``--follow`` reader never sees a torn file)."""
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+    return path
+
+
+class _StreamSink:
+    """Bookkeeping for one attached streaming directory."""
+
+    __slots__ = (
+        "dir",
+        "interval_s",
+        "segment_records",
+        "next_deadline",
+        "flushed",
+        "seg_index",
+        "seg_path",
+        "seg_count",
+        "ticks",
+    )
+
+    def __init__(
+        self, dir_path: str, interval_s: float, segment_records: int, now: float
+    ):
+        self.dir = dir_path
+        self.interval_s = interval_s
+        self.segment_records = segment_records
+        self.next_deadline = now + interval_s
+        #: events already written to some segment
+        self.flushed = 0
+        self.seg_index = 0
+        self.seg_path: Optional[str] = None
+        self.seg_count = 0
+        self.ticks = 0
+
+    def segment_paths(self) -> List[str]:
+        if not os.path.isdir(self.dir):
+            return []
+        return sorted(
+            os.path.join(self.dir, n)
+            for n in os.listdir(self.dir)
+            if n.startswith("events-") and n.endswith(".jsonl")
+        )
 
 
 class Span:
@@ -133,12 +197,15 @@ class Telemetry:
         *,
         run_id: Optional[str] = None,
         clock=None,
+        export: bool = True,
     ):
         if level not in LEVELS:
             raise ValueError(f"obs level must be one of {LEVELS}, got {level!r}")
         self.level = level
         self.run_id = run_id
         self.clock = time.monotonic if clock is None else clock
+        #: write OpenMetrics text snapshots (``metrics.prom``) on flush
+        self.export = export
         #: disabled-path activity counter — the ONLY state the off level
         #: touches, and the overhead-guard tests' zero-event witness
         self.suppressed = 0
@@ -148,6 +215,9 @@ class Telemetry:
         self._local = threading.local()
         self._ambient: Optional[int] = None
         self.metrics = MetricsRegistry(clock=self.clock)
+        self._stream: Optional[_StreamSink] = None
+        self._flush_lock = threading.Lock()
+        self._listeners: List[Callable[["Telemetry"], None]] = []
 
     # ---------------------------------------------------------------- levels
     @property
@@ -256,31 +326,163 @@ class Telemetry:
 
         return summarize(self.meta(), self.events(), self.metrics.to_lines())
 
+    # ------------------------------------------------------------- streaming
+    def attach_stream(
+        self,
+        dir_path: str,
+        *,
+        interval_s: float = 1.0,
+        segment_records: int = 2048,
+    ) -> bool:
+        """Enable periodic incremental flush into ``dir_path``.
+
+        After attaching, :meth:`maybe_flush` calls from producer pump
+        points write one incremental tick per elapsed ``interval_s``.
+        No-op (returns False) when the level is ``off``.
+        """
+        if not self.enabled:
+            return False
+        if interval_s <= 0:
+            raise ValueError(f"interval_s must be > 0, got {interval_s}")
+        if segment_records < 1:
+            raise ValueError(
+                f"segment_records must be >= 1, got {segment_records}"
+            )
+        os.makedirs(dir_path, exist_ok=True)
+        with self._flush_lock:
+            self._stream = _StreamSink(
+                dir_path, interval_s, segment_records, self.clock()
+            )
+        return True
+
+    @property
+    def streaming(self) -> bool:
+        return self._stream is not None
+
+    def add_flush_listener(self, fn: Callable[["Telemetry"], None]) -> None:
+        """Register a per-tick callback (runs after each incremental
+        write — the SLO watchdog's evaluation hook)."""
+        self._listeners.append(fn)
+
+    def remove_flush_listener(self, fn: Callable[["Telemetry"], None]) -> None:
+        if fn in self._listeners:
+            self._listeners.remove(fn)
+
+    def maybe_flush(self) -> bool:
+        """Incremental flush iff a stream is attached and its interval
+        elapsed.  The no-stream path is one attribute test — cheap enough
+        for per-tick / per-superstep pump points."""
+        stream = self._stream
+        if stream is None:
+            return False
+        if self.clock() < stream.next_deadline:
+            return False
+        return self.flush_tick()
+
+    def flush_tick(self) -> bool:
+        """Force one incremental streaming tick (segment append + atomic
+        snapshot rotation + listeners).  Returns False when no stream is
+        attached or another thread is mid-tick."""
+        stream = self._stream
+        if stream is None or not self.enabled:
+            return False
+        if not self._flush_lock.acquire(blocking=False):
+            return False  # a concurrent producer is already flushing
+        try:
+            if self._stream is not stream:  # detached under our feet
+                return False
+            stream.next_deadline = self.clock() + stream.interval_s
+            with self._lock:
+                fresh = self._events[stream.flushed :]
+                stream.flushed += len(fresh)
+            if fresh:
+                self._append_segment(stream, fresh)
+            self._write_snapshots(stream.dir)
+            stream.ticks += 1
+        finally:
+            self._flush_lock.release()
+        # listeners run outside the flush lock: they record events and
+        # metrics of their own (picked up by the NEXT tick) and may call
+        # back into serve-side knobs
+        for fn in list(self._listeners):
+            fn(self)
+        return True
+
+    def _append_segment(
+        self, stream: _StreamSink, records: List[Dict[str, Any]]
+    ) -> None:
+        """Append ``records`` to the live segment, rotating when full."""
+        for record in records:
+            if (
+                stream.seg_path is None
+                or stream.seg_count >= stream.segment_records
+            ):
+                stream.seg_index += 1
+                stream.seg_path = os.path.join(
+                    stream.dir, f"events-{stream.seg_index:04d}.jsonl"
+                )
+                stream.seg_count = 0
+                with open(stream.seg_path, "w") as f:
+                    f.write(json.dumps(self.meta(), sort_keys=True) + "\n")
+            with open(stream.seg_path, "a") as f:
+                f.write(json.dumps(record, sort_keys=True) + "\n")
+            stream.seg_count += 1
+
+    def _write_snapshots(self, dir_path: str) -> List[str]:
+        """Atomically rotate metrics.jsonl / summary.json / metrics.prom."""
+        meta = self.meta()
+        lines = self.metrics.to_lines()
+        paths = [
+            _atomic_write(
+                os.path.join(dir_path, "metrics.jsonl"),
+                "".join(
+                    json.dumps(r, sort_keys=True) + "\n"
+                    for r in [meta] + lines
+                ),
+            ),
+            _atomic_write(
+                os.path.join(dir_path, "summary.json"),
+                json.dumps(self.summary(), indent=2, sort_keys=True) + "\n",
+            ),
+        ]
+        if self.export:
+            from repro.obs.export import render_openmetrics
+
+            paths.append(
+                _atomic_write(
+                    os.path.join(dir_path, "metrics.prom"),
+                    render_openmetrics(lines, meta=meta),
+                )
+            )
+        return paths
+
     # ----------------------------------------------------------------- flush
     def flush(self, dir_path: str) -> List[str]:
-        """Write ``events.jsonl`` / ``metrics.jsonl`` / ``summary.json``.
+        """Write the final ``events.jsonl`` / ``metrics.jsonl`` /
+        ``summary.json`` (+ ``metrics.prom`` when exporting).
 
         Each JSONL file leads with a ``meta`` line carrying the schema
-        version; returns the written paths ([] when disabled).
+        version; returns the written paths ([] when disabled).  When a
+        stream was attached to the same directory, its segments are
+        consolidated: the complete event log replaces them, so the
+        post-run layout matches a non-streaming run.
         """
         if not self.enabled:
             return []
         os.makedirs(dir_path, exist_ok=True)
         meta = self.meta()
         paths = []
-        events_path = os.path.join(dir_path, "events.jsonl")
-        with open(events_path, "w") as f:
-            for record in [meta] + self.events():
-                f.write(json.dumps(record, sort_keys=True) + "\n")
-        paths.append(events_path)
-        metrics_path = os.path.join(dir_path, "metrics.jsonl")
-        with open(metrics_path, "w") as f:
-            for record in [meta] + self.metrics.to_lines():
-                f.write(json.dumps(record, sort_keys=True) + "\n")
-        paths.append(metrics_path)
-        summary_path = os.path.join(dir_path, "summary.json")
-        with open(summary_path, "w") as f:
-            json.dump(self.summary(), f, indent=2, sort_keys=True)
-            f.write("\n")
-        paths.append(summary_path)
+        with self._flush_lock:
+            stream, self._stream = self._stream, None  # detach: run is over
+            events_path = os.path.join(dir_path, "events.jsonl")
+            with open(events_path, "w") as f:
+                for record in [meta] + self.events():
+                    f.write(json.dumps(record, sort_keys=True) + "\n")
+            paths.append(events_path)
+            paths.extend(self._write_snapshots(dir_path))
+            if stream is not None and os.path.realpath(
+                stream.dir
+            ) == os.path.realpath(dir_path):
+                for seg in stream.segment_paths():
+                    os.unlink(seg)
         return paths

@@ -231,6 +231,12 @@ class LPServeEngine:
             execute=self._execute_batch,
             telemetry=telemetry,
         )
+        self._tel = telemetry
+        # early-exit residual-threshold multiplier: the SLO watchdog's
+        # second degradation rung widens it (columns leave the active set
+        # sooner -> cheaper solves, coarser tails) and restores it to 1.0
+        # on recovery
+        self._sigma_scale = 1.0
         # one solve/update at a time: the engines' prepared-operator caches
         # are single-entry and not concurrency-safe; the sharded column
         # cache carries its own locks, so assembly stays outside this lock
@@ -244,6 +250,22 @@ class LPServeEngine:
     @property
     def version(self) -> int:
         return self._state.version
+
+    @property
+    def sigma_scale(self) -> float:
+        return self._sigma_scale
+
+    def set_sigma_scale(self, scale: float) -> None:
+        """Runtime early-exit degradation knob (>= 1.0 widens σ).
+
+        Only the early-exit solve path honors it; on a full-superstep
+        engine the knob is recorded but inert.
+        """
+        if scale < 1.0:
+            raise ValueError(f"sigma_scale must be >= 1.0, got {scale}")
+        self._sigma_scale = float(scale)
+        if self._tel is not None:
+            self._tel.gauge("serve.early_exit.sigma_scale", self._sigma_scale)
 
     # -------------------------------------------------------------- queries
     def _validate(self, spec: QuerySpec, state: NetworkState) -> None:
@@ -423,7 +445,7 @@ class LPServeEngine:
             delta = np.asarray(delta, dtype=np.float64)[:a]
             F[:, active] = Fn
             col_iters[active] += 1
-            active = active[delta >= cfg.sigma]
+            active = active[delta >= cfg.sigma * self._sigma_scale]
             it += 1
         return SolveResult(
             F=F,

@@ -26,6 +26,21 @@ from repro.core.network import GraphDelta
 from repro.serve.types import DEFAULT_PRIORITY, QuerySpec, percentiles
 
 
+def _observe_latencies(engine, telemetry, lats) -> None:
+    """Post-hoc latency recording for a telemetry-blind scheduler.
+
+    When the engine's batcher carries its own telemetry, every latency
+    was already observed live at completion time (per-window SLO
+    evaluation needs that); recording here again would double-count.
+    This fallback keeps the standalone pairing — engine built without
+    telemetry, player called with one — reporting a full histogram.
+    """
+    if telemetry is None or getattr(engine.batcher, "_tel", None) is not None:
+        return
+    for lat in lats:
+        telemetry.observe("serve.latency_s", lat)
+
+
 def _sample(result) -> Dict:
     """Provenance snapshot of one query result (artifact ``sample``)."""
     return {
@@ -85,13 +100,14 @@ def replay_trace(
                 )
             )
         )
+        if telemetry is not None:
+            telemetry.count("serve.replay.submitted")
+            telemetry.maybe_flush()  # submit loop = arrival-side pump
     results = [f.result(timeout=600) for f in futs]
     wall = time.monotonic() - t0
     engine.stop()
     lats = [r.latency_s for r in results]
-    if telemetry is not None:
-        for lat in lats:
-            telemetry.observe("serve.latency_s", lat)
+    _observe_latencies(engine, telemetry, lats)
     sources = [r.source for r in results]
     offered = len(trace) / (trace.horizon_s / time_scale)
     achieved = len(results) / wall
@@ -171,14 +187,15 @@ def play_zipf(
                 QuerySpec(entity=int(ent), target_type=target_type, top_k=top_k)
             )
         )
+        if telemetry is not None:
+            telemetry.count("serve.replay.submitted")
+            telemetry.maybe_flush()  # submit loop = arrival-side pump
     results = [f.result(timeout=600) for f in futures]
     wall = time.monotonic() - t0
     engine.stop()
 
     lats = [r.latency_s for r in results]
-    if telemetry is not None:
-        for lat in lats:
-            telemetry.observe("serve.latency_s", lat)
+    _observe_latencies(engine, telemetry, lats)
     by_source = collections.Counter(r.source for r in results)
     rounds_by = collections.defaultdict(list)
     for r in results:

@@ -165,8 +165,12 @@ class MicroBatcher:
         }
         self._pending_count = 0
         self._cond = threading.Condition()
+        # per-instance so the SLO degradation hook can shed a class's
+        # share at runtime (set_admit_fraction) without touching the
+        # module-level policy defaults
+        self._admit_fraction = dict(ADMIT_FRACTION)
         self._admit_limit = {
-            c: max(1, int(queue_depth * ADMIT_FRACTION[c]))
+            c: max(1, int(queue_depth * self._admit_fraction[c]))
             for c in PRIORITY_CLASSES
         }
         self.stats = SchedulerStats()
@@ -233,6 +237,39 @@ class MicroBatcher:
             self._tel.count("serve.rejected")
             self._tel.count(f"serve.rejected.{cls}")
         raise queue.Full
+
+    # ------------------------------------------------- admission degradation
+    def admit_fraction(self, cls: str) -> float:
+        """The current admission share for ``cls`` (1.0 = whole queue)."""
+        if cls not in PRIORITY_CLASSES:
+            raise ValueError(
+                f"unknown priority {cls!r}; classes: {PRIORITY_CLASSES}"
+            )
+        with self._cond:
+            return self._admit_fraction[cls]
+
+    def set_admit_fraction(self, cls: str, fraction: float) -> None:
+        """Runtime admission-control knob (the SLO degradation hook).
+
+        Shrinking a class's fraction sheds its load at the admission
+        edge — over-budget submits reject/block immediately; growing it
+        back wakes blocked producers.  The limit floor of 1 mirrors
+        ``__init__``: no class is ever fully shut off.
+        """
+        if cls not in PRIORITY_CLASSES:
+            raise ValueError(
+                f"unknown priority {cls!r}; classes: {PRIORITY_CLASSES}"
+            )
+        if not 0.0 < fraction <= 1.0:
+            raise ValueError(
+                f"admit fraction must be in (0, 1], got {fraction}"
+            )
+        with self._cond:
+            self._admit_fraction[cls] = float(fraction)
+            self._admit_limit[cls] = max(1, int(self.queue_depth * fraction))
+            self._cond.notify_all()  # a raised limit unblocks waiters
+        if self._tel is not None:
+            self._tel.gauge(f"serve.admit_limit.{cls}", self._admit_limit[cls])
 
     @property
     def pending(self) -> int:
@@ -315,6 +352,9 @@ class MicroBatcher:
             tel.gauge(f"serve.queue_depth.{c}", d)
         tel.gauge("serve.batch_size", len(live))
         tel.gauge("serve.batch_occupancy", len(live) / self.max_batch)
+        # the scheduler tick is the serve tier's streaming pump: one
+        # attribute test when no stream is attached (DESIGN.md §14.7)
+        tel.maybe_flush()
 
     def _track_inflight(self, live: List[_Entry], delta: int) -> None:
         tel = self._tel
@@ -333,6 +373,11 @@ class MicroBatcher:
         for (spec, fut, t_in), res in zip(live, results):
             res.latency_s = now - t_in
             fut.set_result(res)
+            if tel is not None:
+                # recorded at completion time (not post-replay) so the
+                # latency histogram fills live — per-window SLO evaluation
+                # and `repro obs --follow` read it mid-run
+                tel.observe("serve.latency_s", res.latency_s)
             if tel is not None and tel.trace_enabled:
                 tel.event(
                     "serve.query",

@@ -155,6 +155,109 @@ class TestHistogramBuckets:
         with pytest.raises(TypeError):
             reg.gauge("x")
 
+    def test_registry_peek_never_creates(self):
+        reg = MetricsRegistry(clock=FakeClock())
+        assert reg.peek("nope") is None
+        assert reg.names() == []
+        reg.counter("x").inc(3)
+        assert reg.peek("x").value == 3
+
+
+class TestHistogramMerge:
+    def test_merge_adds_counts_and_widens_envelope(self):
+        a, b = Histogram("lat"), Histogram("lat")
+        for v in (1e-4, 2e-4):
+            a.observe(v)
+        for v in (5e-1, 3.0):
+            b.observe(v)
+        a.merge(b)
+        assert a.count == 4
+        assert a.total == pytest.approx(1e-4 + 2e-4 + 0.5 + 3.0)
+        assert a.min == pytest.approx(1e-4)
+        assert a.max == pytest.approx(3.0)
+        assert sum(a.counts) == 4
+
+    def test_merge_equals_single_histogram(self):
+        """Two halves merged == everything observed in one instrument —
+        the segment-rotation / SLO-window mergeability contract."""
+        values = [10.0 ** (v / 3.0) for v in range(-12, 6)]
+        whole = Histogram("lat")
+        a, b = Histogram("lat"), Histogram("lat")
+        for i, v in enumerate(values):
+            whole.observe(v)
+            (a if i % 2 else b).observe(v)
+        a.merge(b)
+        assert a.counts == whole.counts
+        assert a.count == whole.count
+        assert a.total == pytest.approx(whole.total)
+        for q in (0.5, 0.95, 0.99, 1.0):
+            assert a.percentile(q) == whole.percentile(q)
+
+    def test_merge_rejects_mismatched_edges(self):
+        a = Histogram("lat")
+        b = Histogram("lat", edges=(0.1, 1.0, 10.0))
+        with pytest.raises(ValueError, match="different edges"):
+            a.merge(b)
+
+    def test_merge_empty_is_identity(self):
+        a, b = Histogram("lat"), Histogram("lat")
+        a.observe(0.25)
+        a.merge(b)
+        assert a.count == 1
+        assert a.min == a.max == pytest.approx(0.25)
+        b.merge(a)  # empty absorbing non-empty adopts its envelope
+        assert b.min == b.max == pytest.approx(0.25)
+
+    def test_from_line_round_trip(self):
+        h = Histogram("lat")
+        for v in (1e-5, 1e-3, 0.2, 250.0):
+            h.observe(v)
+        h2 = Histogram.from_line(h.to_line())
+        assert h2.counts == h.counts
+        assert h2.count == h.count
+        assert h2.total == pytest.approx(h.total)
+        assert h2.min == pytest.approx(h.min)
+        assert h2.max == pytest.approx(h.max)
+        assert h2.percentile(0.95) == h.percentile(0.95)
+
+    def test_from_line_rejects_bad_counts(self):
+        line = Histogram("lat").to_line()
+        line["counts"] = line["counts"][:-1]
+        with pytest.raises(ValueError, match="counts"):
+            Histogram.from_line(line)
+
+
+class TestPercentileEdgeCases:
+    def test_empty_histogram_has_no_percentiles(self):
+        h = Histogram("lat")
+        for q in (0.0, 0.5, 0.95, 1.0):
+            assert h.percentile(q) is None
+
+    def test_single_observation_every_quantile(self):
+        h = Histogram("lat")
+        h.observe(0.042)
+        for q in (0.01, 0.5, 0.95, 1.0):
+            assert h.percentile(q) == pytest.approx(0.042)
+
+    def test_overflow_bucket_percentile_clamps_to_max(self):
+        h = Histogram("lat")
+        h.observe(1e5)  # beyond the last edge: the overflow bucket
+        h.observe(2e5)
+        assert h.counts[-1] == 2
+        # the overflow bucket has no sub-resolution: its conservative
+        # bound is the observed max for every quantile it covers
+        assert h.percentile(0.5) == pytest.approx(2e5)
+        assert h.percentile(1.0) == pytest.approx(2e5)
+
+    def test_percentiles_monotone_in_q(self):
+        h = Histogram("lat")
+        for v in (1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0):
+            h.observe(v)
+        qs = (0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0)
+        ps = [h.percentile(q) for q in qs]
+        assert ps == sorted(ps)
+        assert h.min <= ps[0] and ps[-1] <= h.max
+
 
 # ---------------------------------------------------------------------------
 # JSONL round-trip
@@ -175,7 +278,7 @@ class TestRoundTrip:
         tel = self._recorded()
         paths = tel.flush(str(tmp_path))
         assert [p.rsplit("/", 1)[1] for p in paths] == [
-            "events.jsonl", "metrics.jsonl", "summary.json",
+            "events.jsonl", "metrics.jsonl", "summary.json", "metrics.prom",
         ]
         counts = validate_dir(str(tmp_path))
         assert counts["meta"] == 2

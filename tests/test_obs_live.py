@@ -1,0 +1,637 @@
+"""Live-observability tests (DESIGN.md §14.7–§14.9).
+
+The ISSUE-9 acceptance surface: streaming flush under an injected clock
+(append-only segments, atomic snapshot rotation, final consolidation),
+OpenMetrics render/parse/lint round-trips, tolerant telemetry loading
+(segments + torn tails), the SLO watchdog's burn/breach/recovery state
+machine wired into serve admission control and early-exit widening, and
+the ``repro obs`` default-run / ``--follow`` CLI paths.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.obs import (
+    ServeDegradation,
+    SLOWatchdog,
+    Telemetry,
+    TelemetryError,
+    lint_openmetrics,
+    parse_openmetrics,
+    render_openmetrics,
+    validate_dir,
+)
+from repro.obs.export import metric_name
+from repro.obs.summary import load_dir, render, summarize
+
+
+class FakeClock:
+    """Deterministic monotonic clock: each read advances by ``step``."""
+
+    def __init__(self, step=1.0):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self) -> float:
+        t = self.t
+        self.t += self.step
+        return t
+
+
+def small_net(seed=0, n=(18, 12, 9)):
+    from repro.core import HeteroNetwork
+
+    rng = np.random.default_rng(seed)
+    P = []
+    for ni in n:
+        a = (rng.random((ni, ni)) < 0.35) * rng.random((ni, ni))
+        np.fill_diagonal(a, 0)
+        P.append((a + a.T) / 2)
+    R = {(i, j): (rng.random((n[i], n[j])) < 0.3).astype(float)
+         for (i, j) in [(0, 1), (0, 2), (1, 2)]}
+    return HeteroNetwork(P=P, R=R)
+
+
+def serve_engine(**cfg_kw):
+    from repro.core import LPConfig
+    from repro.serve import LPServeEngine, ServeConfig
+
+    base = dict(
+        lp=LPConfig(alg="dhlp2", seed_mode="fixed", sigma=1e-6),
+        max_wait_s=1e-3,
+    )
+    base.update(cfg_kw)
+    return LPServeEngine(small_net(), ServeConfig(**base))
+
+
+# ---------------------------------------------------------------------------
+# streaming sink
+# ---------------------------------------------------------------------------
+class TestStreaming:
+    def test_attach_refused_when_off(self, tmp_path):
+        tel = Telemetry("off", clock=FakeClock())
+        assert tel.attach_stream(str(tmp_path)) is False
+        assert not tel.streaming
+
+    def test_maybe_flush_without_stream_is_inert(self):
+        clock = FakeClock()
+        tel = Telemetry("metrics", clock=clock)
+        t_before = clock.t
+        assert tel.maybe_flush() is False
+        # the no-stream path never even reads the clock
+        assert clock.t == t_before
+
+    def test_interval_gates_ticks(self, tmp_path):
+        clock = FakeClock(step=1.0)
+        tel = Telemetry("metrics", run_id="live", clock=clock)
+        tel.attach_stream(str(tmp_path), interval_s=10.0)
+        assert tel.maybe_flush() is False  # deadline not reached
+        clock.t = 100.0
+        assert tel.maybe_flush() is True
+        assert tel._stream.ticks == 1
+
+    def test_segments_and_snapshots_land_mid_run(self, tmp_path):
+        clock = FakeClock(step=1.0)
+        tel = Telemetry("metrics", run_id="live", clock=clock)
+        tel.attach_stream(str(tmp_path), interval_s=0.5)
+        tel.event("warmup", n=1)
+        tel.count("serve.completed", 3)
+        assert tel.maybe_flush() is True
+        names = sorted(os.listdir(tmp_path))
+        assert "events-0001.jsonl" in names
+        assert "metrics.jsonl" in names
+        assert "summary.json" in names
+        assert "metrics.prom" in names
+        assert "events.jsonl" not in names  # consolidation is final-flush
+        with open(tmp_path / "events-0001.jsonl") as f:
+            lines = [json.loads(ln) for ln in f]
+        assert lines[0]["kind"] == "meta"
+        assert lines[1]["name"] == "warmup"
+        assert lint_openmetrics((tmp_path / "metrics.prom").read_text()) == []
+
+    def test_segment_rotation_at_record_limit(self, tmp_path):
+        clock = FakeClock(step=1.0)
+        tel = Telemetry("metrics", run_id="live", clock=clock)
+        tel.attach_stream(str(tmp_path), interval_s=0.5, segment_records=3)
+        for i in range(8):
+            tel.event("e", i=i)
+        tel.flush_tick()
+        segs = sorted(n for n in os.listdir(tmp_path) if n.startswith("events-"))
+        assert segs == [
+            "events-0001.jsonl", "events-0002.jsonl", "events-0003.jsonl",
+        ]
+        # every segment leads with its own meta line
+        for seg in segs:
+            with open(tmp_path / seg) as f:
+                assert json.loads(f.readline())["kind"] == "meta"
+
+    def test_incremental_ticks_only_write_fresh_events(self, tmp_path):
+        clock = FakeClock(step=1.0)
+        tel = Telemetry("metrics", run_id="live", clock=clock)
+        tel.attach_stream(str(tmp_path), interval_s=0.5, segment_records=100)
+        tel.event("a")
+        tel.flush_tick()
+        tel.event("b")
+        tel.flush_tick()
+        with open(tmp_path / "events-0001.jsonl") as f:
+            names = [json.loads(ln).get("name") for ln in f]
+        assert names == [None, "a", "b"]  # meta, then each event exactly once
+
+    def test_final_flush_consolidates_segments(self, tmp_path):
+        clock = FakeClock(step=1.0)
+        tel = Telemetry("metrics", run_id="live", clock=clock)
+        tel.attach_stream(str(tmp_path), interval_s=0.5)
+        tel.event("early")
+        tel.flush_tick()
+        tel.event("late")
+        paths = tel.flush(str(tmp_path))
+        assert [os.path.basename(p) for p in paths] == [
+            "events.jsonl", "metrics.jsonl", "summary.json", "metrics.prom",
+        ]
+        assert not [n for n in os.listdir(tmp_path) if n.startswith("events-")]
+        assert not tel.streaming  # detached: the run is over
+        counts = validate_dir(str(tmp_path))
+        assert counts["event"] == 2
+        assert counts["openmetrics"] >= 0
+        meta, events, _ = load_dir(str(tmp_path))
+        assert [e["name"] for e in events] == ["early", "late"]
+
+    def test_export_off_omits_prom(self, tmp_path):
+        tel = Telemetry("metrics", run_id="x", clock=FakeClock(), export=False)
+        paths = tel.flush(str(tmp_path))
+        assert [os.path.basename(p) for p in paths] == [
+            "events.jsonl", "metrics.jsonl", "summary.json",
+        ]
+
+    def test_flush_listeners_run_per_tick(self, tmp_path):
+        clock = FakeClock(step=1.0)
+        tel = Telemetry("metrics", run_id="live", clock=clock)
+        tel.attach_stream(str(tmp_path), interval_s=0.5)
+        seen = []
+        tel.add_flush_listener(lambda t: seen.append(t._stream.ticks))
+        tel.flush_tick()
+        tel.flush_tick()
+        assert seen == [1, 2]
+        tel.remove_flush_listener(tel._listeners[0])
+        tel.flush_tick()
+        assert seen == [1, 2]
+
+    def test_load_dir_reads_segments_of_a_killed_run(self, tmp_path):
+        """A run that died mid-stream has segments but no events.jsonl —
+        the loader still reconstructs it."""
+        clock = FakeClock(step=1.0)
+        tel = Telemetry("metrics", run_id="killed", clock=clock)
+        tel.attach_stream(str(tmp_path), interval_s=0.5, segment_records=2)
+        for i in range(5):
+            tel.event("e", i=i)
+        tel.flush_tick()
+        meta, events, _ = load_dir(str(tmp_path))
+        assert meta["run_id"] == "killed"
+        assert len(events) == 5
+        summary = summarize(meta, events, [])
+        assert summary["events"] == 5
+
+
+# ---------------------------------------------------------------------------
+# tolerant loading
+# ---------------------------------------------------------------------------
+class TestLoadDirTolerance:
+    def _dir_with_tail(self, tmp_path, tail: str):
+        tel = Telemetry("metrics", run_id="t", clock=FakeClock())
+        tel.event("ok")
+        tel.flush(str(tmp_path))
+        with open(tmp_path / "events.jsonl", "a") as f:
+            f.write(tail)
+        return tmp_path
+
+    def test_truncated_trailing_line_skipped_and_counted(self, tmp_path):
+        d = self._dir_with_tail(tmp_path, '{"kind": "event", "id": 99, "na')
+        meta, events, _ = load_dir(str(d))
+        assert [e["name"] for e in events] == ["ok"]
+        assert meta["truncated_lines"] == 1
+        summary = summarize(meta, events, [])
+        assert summary["truncated_lines"] == 1
+        assert "truncated" in render(summary)
+
+    def test_mid_file_corruption_still_raises(self, tmp_path):
+        d = self._dir_with_tail(
+            tmp_path, 'NOT JSON\n{"kind": "event", "id": 99, "name": "z", "t": 0}\n'
+        )
+        with pytest.raises(json.JSONDecodeError):
+            load_dir(str(d))
+
+    def test_duplicate_records_across_files_deduped(self, tmp_path):
+        """events.jsonl + leftover segments share records: (kind, id)
+        dedupe keeps one copy."""
+        tel = Telemetry("metrics", run_id="t", clock=FakeClock())
+        tel.attach_stream(str(tmp_path), interval_s=0.5)
+        tel.event("once")
+        tel.flush_tick()
+        seg = next(
+            tmp_path / n for n in os.listdir(tmp_path) if n.startswith("events-")
+        )
+        seg_copy = seg.read_text()
+        tel.flush(str(tmp_path))  # consolidates and removes the segment
+        (tmp_path / "events-0001.jsonl").write_text(seg_copy)  # leftover
+        _, events, _ = load_dir(str(tmp_path))
+        assert [e["name"] for e in events] == ["once"]
+
+
+# ---------------------------------------------------------------------------
+# OpenMetrics export
+# ---------------------------------------------------------------------------
+class TestOpenMetrics:
+    def _tel(self):
+        tel = Telemetry("metrics", run_id="om", clock=FakeClock())
+        tel.count("serve.completed", 7)
+        tel.gauge("serve.queue_depth", 3.0)
+        for v in (1e-4, 5e-3, 0.2):
+            tel.observe("serve.latency_s", v)
+        return tel
+
+    def test_name_sanitization(self):
+        assert metric_name("serve.latency_s") == "repro_serve_latency_s"
+        assert metric_name("obs.slo.breaches") == "repro_obs_slo_breaches"
+        assert metric_name("weird-name!") == "repro_weird_name_"
+
+    def test_render_parse_round_trip(self):
+        tel = self._tel()
+        text = render_openmetrics(tel.metrics.to_lines(), meta=tel.meta())
+        assert text.rstrip("\n").endswith("# EOF")
+        fams = parse_openmetrics(text)
+        counter = fams["repro_serve_completed"]
+        assert counter["type"] == "counter"
+        assert counter["samples"] == [
+            ("repro_serve_completed_total", {}, 7.0)
+        ]
+        gauge = fams["repro_serve_queue_depth"]
+        assert gauge["samples"][0][2] == 3.0
+        hist = fams["repro_serve_latency_s"]
+        buckets = [s for s in hist["samples"]
+                   if s[0] == "repro_serve_latency_s_bucket"]
+        assert buckets[-1][1]["le"] == "+Inf"
+        assert buckets[-1][2] == 3.0
+        cums = [v for _, _, v in buckets]
+        assert cums == sorted(cums)
+        count = next(v for n, _, v in hist["samples"]
+                     if n == "repro_serve_latency_s_count")
+        assert count == 3.0
+
+    def test_lint_clean_snapshot(self):
+        tel = self._tel()
+        text = render_openmetrics(tel.metrics.to_lines(), meta=tel.meta())
+        assert lint_openmetrics(text) == []
+
+    def test_lint_catches_structural_problems(self):
+        assert "missing '# EOF' terminator" in lint_openmetrics("x_total 1\n")[0]
+        bad_buckets = (
+            "# TYPE h histogram\n"
+            'h_bucket{le="1"} 5\n'
+            'h_bucket{le="+Inf"} 3\n'
+            "h_count 3\n# EOF\n"
+        )
+        assert any("cumulative" in p for p in lint_openmetrics(bad_buckets))
+        no_inf = "# TYPE h histogram\n" 'h_bucket{le="1"} 1\n' "# EOF\n"
+        assert any("+Inf" in p for p in lint_openmetrics(no_inf))
+        bare = "orphan 1\n# EOF\n"
+        assert any("TYPE" in p for p in lint_openmetrics(bare))
+
+    def test_unset_gauge_exports_nothing(self):
+        tel = Telemetry("metrics", clock=FakeClock())
+        tel.metrics.gauge("never.set")
+        text = render_openmetrics(tel.metrics.to_lines())
+        assert "never_set" not in text
+        assert lint_openmetrics(text) == []
+
+
+# ---------------------------------------------------------------------------
+# serve degradation knobs
+# ---------------------------------------------------------------------------
+class TestDegradationKnobs:
+    def test_set_admit_fraction_shrinks_limit(self):
+        engine = serve_engine(queue_depth=64)
+        b = engine.batcher
+        assert b.admit_fraction("bulk") == 0.5
+        b.set_admit_fraction("bulk", 0.1)
+        assert b.admit_fraction("bulk") == pytest.approx(0.1)
+        assert b._admit_limit["bulk"] == 6  # int(64 * 0.1)
+        b.set_admit_fraction("bulk", 0.001)
+        assert b._admit_limit["bulk"] == 1  # floor: never fully shut off
+        with pytest.raises(ValueError, match="fraction"):
+            b.set_admit_fraction("bulk", 0.0)
+        with pytest.raises(ValueError, match="unknown priority"):
+            b.set_admit_fraction("nope", 0.5)
+
+    def test_sigma_scale_validates_and_widens(self):
+        engine = serve_engine()
+        assert engine.sigma_scale == 1.0
+        engine.set_sigma_scale(4.0)
+        assert engine.sigma_scale == 4.0
+        with pytest.raises(ValueError, match=">= 1"):
+            engine.set_sigma_scale(0.5)
+
+    def test_ladder_escalates_then_restores(self):
+        engine = serve_engine(queue_depth=32)
+        deg = ServeDegradation(engine, bulk_fraction=0.1, sigma_scale=4.0)
+        assert deg.escalate() == "shed_bulk"
+        assert engine.batcher.admit_fraction("bulk") == pytest.approx(0.1)
+        assert engine.sigma_scale == 1.0
+        assert deg.escalate() == "widen_sigma"
+        assert engine.sigma_scale == 4.0
+        assert deg.escalate() is None  # ladder exhausted
+        assert deg.level == 2
+        assert deg.restore() == ["shed_bulk", "widen_sigma"]
+        assert deg.level == 0
+        assert engine.batcher.admit_fraction("bulk") == pytest.approx(0.5)
+        assert engine.sigma_scale == 1.0
+
+
+# ---------------------------------------------------------------------------
+# SLO watchdog
+# ---------------------------------------------------------------------------
+class TestSLOWatchdog:
+    def _rig(self, tmp_path, **slo_kw):
+        clock = FakeClock(step=0.001)
+        tel = Telemetry("metrics", run_id="chaos", clock=clock)
+        # huge interval: ticks only fire when the test forces them
+        tel.attach_stream(str(tmp_path), interval_s=1e9)
+        engine = serve_engine(queue_depth=32)
+        dog = SLOWatchdog(
+            tel,
+            degradation=ServeDegradation(engine),
+            **slo_kw,
+        ).attach()
+        return tel, engine, dog
+
+    def test_chaos_latency_breach_degrade_recover(self, tmp_path):
+        """The ISSUE-9 chaos scenario, deterministic under FakeClock:
+        healthy windows, then throughput dies (every query slow), the
+        watchdog breaches within burn_windows ticks and sheds bulk
+        admission, keeps burning and widens early-exit sigma, then the
+        workload recovers and both knobs restore."""
+        tel, engine, dog = self._rig(
+            tmp_path, latency_p95_ms=100.0, burn_windows=2, recovery_windows=2
+        )
+        base_bulk = engine.batcher.admit_fraction("bulk")
+
+        tel.flush_tick()  # window anchor
+        for _ in range(3):  # healthy: 10ms queries
+            for _ in range(5):
+                tel.observe("serve.latency_s", 0.01)
+            tel.flush_tick()
+        assert dog.windows == 3
+        assert not dog.breached
+        assert engine.batcher.admit_fraction("bulk") == base_bulk
+
+        # chaos: throughput collapses, every query takes ~1s
+        for tick in range(2):
+            for _ in range(5):
+                tel.observe("serve.latency_s", 1.0)
+            tel.flush_tick()
+        # detection within burn_windows: breach + first rung (shed bulk)
+        assert dog.breached
+        assert dog.breaches == 1
+        assert engine.batcher.admit_fraction("bulk") < base_bulk
+        assert engine.sigma_scale == 1.0
+
+        for _ in range(2):  # still burning: next rung (widen sigma)
+            for _ in range(5):
+                tel.observe("serve.latency_s", 1.0)
+            tel.flush_tick()
+        assert engine.sigma_scale > 1.0
+
+        for _ in range(2):  # recovery: healthy latencies again
+            for _ in range(5):
+                tel.observe("serve.latency_s", 0.01)
+            tel.flush_tick()
+        assert not dog.breached
+        assert dog.recoveries == 1
+        assert engine.batcher.admit_fraction("bulk") == base_bulk
+        assert engine.sigma_scale == 1.0
+
+        names = [e.get("name") for e in tel.events()]
+        assert names.count("obs.slo.breach") == 2  # one per escalation
+        assert names.count("obs.slo.recovery") == 1
+        breach = next(e for e in tel.events() if e.get("name") == "obs.slo.breach")
+        assert breach["attrs"]["violations"][0]["objective"] == "latency_p95_ms"
+        assert breach["attrs"]["action"] == "shed_bulk"
+        assert tel.metrics.peek("obs.slo.breaches").value == 2
+        assert tel.metrics.peek("obs.slo.recoveries").value == 1
+
+    def test_error_rate_objective(self, tmp_path):
+        tel, engine, dog = self._rig(
+            tmp_path, error_rate=0.2, burn_windows=1, recovery_windows=1
+        )
+        tel.flush_tick()  # anchor
+        tel.count("serve.completed", 10)
+        tel.flush_tick()
+        assert not dog.breached  # 0% errors
+        tel.count("serve.completed", 4)
+        tel.count("serve.failed", 3)
+        tel.count("serve.rejected", 3)
+        tel.flush_tick()
+        assert dog.breached  # 60% of this window errored
+        assert dog.history[-1]["violations"][0]["objective"] == "error_rate"
+
+    def test_cache_hit_floor_objective(self, tmp_path):
+        tel, engine, dog = self._rig(
+            tmp_path, cache_hit_floor=0.5, burn_windows=1, recovery_windows=1
+        )
+        tel.flush_tick()
+        tel.count("serve.cache.hits", 9)
+        tel.count("serve.cache.misses", 1)
+        tel.flush_tick()
+        assert not dog.breached
+        tel.count("serve.cache.hits", 1)
+        tel.count("serve.cache.misses", 9)
+        tel.flush_tick()
+        assert dog.breached
+        tel.flush_tick()  # no lookups: the objective is quiescent
+        assert not dog.breached  # recovered after one clean window
+
+    def test_convergence_stall_objective(self, tmp_path):
+        tel, engine, dog = self._rig(
+            tmp_path, stall_windows=2, burn_windows=1, recovery_windows=1
+        )
+        tel.flush_tick()  # anchor
+        for residual in (0.5, 0.4, 0.3):  # improving: no stall
+            tel.gauge("solve.residual", residual)
+            tel.flush_tick()
+        assert not dog.breached
+        for residual in (0.3, 0.3, 0.3):  # flatlined across windows
+            tel.gauge("solve.residual", residual)
+            tel.flush_tick()
+        assert dog.breached
+        assert (
+            dog.history[-1]["violations"][0]["objective"] == "convergence_stall"
+        )
+
+    def test_quiescent_windows_never_burn(self, tmp_path):
+        """No traffic at all: every objective is vacuous, no breach."""
+        tel, engine, dog = self._rig(
+            tmp_path,
+            latency_p95_ms=1.0,
+            error_rate=0.01,
+            cache_hit_floor=0.99,
+            burn_windows=1,
+        )
+        for _ in range(5):
+            tel.flush_tick()
+        assert not dog.breached
+        assert dog.breaches == 0
+
+    def test_report_shape(self, tmp_path):
+        tel, engine, dog = self._rig(tmp_path, latency_p95_ms=50.0)
+        rep = dog.report()
+        assert rep["windows"] == 0
+        assert rep["breaches"] == 0
+        assert rep["objectives"] == {"latency_p95_ms": 50.0}
+        assert rep["burn_windows"] == 3
+        json.dumps(rep)  # artifact-ready
+
+    def test_detach_stops_evaluation(self, tmp_path):
+        tel, engine, dog = self._rig(tmp_path, latency_p95_ms=50.0)
+        dog.detach()
+        tel.flush_tick()
+        tel.flush_tick()
+        assert dog.windows == 0
+
+
+# ---------------------------------------------------------------------------
+# spec + session wiring
+# ---------------------------------------------------------------------------
+class TestSpecWiring:
+    def test_slo_spec_validation(self):
+        from repro.api import ObsSpec, SLOSpec, SpecError
+
+        with pytest.raises(SpecError, match="at least one objective"):
+            SLOSpec()
+        with pytest.raises(SpecError, match=r"\[0, 1\]"):
+            SLOSpec(error_rate=1.5)
+        with pytest.raises(SpecError, match="flush_interval_s"):
+            ObsSpec(level="metrics", slo=SLOSpec(latency_p95_ms=100.0))
+        with pytest.raises(SpecError, match="off"):
+            ObsSpec(
+                level="off",
+                flush_interval_s=1.0,
+                slo=SLOSpec(latency_p95_ms=100.0),
+            )
+        obs = ObsSpec.from_dict(
+            {
+                "level": "metrics",
+                "flush_interval_s": 0.25,
+                "slo": {"latency_p95_ms": 100.0, "burn_windows": 2},
+            }
+        )
+        assert obs.slo.latency_p95_ms == 100.0
+        assert obs.slo.burn_windows == 2
+
+    def test_session_attaches_watchdog_once(self, tmp_path):
+        from repro.api import NetworkSpec, ObsSpec, RunSpec, ServeSpec, Session
+        from repro.api import SLOSpec, SolveSpec
+
+        npz = str(tmp_path / "net.npz")
+        small_net().save_npz(npz)
+        spec = RunSpec(
+            run_id="wired",
+            network=NetworkSpec(kind="file", path=npz),
+            solve=SolveSpec(backend="dense", seed_mode="fixed"),
+            serve=ServeSpec(requests=4),
+            obs=ObsSpec(
+                level="metrics",
+                flush_interval_s=0.5,
+                slo=SLOSpec(latency_p95_ms=100.0),
+            ),
+        )
+        session = Session(spec, results_root=str(tmp_path / "results"))
+        session.serve_engine()
+        assert session._watchdog is not None
+        assert len(session.telemetry._listeners) == 1
+        first = session._watchdog
+        session.serve_engine()  # a rebuild replaces, never stacks
+        assert session._watchdog is not first
+        assert len(session.telemetry._listeners) == 1
+        assert session.telemetry.export is True
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+class TestObsCli:
+    def _make_run(self, root, run_id, mtime=None):
+        tel = Telemetry("metrics", run_id=run_id, clock=FakeClock())
+        tel.event("hello")
+        tel.count("serve.completed", 1)
+        d = os.path.join(root, run_id, "telemetry")
+        tel.flush(d)
+        if mtime is not None:
+            os.utime(d, (mtime, mtime))
+        return d
+
+    def test_default_run_id_picks_most_recent(self, tmp_path, capsys):
+        from repro.launch.cli import obs_main
+
+        root = str(tmp_path)
+        self._make_run(root, "older", mtime=1_000_000)
+        self._make_run(root, "newer", mtime=2_000_000)
+        assert obs_main(["--results-root", root]) == 0
+        out = capsys.readouterr().out
+        assert "defaulting to most recent run: newer" in out
+        assert "run newer" in out
+
+    def test_no_runs_is_an_error(self, tmp_path, capsys):
+        from repro.launch.cli import obs_main
+
+        assert obs_main(["--results-root", str(tmp_path)]) == 2
+        assert "no run with telemetry" in capsys.readouterr().err
+
+    def test_segment_only_dir_is_recognized(self, tmp_path, capsys):
+        """A run being tailed mid-flight has only segments + snapshots."""
+        from repro.launch.cli import obs_main
+
+        clock = FakeClock()
+        tel = Telemetry("metrics", run_id="live", clock=clock)
+        d = os.path.join(str(tmp_path), "live", "telemetry")
+        tel.attach_stream(d, interval_s=0.5)
+        tel.event("mid")
+        tel.flush_tick()
+        assert obs_main(["--results-root", str(tmp_path)]) == 0
+        assert "run live" in capsys.readouterr().out
+
+    def test_follow_re_renders_and_stops_at_max_ticks(self, tmp_path, capsys):
+        from repro.launch.cli import obs_main
+
+        root = str(tmp_path)
+        self._make_run(root, "r1")
+        rc = obs_main(
+            ["r1", "--results-root", root, "--follow",
+             "--interval", "0.01", "--max-ticks", "1"]
+        )
+        assert rc == 0
+        assert "run r1" in capsys.readouterr().out
+
+    def test_validate_covers_prom_snapshot(self, tmp_path, capsys):
+        from repro.launch.cli import obs_main
+
+        root = str(tmp_path)
+        d = self._make_run(root, "r1")
+        assert obs_main(["r1", "--results-root", root, "--validate"]) == 0
+        assert "openmetrics" in capsys.readouterr().out
+        with open(os.path.join(d, "metrics.prom"), "w") as f:
+            f.write("garbage{ 1\n")  # no EOF, unparseable
+        assert obs_main(["r1", "--results-root", root, "--validate"]) == 1
+        assert "INVALID" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# schema gate
+# ---------------------------------------------------------------------------
+class TestSchemaGate:
+    def test_validate_dir_rejects_bad_prom(self, tmp_path):
+        tel = Telemetry("metrics", run_id="x", clock=FakeClock())
+        tel.flush(str(tmp_path))
+        (tmp_path / "metrics.prom").write_text("repro_x_total 1\n")
+        with pytest.raises(TelemetryError, match="OpenMetrics lint"):
+            validate_dir(str(tmp_path))

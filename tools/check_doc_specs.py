@@ -27,7 +27,7 @@ import re
 import sys
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
-DEFAULT_DOCS = ("README.md", "docs/runspec.md")
+DEFAULT_DOCS = ("README.md", "docs/runspec.md", "docs/observability.md")
 
 _FENCE_RE = re.compile(
     r"^```json[ \t]*\n(.*?)^```[ \t]*$", re.MULTILINE | re.DOTALL
