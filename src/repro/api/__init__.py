@@ -28,6 +28,7 @@ from repro.api.spec import (
     BenchSpec,
     DryrunSpec,
     EvalSpec,
+    FTSpec,
     NetworkSpec,
     ObsSpec,
     RunSpec,
@@ -46,6 +47,7 @@ __all__ = [
     "DryrunSpec",
     "EvalArtifact",
     "EvalSpec",
+    "FTSpec",
     "NetworkSpec",
     "ObsSpec",
     "RunSpec",

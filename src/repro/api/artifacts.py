@@ -83,6 +83,9 @@ class SolveArtifact(Artifact):
     network: Dict[str, Any] = dataclasses.field(default_factory=dict)
     #: the reported ranking: pair, entity, top-k candidate ids + scores
     ranking: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: durability roll-up (empty when the spec declared no ft block):
+    #: checkpoints written, resume cursor, checkpoint root
+    ft: Dict[str, Any] = dataclasses.field(default_factory=dict)
     #: in-memory payloads (not serialized into the JSON summary)
     F: Optional[np.ndarray] = None
     outputs: Optional[object] = None  # repro.core.ranking.LPOutputs
@@ -101,6 +104,8 @@ class SolveArtifact(Artifact):
                 "ranking": self.ranking,
             }
         )
+        if self.ft:
+            out["ft"] = self.ft
         return out
 
     def write(self, run_dir: str) -> List[str]:
@@ -157,6 +162,9 @@ class ServeArtifact(Artifact):
     sample: Dict[str, Any] = dataclasses.field(default_factory=dict)
     #: the SLO watchdog roll-up (empty when the spec declared no slo block)
     slo: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: durability roll-up (empty when the spec declared no ft block):
+    #: guarded-batch retries/restores, checkpoint cadence, watermark
+    ft: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def summary(self) -> Dict[str, Any]:
         out = super().summary()
@@ -170,6 +178,8 @@ class ServeArtifact(Artifact):
         )
         if self.slo:
             out["slo"] = self.slo
+        if self.ft:
+            out["ft"] = self.ft
         return out
 
 

@@ -239,6 +239,71 @@ class Session:
             return tuple(self.bundle.eval_pair)
         return (0, self.network.num_types - 1)
 
+    # ----------------------------------------------------- fault tolerance
+    def ft_ckpt_dir(self, namespace: str) -> str:
+        """Checkpoint root for one stage (``solve`` / ``serve``).
+
+        Defaults under the run directory, so re-running the same spec with
+        the same ``run_id`` (``repro run --resume``) finds the durable
+        steps without any extra plumbing; ``ft.ckpt_dir`` overrides for
+        shared/scratch filesystems.
+        """
+        ft = self.spec.ft
+        root = (
+            ft.ckpt_dir
+            if ft is not None and ft.ckpt_dir
+            else os.path.join(self.run_dir, "checkpoints")
+        )
+        return os.path.join(root, namespace)
+
+    def _checkpointed_solve(self):
+        """The durable solve path (``spec.ft`` set): superstep barriers
+        through a CheckpointManager, resume from the latest durable step."""
+        from repro.checkpoint import CheckpointManager
+        from repro.ft import FailureInjector, StragglerWatch
+        from repro.ft.solve import checkpointed_solve, supports_checkpointed
+
+        ft = self.spec.ft
+        if not supports_checkpointed(self.engine):
+            raise SpecError(
+                f"ft: backend {self.backend!r} has no engine.round "
+                "contract — the checkpointed superstep loop needs it"
+            )
+        tel = self.telemetry
+        straggler = StragglerWatch(
+            alpha=ft.straggler_alpha,
+            threshold=ft.straggler_threshold,
+            telemetry=tel,
+        )
+        injector = (
+            FailureInjector(fail_at=ft.inject_solve_fault)
+            if ft.inject_solve_fault
+            else None
+        )
+        manager = CheckpointManager(
+            self.ft_ckpt_dir("solve"),
+            keep_last=ft.keep_last,
+            async_write=ft.async_write,
+        )
+        try:
+            res, stats = checkpointed_solve(
+                self.engine,
+                self.norm,
+                manager=manager,
+                interval=ft.interval,
+                telemetry=tel,
+                injector=injector,
+                straggler=straggler,
+            )
+        finally:
+            # an injected (or real) mid-solve crash must still drain the
+            # writer queue — the durable step is what --resume restarts from
+            manager.close()
+        stats["straggler_flags"] = straggler.slow_steps
+        if injector is not None:
+            stats["injected_faults"] = list(injector.fired)
+        return res, stats
+
     # -------------------------------------------------------------- stages
     def solve(self) -> SolveArtifact:
         from repro.core.ranking import extract_outputs
@@ -246,7 +311,10 @@ class Session:
         solve = self.spec.resolved_solve()
         tel = self.telemetry
         t0 = time.perf_counter()
-        if tel.enabled:
+        ft_stats: Dict[str, Any] = {}
+        if self.spec.ft is not None:
+            res, ft_stats = self._checkpointed_solve()
+        elif tel.enabled:
             from repro.obs.solve import observed_solve, supports_observed
 
             if supports_observed(self.engine):
@@ -285,6 +353,7 @@ class Session:
                 "candidates": [int(c) for c in top],
                 "scores": [float(s) for s in scores],
             },
+            ft=ft_stats,
             F=res.F,
             outputs=outputs,
         )
@@ -367,6 +436,34 @@ class Session:
             norm=self.norm,
             telemetry=self.telemetry,
         )
+        ft = self.spec.ft
+        if ft is not None:
+            from repro.checkpoint import CheckpointManager
+            from repro.ft import FailureInjector, StepGuard, StragglerWatch
+
+            engine.enable_ft(
+                guard=StepGuard(
+                    max_retries=ft.max_retries,
+                    backoff_s=ft.backoff_s,
+                    telemetry=self.telemetry,
+                ),
+                straggler=StragglerWatch(
+                    alpha=ft.straggler_alpha,
+                    threshold=ft.straggler_threshold,
+                    telemetry=self.telemetry,
+                ),
+                injector=(
+                    FailureInjector(fail_at=ft.inject_serve_fault)
+                    if ft.inject_serve_fault
+                    else None
+                ),
+                manager=CheckpointManager(
+                    self.ft_ckpt_dir("serve"),
+                    keep_last=ft.keep_last,
+                    async_write=ft.async_write,
+                ),
+                interval=ft.interval,
+            )
         obs = self.spec.obs
         if obs is not None and obs.slo is not None:
             from repro.obs import ServeDegradation, SLOWatchdog
@@ -388,64 +485,69 @@ class Session:
         sv = self.spec.serve if self.spec.serve is not None else ServeSpec()
         engine = self.serve_engine(sv)
         t0 = time.perf_counter()
-        if sv.trace is not None:
-            import repro.scenarios as sc
+        try:
+            if sv.trace is not None:
+                import repro.scenarios as sc
 
-            if self.bundle is None:
-                raise SpecError(
-                    "serve.trace replay needs a scenario/drugnet network "
-                    "(file networks carry no trace schema)"
-                )
-            trace = sc.build_trace(
-                self.bundle,
-                sv.trace,
-                rate_qps=sv.rate_qps,
-                horizon_s=sv.horizon_s,
-                seed=self.spec.network.seed,
-            )
-            if len(trace) == 0:
-                raise SpecError(
-                    f"serve.trace: the {sv.trace} trace came out empty "
-                    f"(rate_qps={sv.rate_qps}, horizon_s={sv.horizon_s}); "
-                    "raise one of them"
-                )
-            report = replay_trace(
-                engine,
-                trace,
-                self.bundle.deltas if sv.apply_deltas else (),
-                top_k=sv.top_k,
-                time_scale=sv.time_scale,
-                priority=sv.priority,
-                telemetry=self.telemetry,
-            )
-            mode = "trace"
-        else:
-            pair = self._rank_pair(None)
-            src = sv.source_type if sv.source_type is not None else pair[0]
-            dst = sv.target_type if sv.target_type is not None else pair[1]
-            for knob, t in (("source_type", src), ("target_type", dst)):
-                if t >= self.network.num_types:
+                if self.bundle is None:
                     raise SpecError(
-                        f"serve.{knob}={t} out of range: the network has "
-                        f"{self.network.num_types} node types"
+                        "serve.trace replay needs a scenario/drugnet network "
+                        "(file networks carry no trace schema)"
                     )
-            if src == dst:
-                raise SpecError(
-                    f"serve.source_type == serve.target_type == {src}; "
-                    "the zipf workload ranks a cross-type interaction"
+                trace = sc.build_trace(
+                    self.bundle,
+                    sv.trace,
+                    rate_qps=sv.rate_qps,
+                    horizon_s=sv.horizon_s,
+                    seed=self.spec.network.seed,
                 )
-            report = play_zipf(
-                engine,
-                source_type=src,
-                target_type=dst,
-                requests=sv.requests,
-                zipf=sv.zipf,
-                deltas=sv.deltas,
-                top_k=sv.top_k,
-                seed=self.spec.network.seed,
-                telemetry=self.telemetry,
-            )
-            mode = "zipf"
+                if len(trace) == 0:
+                    raise SpecError(
+                        f"serve.trace: the {sv.trace} trace came out empty "
+                        f"(rate_qps={sv.rate_qps}, horizon_s={sv.horizon_s}); "
+                        "raise one of them"
+                    )
+                report = replay_trace(
+                    engine,
+                    trace,
+                    self.bundle.deltas if sv.apply_deltas else (),
+                    top_k=sv.top_k,
+                    time_scale=sv.time_scale,
+                    priority=sv.priority,
+                    telemetry=self.telemetry,
+                )
+                mode = "trace"
+            else:
+                pair = self._rank_pair(None)
+                src = sv.source_type if sv.source_type is not None else pair[0]
+                dst = sv.target_type if sv.target_type is not None else pair[1]
+                for knob, t in (("source_type", src), ("target_type", dst)):
+                    if t >= self.network.num_types:
+                        raise SpecError(
+                            f"serve.{knob}={t} out of range: the network has "
+                            f"{self.network.num_types} node types"
+                        )
+                if src == dst:
+                    raise SpecError(
+                        f"serve.source_type == serve.target_type == {src}; "
+                        "the zipf workload ranks a cross-type interaction"
+                    )
+                report = play_zipf(
+                    engine,
+                    source_type=src,
+                    target_type=dst,
+                    requests=sv.requests,
+                    zipf=sv.zipf,
+                    deltas=sv.deltas,
+                    top_k=sv.top_k,
+                    seed=self.spec.network.seed,
+                    telemetry=self.telemetry,
+                )
+                mode = "zipf"
+        finally:
+            # final cache snapshot + writer-thread shutdown (no-op with
+            # ft disabled); stats stay readable for the artifact below
+            engine.close_ft()
         seconds = time.perf_counter() - t0
         sample = report.pop("sample", {})
         report.pop("latencies", None)  # raw samples stay in memory only
@@ -457,6 +559,7 @@ class Session:
             report=report,
             sample=sample,
             slo=self._watchdog.report() if self._watchdog is not None else {},
+            ft=engine.ft_stats(),
         )
 
     # --------------------------------------------------------------- bench

@@ -535,6 +535,79 @@ class ObsSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class FTSpec:
+    """Fault-tolerance & durability knobs for the run (DESIGN.md §16).
+
+    Writing the section turns durability on: the solve stage checkpoints
+    label state + its outer-iteration cursor every ``interval``
+    supersteps through :class:`repro.checkpoint.CheckpointManager` (so a
+    killed run resumes via ``repro run --resume <run_id>`` with
+    byte-identical final rankings), and the serve tier wraps solver-batch
+    execution in :class:`repro.ft.StepGuard` — transient faults retry
+    with backoff, exhaustion restores from the last cache snapshot and
+    replays the in-flight batch.
+
+    ``ckpt_dir=None`` defaults to ``checkpoints/`` inside the run's
+    artifact directory.  ``interval`` counts supersteps for the solve and
+    solver batches for the serve tier.  The ``inject_*`` knobs arm the
+    deterministic :class:`repro.ft.FailureInjector` for recovery drills:
+    ``inject_solve_fault`` kills the solve at those supersteps (a fresh
+    run only — a resumed run never re-fires, a real crash is not
+    deterministic either), ``inject_serve_fault`` raises a transient
+    fault in the solver thread at those batch indices.
+    """
+
+    ckpt_dir: Optional[str] = None
+    interval: int = 5
+    keep_last: int = 3
+    async_write: bool = False
+    max_retries: int = 3
+    backoff_s: float = 0.05
+    straggler_alpha: float = 0.1
+    straggler_threshold: float = 2.0
+    inject_solve_fault: Tuple[int, ...] = ()
+    inject_serve_fault: Tuple[int, ...] = ()
+
+    def __post_init__(self) -> None:
+        if self.ckpt_dir is not None and (
+            not isinstance(self.ckpt_dir, str) or not self.ckpt_dir
+        ):
+            raise SpecError(f"ft.ckpt_dir must be a path, got {self.ckpt_dir!r}")
+        if not isinstance(self.interval, int) or isinstance(self.interval, bool):
+            raise SpecError(f"ft.interval must be an int, got {self.interval!r}")
+        _positive(self.interval, "ft.interval")
+        _positive(self.keep_last, "ft.keep_last")
+        if self.max_retries < 0:
+            raise SpecError(f"ft.max_retries must be >= 0, got {self.max_retries}")
+        _positive(self.backoff_s, "ft.backoff_s", strict=False)
+        if not 0.0 < self.straggler_alpha <= 1.0:
+            raise SpecError(
+                f"ft.straggler_alpha must be in (0, 1], got {self.straggler_alpha}"
+            )
+        if self.straggler_threshold <= 1.0:
+            raise SpecError(
+                "ft.straggler_threshold must be > 1 (a straggler is slower "
+                f"than the mean), got {self.straggler_threshold}"
+            )
+        for knob in ("inject_solve_fault", "inject_serve_fault"):
+            value = getattr(self, knob)
+            if not isinstance(value, (list, tuple)) or not all(
+                isinstance(s, int) and not isinstance(s, bool) and s >= 0
+                for s in value
+            ):
+                raise SpecError(
+                    f"ft.{knob} must be step indices, got {value!r}"
+                )
+            object.__setattr__(self, knob, tuple(value))
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str = "ft") -> "FTSpec":
+        d = _require_mapping(d, path)
+        _check_keys(cls, d, path)
+        return cls(**dict(d))
+
+
+@dataclasses.dataclass(frozen=True)
 class TrainSpec:
     """A model-training run (lm / gnn / recsys arch families).
 
@@ -639,6 +712,7 @@ class RunSpec:
     serve: Optional[ServeSpec] = None
     bench: Optional[BenchSpec] = None
     obs: Optional[ObsSpec] = None
+    ft: Optional[FTSpec] = None
     train: Optional[TrainSpec] = None
     dryrun: Optional[DryrunSpec] = None
     run_id: Optional[str] = None  # None = deterministic content-derived id
@@ -693,6 +767,29 @@ class RunSpec:
                 "eval sections need planted ground truth; "
                 "network.kind='file' carries none"
             )
+        if self.ft is not None:
+            stages = set(self.sections())
+            if not ({"solve", "serve"} & stages):
+                raise SpecError(
+                    "ft: nothing to protect — the section governs the "
+                    "solve and serve stages"
+                )
+            if "solve" in stages:
+                if solve.alg != "dhlp2" or solve.mode != "batched":
+                    raise SpecError(
+                        "ft superstep checkpointing rides the host-driven "
+                        "batched DHLP-2 round contract; set "
+                        "solve.alg='dhlp2' and solve.mode='batched'"
+                    )
+                seed_mode = solve.seed_mode or (
+                    "fixed" if self.serve is not None else "drift"
+                )
+                if seed_mode != "fixed":
+                    raise SpecError(
+                        "ft requires solve.seed_mode='fixed' — a resumed "
+                        "run replays from a checkpointed label panel, "
+                        "which drifting seeds would invalidate"
+                    )
 
     # ----------------------------------------------------------- round-trip
     @classmethod
@@ -729,6 +826,7 @@ class RunSpec:
                 else None
             ),
             obs=(ObsSpec.from_dict(d["obs"]) if d.get("obs") is not None else None),
+            ft=(FTSpec.from_dict(d["ft"]) if d.get("ft") is not None else None),
             train=(
                 TrainSpec.from_dict(d["train"])
                 if d.get("train") is not None

@@ -37,6 +37,7 @@ import numpy as np
 PyTree = Any
 
 _MANIFEST = "manifest.json"
+_STOP = object()  # writer-thread shutdown sentinel (see close())
 
 
 def _leaf_paths(tree: PyTree) -> List[str]:
@@ -55,6 +56,7 @@ class CheckpointManager:
         self._q: "queue.Queue" = queue.Queue()
         self._writer: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        self._closed = False
         if self.async_write:
             self._writer = threading.Thread(
                 target=self._writer_loop, daemon=True
@@ -66,6 +68,8 @@ class CheckpointManager:
              metadata: Optional[Dict[str, Any]] = None) -> None:
         """Snapshot → (async) write.  Host copies happen on the caller's
         thread so the device buffers can be donated right after."""
+        if self._closed:
+            raise RuntimeError("CheckpointManager is closed")
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         host = [np.asarray(x) for x in leaves]
         job = (step, host, str(treedef), metadata or {})
@@ -81,6 +85,29 @@ class CheckpointManager:
             self._q.join()
             self._raise_pending()
 
+    def close(self) -> None:
+        """Drain pending writes and join the writer thread.
+
+        Without this the daemon writer dies with the interpreter and a
+        queued snapshot may never hit disk.  Idempotent; ``save`` after
+        close raises.  A write error queued before close is re-raised
+        here, like ``wait``.
+        """
+        if self._closed:
+            return
+        self._closed = True
+        if self._writer is not None:
+            self._q.put(_STOP)
+            self._writer.join()
+            self._writer = None
+        self._raise_pending()
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     def _raise_pending(self) -> None:
         if self._error is not None:
             err, self._error = self._error, None
@@ -89,6 +116,9 @@ class CheckpointManager:
     def _writer_loop(self) -> None:
         while True:
             job = self._q.get()
+            if job is _STOP:
+                self._q.task_done()
+                return
             try:
                 self._write(job)
             except BaseException as e:  # noqa: BLE001 — surfaced on wait()
@@ -138,25 +168,41 @@ class CheckpointManager:
                         continue
         return sorted(out)
 
+    def manifest(self, step: int) -> Dict[str, Any]:
+        """The parsed manifest of a step (leaves, treedef, metadata)."""
+        with open(os.path.join(self._step_dir(step), _MANIFEST)) as f:
+            return json.load(f)
+
     def restore(
         self,
         step: int,
         like: PyTree,
         shardings: Optional[PyTree] = None,
+        *,
+        cast: bool = False,
     ) -> PyTree:
-        """Restore into the structure of ``like`` (shape/dtype validated).
+        """Restore into the structure of ``like`` (treedef, shape and
+        dtype all validated against the manifest).
 
         ``shardings`` (same structure) places each leaf on a target mesh —
         this is the elastic-reshard path: save on 512 chips, restore on 256.
+        A dtype mismatch is an error — a checkpoint is a bit-exact record,
+        not a conversion source; pass ``cast=True`` to opt into an
+        explicit ``astype`` (e.g. restoring bf16 storage into f32).
         """
         d = self._step_dir(step)
-        with open(os.path.join(d, _MANIFEST)) as f:
-            manifest = json.load(f)
+        manifest = self.manifest(step)
         leaves_like, treedef = jax.tree_util.tree_flatten(like)
         if len(manifest["leaves"]) != len(leaves_like):
             raise ValueError(
                 f"checkpoint has {len(manifest['leaves'])} leaves, "
                 f"target structure has {len(leaves_like)}"
+            )
+        saved_treedef = manifest.get("treedef")
+        if saved_treedef is not None and saved_treedef != str(treedef):
+            raise ValueError(
+                f"checkpoint treedef {saved_treedef} does not match "
+                f"target structure {treedef}"
             )
         sh_leaves = (
             jax.tree_util.tree_flatten(shardings)[0]
@@ -169,21 +215,60 @@ class CheckpointManager:
                 raise ValueError(
                     f"{rec['file']}: shape {arr.shape} != {ref.shape}"
                 )
-            arr = arr.astype(ref.dtype)
+            ref_dtype = np.dtype(getattr(ref, "dtype", None) or type(ref))
+            if arr.dtype != ref_dtype:
+                if not cast:
+                    raise ValueError(
+                        f"{rec['file']}: dtype {arr.dtype} != {ref_dtype} "
+                        "(pass cast=True to convert explicitly)"
+                    )
+                arr = arr.astype(ref_dtype)
             out.append(
                 jax.device_put(arr, sh) if sh is not None else arr
             )
         return jax.tree_util.tree_unflatten(treedef, out)
 
     def restore_latest(
-        self, like: PyTree, shardings: Optional[PyTree] = None
+        self,
+        like: PyTree,
+        shardings: Optional[PyTree] = None,
+        *,
+        cast: bool = False,
     ) -> Tuple[Optional[int], Optional[PyTree]]:
         for step in reversed(self.steps()):
             try:
-                return step, self.restore(step, like, shardings)
+                return step, self.restore(step, like, shardings, cast=cast)
             except Exception:  # noqa: BLE001 — corrupt ckpt: try older
                 continue
         return None, None
+
+    def restore_flat(
+        self, step: int
+    ) -> Tuple[List[np.ndarray], Dict[str, Any]]:
+        """Restore a step as a flat leaf list + its user metadata.
+
+        No ``like`` template: shapes/dtypes come from the manifest.  This
+        is the path for snapshots whose geometry the reader cannot know up
+        front (e.g. the serve tier's variable-size cache snapshot).
+        """
+        d = self._step_dir(step)
+        manifest = self.manifest(step)
+        leaves = [
+            np.load(os.path.join(d, rec["file"]))
+            for rec in manifest["leaves"]
+        ]
+        return leaves, manifest.get("metadata", {})
+
+    def restore_latest_flat(
+        self,
+    ) -> Tuple[Optional[int], Optional[List[np.ndarray]], Dict[str, Any]]:
+        for step in reversed(self.steps()):
+            try:
+                leaves, meta = self.restore_flat(step)
+                return step, leaves, meta
+            except Exception:  # noqa: BLE001 — corrupt ckpt: try older
+                continue
+        return None, None, {}
 
     # ------------------------------------------------------------------- gc
     def _gc(self) -> None:

@@ -1,3 +1,4 @@
+from repro.ft.elastic import remesh
 from repro.ft.runtime import (
     ElasticController,
     FailureInjector,
@@ -13,5 +14,18 @@ __all__ = [
     "StepGuard",
     "StragglerWatch",
     "TransientWorkerError",
+    "checkpointed_solve",
     "is_retryable",
+    "remesh",
+    "supports_checkpointed",
 ]
+
+
+def __getattr__(name):
+    # checkpointed_solve pulls in numpy/engine machinery; keep the base
+    # package import-light for the spec layer
+    if name in ("checkpointed_solve", "supports_checkpointed"):
+        from repro.ft import solve as _solve
+
+        return getattr(_solve, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -48,23 +48,36 @@ def is_retryable(err: BaseException) -> bool:
 @dataclasses.dataclass
 class StragglerWatch:
     """EWMA step timer; flags outliers (the paper's fig. 4 problem: one
-    slow worker gates every BSP superstep)."""
+    slow worker gates every BSP superstep).
+
+    With ``telemetry`` set, every flagged step bumps the
+    ``ft.straggler_flags`` counter and each observation refreshes the
+    ``ft.step_time_mean`` gauge, so the SLO watchdog can alert on
+    straggler rate without polling this object.
+    """
 
     alpha: float = 0.1
     threshold: float = 2.0
     _mean: Optional[float] = None
     slow_steps: int = 0
+    telemetry: Optional[Any] = None
 
     def observe(self, step_time: float) -> bool:
         if self._mean is None:
             self._mean = step_time
+            if self.telemetry is not None:
+                self.telemetry.gauge("ft.step_time_mean", self._mean)
             return False
         is_slow = step_time > self.threshold * self._mean
         if is_slow:
             self.slow_steps += 1
+            if self.telemetry is not None:
+                self.telemetry.count("ft.straggler_flags")
         # slow steps perturb the mean less (they are the anomaly)
         a = self.alpha * (0.25 if is_slow else 1.0)
         self._mean = (1 - a) * self._mean + a * step_time
+        if self.telemetry is not None:
+            self.telemetry.gauge("ft.step_time_mean", self._mean)
         return is_slow
 
     @property
@@ -87,30 +100,55 @@ class FailureInjector:
 
 @dataclasses.dataclass
 class StepGuard:
-    """Retry/restore wrapper around one training step."""
+    """Retry/restore wrapper around one step of work.
+
+    Transient failures retry with exponential backoff; once the retry
+    budget is spent, ``restore_fn`` (if any) rolls state back to the last
+    checkpoint and the replay re-enters the *same* guarded loop with a
+    fresh budget — a transient fault during the replay is retried, not
+    propagated.  One restore per ``run`` call: exhausting the budget a
+    second time re-raises the last error.
+
+    ``sleep`` is the backoff clock — injectable so tests (and simulated
+    time) never wall-sleep.  With ``telemetry`` set, retries and restores
+    bump the ``ft.retries`` / ``ft.restores`` counters.
+    """
 
     max_retries: int = 3
     backoff_s: float = 0.05
     restore_fn: Optional[Callable[[], Tuple[int, PyTree]]] = None
     retries: int = 0
     restores: int = 0
+    sleep: Callable[[float], None] = time.sleep
+    telemetry: Optional[Any] = None
 
     def run(self, step_fn: Callable[[], PyTree]) -> PyTree:
         last: Optional[BaseException] = None
-        for attempt in range(self.max_retries + 1):
+        attempt = 0
+        restored = False
+        while True:
             try:
                 return step_fn()
             except BaseException as e:  # noqa: BLE001
                 if not is_retryable(e):
                     raise
                 last = e
-                self.retries += 1
-                time.sleep(self.backoff_s * (2 ** attempt))
-        if self.restore_fn is not None:
-            self.restores += 1
-            self.restore_fn()
-            return step_fn()
-        raise last  # type: ignore[misc]
+                if attempt < self.max_retries:
+                    self.retries += 1
+                    if self.telemetry is not None:
+                        self.telemetry.count("ft.retries")
+                    self.sleep(self.backoff_s * (2 ** attempt))
+                    attempt += 1
+                    continue
+                if self.restore_fn is not None and not restored:
+                    restored = True
+                    self.restores += 1
+                    if self.telemetry is not None:
+                        self.telemetry.count("ft.restores")
+                    self.restore_fn()
+                    attempt = 0  # the replay gets a fresh retry budget
+                    continue
+                raise last
 
 
 @dataclasses.dataclass

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import warnings
 from typing import Any, Dict, List, Optional
@@ -79,6 +80,14 @@ def _run_parser() -> argparse.ArgumentParser:
         help="artifact root (default: results/)",
     )
     ap.add_argument("--run-id", default=None)
+    ap.add_argument(
+        "--resume",
+        default=None,
+        metavar="RUN_ID",
+        help="restart a checkpointed run: reload "
+        "<results-root>/<RUN_ID>/spec.json and continue from the latest "
+        "durable step (the spec needs an ft section)",
+    )
     ap.add_argument(
         "--no-write",
         action="store_true",
@@ -214,7 +223,9 @@ def _run_parser() -> argparse.ArgumentParser:
     return ap
 
 
-_SPEC_FILE_OK = {"spec", "only", "results_root", "run_id", "no_write", "dry_run"}
+_SPEC_FILE_OK = {
+    "spec", "only", "results_root", "run_id", "no_write", "dry_run", "resume",
+}
 
 
 def _build_spec_dict(args) -> Dict:
@@ -353,13 +364,20 @@ def _describe(art) -> List[str]:
     k = art.kind
     if k == "solve":
         r = art.ranking
-        return [
+        out = [
             f"[solve] {art.alg} on {art.backend}: converged={art.converged} "
             f"outer={art.outer_iters} inner={art.inner_iters} "
             f"supersteps={art.supersteps} in {art.seconds:.2f}s",
             f"[solve] top-{r['top_k']} of type {r['pair'][1]} for entity "
             f"{r['entity']}: {r['candidates']}",
         ]
+        if getattr(art, "ft", None):
+            ft = art.ft
+            line = f"[solve] ft: checkpoints={ft.get('checkpoints', 0)}"
+            if ft.get("resumed_from") is not None:
+                line += f" resumed_from={ft['resumed_from']}"
+            out.append(line)
+        return out
     if k == "eval":
         metrics = " ".join(
             f"{key}={val:.4f}" for key, val in sorted(art.metrics.items())
@@ -380,7 +398,15 @@ def _describe(art) -> List[str]:
         if "achieved_vs_offered" in r:
             line += f"  achieved/offered={r['achieved_vs_offered']:.2f}"
         src = ", ".join(f"{s}:{n}" for s, n in sorted(r["sources"].items()))
-        return [line, f"[serve] sources: {src}"]
+        out = [line, f"[serve] sources: {src}"]
+        if getattr(art, "ft", None):
+            ft = art.ft
+            out.append(
+                f"[serve] ft: checkpoints={ft.get('checkpoints', 0)} "
+                f"retries={ft.get('retries', 0)} "
+                f"restores={ft.get('restores', 0)}"
+            )
+        return out
     if k == "bench":
         return [
             f"[bench] label={art.label} suites={len(art.suites)} "
@@ -411,9 +437,9 @@ def run_main(argv: Optional[List[str]] = None) -> int:
     from repro.api import RunSpec, Session, SpecError
 
     try:
-        if args.spec is not None:
-            # a spec file is authoritative: builder flags would silently
-            # fork it, so they are rejected
+        if args.spec is not None or args.resume is not None:
+            # a spec file (or a stored one, via --resume) is authoritative:
+            # builder flags would silently fork it, so they are rejected
             builder_set = [
                 f"--{k.replace('_', '-')}"
                 for k, v in vars(args).items()
@@ -428,6 +454,26 @@ def run_main(argv: Optional[List[str]] = None) -> int:
                     f"spec file given; builder flags {builder_set} conflict "
                     "(edit the spec instead)"
                 )
+        if args.resume is not None:
+            if args.spec is not None:
+                ap.error("--resume reloads the stored spec; drop the spec file")
+            if args.run_id:
+                ap.error("--resume fixes the run id; drop --run-id")
+            stored = os.path.join(args.results_root, args.resume, "spec.json")
+            if not os.path.isfile(stored):
+                raise SpecError(
+                    f"--resume {args.resume}: no stored spec at {stored}"
+                )
+            spec = RunSpec.from_file(stored)
+            if spec.ft is None:
+                raise SpecError(
+                    f"--resume {args.resume}: the stored spec has no ft "
+                    "section — nothing was checkpointed"
+                )
+            # the run id pins both the artifact dir and the default
+            # checkpoint root the resumed solve restores from
+            spec = RunSpec.from_dict({**spec.to_dict(), "run_id": args.resume})
+        elif args.spec is not None:
             spec = RunSpec.from_file(args.spec)
             if args.run_id:
                 spec = RunSpec.from_dict({**spec.to_dict(), "run_id": args.run_id})

@@ -154,6 +154,19 @@ def summarize(meta: Dict, events: List[Dict], metrics: List[Dict]) -> Dict[str, 
             "burning": bool(burning and burning[-1]),
         }
 
+    ft_keys = {
+        "checkpoints": "ft.checkpoints",
+        "resumes": "ft.resumes",
+        "retries": "ft.retries",
+        "restores": "ft.restores",
+        "straggler_flags": "ft.straggler_flags",
+        "remeshes": "ft.remeshes",
+    }
+    if any(counters.get(name) for name in ft_keys.values()):
+        out["ft"] = {
+            short: counters.get(name, 0) for short, name in ft_keys.items()
+        }
+
     depth = _series(by_name.get("serve.queue_depth"))
     if depth:
         out["queue"] = {
@@ -220,6 +233,15 @@ def render(summary: Dict[str, Any]) -> str:
         lines.append(
             f"slo: breaches={slo['breaches']} recoveries={slo['recoveries']} "
             f"state={state}"
+        )
+
+    ft = summary.get("ft")
+    if ft:
+        lines.append(
+            f"ft: checkpoints={ft['checkpoints']} resumes={ft['resumes']} "
+            f"retries={ft['retries']} restores={ft['restores']} "
+            f"straggler_flags={ft['straggler_flags']}"
+            + (f" remeshes={ft['remeshes']}" if ft.get("remeshes") else "")
         )
 
     queue = summary.get("queue")

@@ -276,3 +276,45 @@ def streaming(
         seed=seed,
     )
     return bundle
+
+
+@register_scenario(
+    "streaming_chaos",
+    description="streaming under fault drills: denser delta churn plus a "
+    "suggested kill plan for the ft injectors",
+    tags=("streaming", "serve", "chaos"),
+)
+def streaming_chaos(
+    scale: float = 1.0,
+    seed: int = 0,
+    *,
+    n_deltas: int = 12,
+    rate_qps: float = 60.0,
+    horizon_s: float = 3.0,
+    **kw,
+) -> ScenarioBundle:
+    """The chaos-drill workload (DESIGN.md §16.4).
+
+    Same planted net + held-out delta stream as ``streaming``, but with
+    more delta batches (every version bump churns the serve cache a
+    guarded replay must survive) and a ``fault_plan`` in ``meta`` — the
+    kill points the chaos specs feed into ``ft.inject_solve_fault`` /
+    ``ft.inject_serve_fault``.  Injection stays spec-driven: the scenario
+    only documents where a kill exercises the most recovery machinery
+    (mid-solve after the first checkpoint; a serve batch after the first
+    cache snapshot).
+    """
+    bundle = streaming(
+        scale,
+        seed,
+        n_deltas=n_deltas,
+        rate_qps=rate_qps,
+        horizon_s=horizon_s,
+        **kw,
+    )
+    bundle.name = "streaming_chaos"
+    bundle.meta = {
+        **bundle.meta,
+        "fault_plan": {"solve_step": 3, "serve_attempt": 2},
+    }
+    return bundle

@@ -140,6 +140,7 @@ class MicroBatcher:
         assemble: Optional[Callable[[Sequence[QuerySpec]], Any]] = None,
         execute: Optional[Callable[[Any], List[QueryResult]]] = None,
         telemetry=None,
+        guard=None,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -156,6 +157,12 @@ class MicroBatcher:
         self._assemble = assemble
         self._execute = execute
         self._tel = telemetry
+        # optional repro.ft.StepGuard: solver-side batch execution runs
+        # inside it, so a transient engine fault retries (and, with a
+        # restore_fn wired, restores + replays the in-flight batch)
+        # instead of failing every co-batched future.  Public so the
+        # serve engine's FT wiring can attach one after construction.
+        self.guard = guard
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self.queue_depth = queue_depth
@@ -407,6 +414,12 @@ class MicroBatcher:
             self._tel.count("serve.batches")
             self._tel.count("serve.failed", len(live))
 
+    def _run_guarded(self, fn, arg):
+        """Route one batch execution through the step guard, if any."""
+        if self.guard is None:
+            return fn(arg)
+        return self.guard.run(lambda: fn(arg))
+
     def run_once(self, wait: bool = True) -> int:
         """One synchronous scheduler tick: coalesce → solve → resolve.
 
@@ -427,7 +440,7 @@ class MicroBatcher:
             span = tel.trace_span("batch", f"batch:{self.stats.batches}")
         with span:
             try:
-                results = self._solve_batch(specs)
+                results = self._run_guarded(self._solve_batch, specs)
                 if len(results) != len(specs):
                     raise RuntimeError(
                         f"solve_batch returned {len(results)} results for "
@@ -519,7 +532,7 @@ class MicroBatcher:
                 span = tel.trace_span("batch", f"batch:{self.stats.batches}")
             with span:
                 try:
-                    results = self._execute(item.prepared)
+                    results = self._run_guarded(self._execute, item.prepared)
                     if len(results) != len(item.live):
                         raise RuntimeError(
                             f"execute returned {len(results)} results for "

@@ -13,6 +13,7 @@ import pytest
 from repro.api.spec import (
     BenchSpec,
     EvalSpec,
+    FTSpec,
     NetworkSpec,
     RunSpec,
     ServeSpec,
@@ -300,3 +301,96 @@ def test_serve_early_exit_conflicts():
         solve=SolveSpec(alg="dhlp2", momentum=0.3),
         serve=ServeSpec(early_exit=False),
     )
+
+
+# ------------------------------------------------------------------------- ft
+def _ft_spec_dict(**ft):
+    return {
+        "network": {"kind": "scenario", "name": "streaming", "scale": 0.5},
+        "solve": {"alg": "dhlp2", "seed_mode": "fixed"},
+        "ft": {"interval": 2, **ft},
+    }
+
+
+def test_ft_round_trip():
+    spec = RunSpec.from_dict(
+        _ft_spec_dict(async_write=True, inject_solve_fault=[3, 7])
+    )
+    back = RunSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.ft.interval == 2
+    assert back.ft.async_write is True
+    assert back.ft.inject_solve_fault == (3, 7)  # lists coerce to tuples
+
+
+def test_ft_unknown_key_rejected():
+    with pytest.raises(SpecError, match="ft"):
+        RunSpec.from_dict(_ft_spec_dict(checkpoint_every=5))
+
+
+def test_ft_range_validation():
+    for bad in (
+        {"interval": 0},
+        {"interval": True},  # bools are not step counts
+        {"interval": 2.5},
+        {"keep_last": 0},
+        {"max_retries": -1},
+        {"backoff_s": -0.1},
+        {"straggler_alpha": 0.0},
+        {"straggler_alpha": 1.5},
+        {"straggler_threshold": 1.0},
+        {"inject_solve_fault": [-1]},
+        {"inject_serve_fault": [True]},
+        {"ckpt_dir": ""},
+    ):
+        with pytest.raises(SpecError):
+            FTSpec(**bad)
+
+
+def test_ft_needs_a_protected_stage():
+    # ft over a spec with neither solve nor serve protects nothing
+    with pytest.raises(SpecError, match="nothing to protect"):
+        RunSpec(
+            network=NetworkSpec(kind="scenario", name="streaming"),
+            eval=EvalSpec(protocol="recovery"),
+            ft=FTSpec(),
+        )
+
+
+def test_ft_pins_the_checkpointable_solve_shape():
+    net = NetworkSpec(kind="scenario", name="streaming")
+    with pytest.raises(SpecError, match="ft"):
+        RunSpec(
+            network=net,
+            solve=SolveSpec(alg="dhlp1", seed_mode="fixed"),
+            ft=FTSpec(),
+        )
+    with pytest.raises(SpecError, match="ft"):
+        RunSpec(
+            network=net,
+            solve=SolveSpec(alg="dhlp2", mode="sequential"),
+            ft=FTSpec(),
+        )
+    # drift seeds make the resumed fixed point start-state-dependent
+    with pytest.raises(SpecError, match="fixed"):
+        RunSpec(
+            network=net,
+            solve=SolveSpec(alg="dhlp2", seed_mode="drift"),
+            ft=FTSpec(),
+        )
+    # unset seed_mode resolves to fixed when serve is present — valid
+    RunSpec(
+        network=net,
+        solve=SolveSpec(alg="dhlp2"),
+        serve=ServeSpec(),
+        ft=FTSpec(),
+    )
+
+
+def test_ft_serve_only_is_valid():
+    spec = RunSpec(
+        network=NetworkSpec(kind="scenario", name="streaming"),
+        serve=ServeSpec(trace="diurnal"),
+        ft=FTSpec(max_retries=0),
+    )
+    assert RunSpec.from_dict(spec.to_dict()) == spec
